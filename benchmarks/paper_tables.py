@@ -1,0 +1,230 @@
+"""One benchmark per paper table/figure (SparseInfer, Shin et al. 2024).
+
+Table I   — predictor / MLP operation counts (exact, from configs)
+§V-A2     — predictor memory usage (exact)
+Fig. 3    — per-layer precision/recall incl. the early-layer degradation
+Fig. 4    — end-to-end decode latency: dense vs SparseInfer (CPU wall time
+            at the paper's real 7B/13B dims + TPU byte-model projection)
+Tables II/III — accuracy vs alpha (logit KL + greedy-token agreement proxy;
+            GSM8K/BBH need trained ProSparse checkpoints — DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import predictor as P
+from repro.core import selection as S
+from repro.core.sparse_mlp import (SparseInferConfig, dense_mlp, gather_mlp,
+                                   init_gated_mlp, masked_mlp,
+                                   prepare_sparse_params)
+from repro.kernels.sparse_mlp_fused import kernel_hbm_bytes
+from repro.launch.mesh import HBM_BW
+
+
+# ------------------------------------------------------------- Table I ----
+
+def table1_opcounts() -> list[str]:
+    rows = []
+    for name, d, k, layers in [("prosparse-llama2-13b", 5120, 13824, 40),
+                               ("prosparse-llama2-7b", 4096, 11008, 32)]:
+        pred_ops = P.predictor_op_count(d, k)
+        mlp_ops = P.mlp_macs(d, k)
+        dejavu_ops = d * 1024 + 1024 * k
+        sparse_mlp_ops = int(mlp_ops * 0.08)   # paper assumes ~92% skip
+        mem_mb = P.predictor_sign_bytes(d, k) * layers / 2**20
+        dejavu_mb = (d * 1024 + 1024 * k) * 2 * layers / 2**20
+        rows += [
+            f"table1.{name}.sparseinfer_pred_ops,{pred_ops},paper=2.211e6"
+            if "13b" in name else
+            f"table1.{name}.sparseinfer_pred_ops,{pred_ops},",
+            f"table1.{name}.dense_mlp_macs,{mlp_ops},paper=2.123e8"
+            if "13b" in name else f"table1.{name}.dense_mlp_macs,{mlp_ops},",
+            f"table1.{name}.powerinfer_pred_ops,{dejavu_ops},paper=1.940e7"
+            if "13b" in name else
+            f"table1.{name}.powerinfer_pred_ops,{dejavu_ops},",
+            f"table1.{name}.sparse_mlp_macs,{sparse_mlp_ops},paper=1.699e7"
+            if "13b" in name else
+            f"table1.{name}.sparse_mlp_macs,{sparse_mlp_ops},",
+            f"mem.{name}.sparseinfer_MB,{mem_mb:.1f},paper=337.5"
+            if "13b" in name else f"mem.{name}.sparseinfer_MB,{mem_mb:.1f},",
+            f"mem.{name}.powerinfer_MB,{dejavu_mb:.1f},paper=1480"
+            if "13b" in name else f"mem.{name}.powerinfer_MB,{dejavu_mb:.1f},",
+        ]
+    return rows
+
+
+# -------------------------------------------------------------- Fig. 3 ----
+
+def _layer_xw(layer: int, n_layers: int, d: int, k: int, key):
+    """Synthetic per-layer (W, x) matching the paper's observations: all
+    layers ~Gaussian W; early layers have x concentrated near zero
+    (leptokurtic) which degrades the sign-vote (paper §IV-A, Fig. 2)."""
+    kw, kx = jax.random.split(key)
+    w = (jax.random.normal(kw, (k, d)) - 0.25) / np.sqrt(d)
+    x = jax.random.normal(kx, (d,)) + 0.25
+    early = layer < n_layers * 0.25
+    if early:
+        # heavy mass near zero: scale a random 80% of coords down
+        mask = jax.random.uniform(kx, (d,)) < 0.8
+        x = jnp.where(mask, x * 0.05, x)
+    return w, x
+
+
+def fig3_precision_recall(n_layers: int = 8, d: int = 2048,
+                          k: int = 4096) -> list[str]:
+    rows = []
+    for layer in range(n_layers):
+        w, x = _layer_xw(layer, n_layers, d, k, jax.random.PRNGKey(layer))
+        pre = np.asarray(w @ x)
+        actual = pre <= 0
+        pw, px = P.pack_signs(w), P.pack_signs(x)
+        for alpha in (1.0, 1.03):
+            skip = np.asarray(P.predict_sparse(pw, px, d, alpha))
+            prec = (skip & actual).sum() / max(skip.sum(), 1)
+            rec = (skip & actual).sum() / max(actual.sum(), 1)
+            rows.append(
+                f"fig3.layer{layer}.alpha{alpha},precision={prec:.4f},"
+                f"recall={rec:.4f}")
+    return rows
+
+
+# -------------------------------------------------------------- Fig. 4 ----
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def fig4_latency(d: int = 5120, k: int = 13824, iters: int = 5) -> list[str]:
+    """Per-token decode-MLP latency at the 13B dims (CPU wall-clock proxy)
+    plus the TPU v5e byte-model projection."""
+    key = jax.random.PRNGKey(0)
+    params = init_gated_mlp(key, d, k, dtype=jnp.float32)
+    # bias weights so the ReLU-fied regime (~90% sparsity) holds
+    params["wg_t"] = params["wg_t"] - 0.13 / np.sqrt(d)
+    params = prepare_sparse_params(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, d)) + 0.13
+
+    rows = []
+    cfg_d = SparseInferConfig(enabled=False, activation="relu")
+    f_dense = jax.jit(lambda p, x: dense_mlp(p, x, cfg_d))
+    t_dense = _time(f_dense, params, x, iters=iters)
+    rows.append(f"fig4.dense_mlp,{t_dense*1e6:.0f}us,")
+
+    dens = float(jnp.mean(
+        jax.nn.relu(x @ params["wg_t"].T) > 0))
+    for alpha in (1.0, 1.03):
+        cfg_s = SparseInferConfig(enabled=True, activation="relu",
+                                  capacity_frac=min(0.9, max(dens * 2, .05)),
+                                  group_size=1)
+        f_sp = jax.jit(lambda p, xx: gather_mlp(p, xx, cfg_s, alpha=alpha))
+        t_sp = _time(f_sp, params, x, iters=iters)
+        rows.append(f"fig4.sparseinfer_alpha{alpha},{t_sp*1e6:.0f}us,"
+                    f"speedup_vs_dense={t_dense/t_sp:.2f}x_density"
+                    f"={dens:.2f}")
+
+    # TPU byte model (decode is bandwidth-bound): paper reports 1.79x e2e
+    cap_groups = max(1, int(k / 8 * dens * 1.3))
+    bm = kernel_hbm_bytes(1, d, k, cap_groups, 8)
+    t_tpu_dense = bm["dense_bytes"] / HBM_BW
+    t_tpu_sparse = bm["total_sparse_bytes"] / HBM_BW
+    rows.append(
+        f"fig4.tpu_byte_model,density={dens:.3f},"
+        f"mlp_speedup={bm['reduction']:.2f}x_paper_e2e=1.79x_at62pct_mlp")
+    rows.append(
+        f"fig4.tpu_e2e_model,"
+        f"{1.0/(0.38 + 0.62*t_tpu_sparse/t_tpu_dense):.2f}x,"
+        "amdahl_38pct_attention")
+    return rows
+
+
+# ------------------------------------------------------ Tables II/III -----
+
+def table23_accuracy(iters: int = 1) -> list[str]:
+    """Accuracy-vs-alpha trend proxy: dense-vs-sparse logit KL and greedy
+    agreement on a ReLU-fied reduced LM (monotone improvement with alpha
+    reproduces the paper's trend; absolute GSM8K needs real checkpoints)."""
+    from repro.configs.registry import reduced_config
+    from repro.models import lm
+    from repro.models.common import head_logits
+
+    cfg = reduced_config("prosparse-llama2-13b").replace(
+        dtype="float32", param_dtype="float32", d_model=512, d_ff=1024,
+        n_heads=4, n_kv_heads=4, head_dim=128)
+    # alpha acts through the skip THRESHOLD (the margin ranking is
+    # alpha-invariant), so capacity must not bind for the alpha trend;
+    # per-row selection (G=1) matches the paper's setting.  NOTE on the
+    # alpha range: the threshold shift is (alpha-1)*N_pos counts — the
+    # paper's 1.00-1.03 works at d=5120; at this proxy's d=512 we sweep a
+    # proportionally wider range to flip the same fraction of neurons.
+    cfg = cfg.replace(sparse=dataclasses.replace(
+        cfg.sparse, capacity_frac=1.0, group_size=1))
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    params_s = lm.prepare_sparse(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+
+    hid, _ = lm.forward(params, cfg, toks)
+    ref = head_logits(hid[:, -1], lm._head_table(params), 0.0)
+    ref_lp = jax.nn.log_softmax(ref)
+
+    rows = []
+    for alpha in (1.0, 1.03, 1.1, 1.2):
+        sp = dataclasses.replace(cfg.sparse, alpha_base=alpha,
+                                 alpha_early=alpha)
+        cfg_a = cfg.replace(sparse=sp)
+        _, caches = lm.prefill(params_s, cfg_a, toks[:, :-1], max_len=24)
+        logits, _ = lm.decode_step(params_s, cfg_a, toks[:, -1:], caches,
+                                   jnp.int32(15))
+        lp = jax.nn.log_softmax(logits)
+        kl = float(jnp.mean(jnp.sum(jnp.exp(ref_lp) * (ref_lp - lp), -1)))
+        agree = float(jnp.mean(jnp.argmax(logits, -1) == jnp.argmax(ref, -1)))
+        rows.append(f"table23.alpha{alpha},kl={kl:.5f},"
+                    f"greedy_agreement={agree:.2f}")
+    return rows
+
+
+# --------------------------------------- group granularity (DESIGN.md §2) --
+
+def group_permutation_study(k: int = 4096, n_samples: int = 256) -> list[str]:
+    """TPU row-group granularity: with i.i.d. activations, G=8 groups keep
+    ~1-(1-dens)^8 of rows; with CORRELATED activations plus the offline
+    co-activation permutation, group survival approaches per-row density —
+    quantifies the DESIGN.md §2 claim."""
+    rng = np.random.default_rng(0)
+    dens = 0.10
+    rows = []
+
+    def group_density(acts_bool, g=8):
+        grp = acts_bool.reshape(acts_bool.shape[0], -1, g).any(-1)
+        return float(grp.mean())
+
+    # iid: every token activates a fresh random 10%
+    iid = rng.random((n_samples, k)) < dens
+    rows.append(f"groups.iid.row_density,{dens:.3f},")
+    rows.append(f"groups.iid.group8_density,{group_density(iid):.3f},"
+                "theory=" + f"{1 - (1 - dens) ** 8:.3f}")
+
+    # correlated: a hot set (8% of neurons, on 90% of the time) + cold tail
+    hot = rng.permutation(k)[: int(0.08 * k)]
+    acts = rng.random((n_samples, k)) < 0.01
+    acts[:, hot] |= rng.random((n_samples, len(hot))) < 0.9
+    rows.append(f"groups.corr.row_density,{acts.mean():.3f},")
+    rows.append(f"groups.corr.group8_density,{group_density(acts):.3f},"
+                "hot_neurons_scattered")
+
+    from repro.core.selection import coactivation_permutation
+    perm = coactivation_permutation(acts[: n_samples // 2])  # calibration
+    permuted = acts[n_samples // 2:][:, perm]                # eval split
+    rows.append(
+        f"groups.corr_permuted.group8_density,{group_density(permuted):.3f},"
+        f"reduction={group_density(acts) / group_density(permuted):.2f}x")
+    return rows

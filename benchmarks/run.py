@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,value,derived`` CSV rows. See benchmarks/paper_tables.py for
+the per-table implementations and DESIGN.md §6 for the experiment index.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer iterations / layers")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as T
+
+    sections = [
+        ("Table I (op counts) + §V-A2 (memory)", T.table1_opcounts, {}),
+        ("Fig. 3 (per-layer precision/recall)", T.fig3_precision_recall,
+         {"n_layers": 4 if args.quick else 8,
+          "d": 1024 if args.quick else 2048,
+          "k": 2048 if args.quick else 4096}),
+        ("Fig. 4 (decode MLP latency @13B dims)", T.fig4_latency,
+         {"iters": 2 if args.quick else 5}),
+        ("Tables II/III (accuracy vs alpha)", T.table23_accuracy, {}),
+        ("Group granularity + co-activation permutation (DESIGN.md 2)",
+         T.group_permutation_study, {}),
+    ]
+    failures = 0
+    for title, fn, kw in sections:
+        print(f"# {title}")
+        try:
+            for row in fn(**kw):
+                print(row)
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"ERROR,{title},{type(e).__name__}: {e}")
+        print()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

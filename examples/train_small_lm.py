@@ -1,0 +1,46 @@
+"""Train a small LM end-to-end with checkpoint/resume (deliverable b).
+
+    PYTHONPATH=src python examples/train_small_lm.py --steps 200
+
+Uses the full training substrate: AdamW + cosine schedule, deterministic
+data pipeline, async checkpoints, straggler watchdog. With --steps 300 the
+planted copy-structure in the synthetic data is learnable (loss drops).
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="small-lm", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab=512, max_seq=128,
+        dtype="float32", param_dtype="float32", attn_chunk=64,
+        loss_chunk=256, remat=False)
+    t = Trainer(lm, cfg,
+                TrainerConfig(steps=args.steps, ckpt_every=50,
+                              ckpt_dir=args.ckpt),
+                AdamWConfig(lr_peak=1e-3, warmup_steps=20,
+                            decay_steps=args.steps),
+                DataConfig(vocab=512, seq_len=64, global_batch=8))
+    t.init_state()
+    if t.maybe_resume():
+        print(f"resumed from step {t.global_step}")
+    hist = t.run()
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {len(hist)} steps")
+    t.save(blocking=True)
+    print(f"checkpoint at step {t.global_step} in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Unified model configuration for all assigned architectures.
+
+One dataclass covers the LM family (dense / MoE / hybrid-SSM / xLSTM), the
+cross-attn VLM and the enc-dec audio model; per-arch files under
+``repro/configs/`` instantiate it with the exact published hyperparameters
+and a ``reduced()`` smoke variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.sparse_mlp import SparseInferConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | xlstm | vlm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+
+    # attention flavor
+    qkv_bias: bool = False                 # qwen1.5
+    qk_norm: bool = False                  # qwen3
+    attn_softcap: float = 0.0              # gemma2
+    final_softcap: float = 0.0             # gemma2
+    window: int = 0                        # sliding-window size (local layers)
+    local_global_period: int = 0           # gemma2: alternate local/global
+    rope_theta: float = 10000.0
+    embed_scale: bool = False              # gemma: sqrt(d) embed multiplier
+    tie_embeddings: bool = True
+    activation: str = "silu"
+    gated_mlp: bool = True
+    norm: str = "rmsnorm"                  # layernorm for seamless
+    post_block_norm: bool = False          # gemma2 pre+post norms
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0            # deepseek: layer 0 dense
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    attn_every: int = 0                    # zamba2: shared attn period
+    shared_lora_rank: int = 0              # zamba2 per-invocation LoRA
+    slstm_every: int = 0                   # xlstm: sLSTM block period
+
+    # VLM
+    cross_every: int = 0                   # cross-attn layer period
+    n_image_tokens: int = 0
+
+    # enc-dec (audio)
+    n_enc_layers: int = 0
+    n_frames: int = 0                      # stub frontend frame embeddings
+
+    # SparseInfer (the paper's technique — first-class config)
+    sparse: SparseInferConfig = dataclasses.field(
+        default_factory=SparseInferConfig)
+
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    kv_cache_dtype: str = "bfloat16"   # "int8": quantized KV (scales factored)
+
+    # execution
+    max_seq: int = 4096
+    remat: bool = True
+    microbatches: int = 1        # grad-accumulation splits of the batch
+    loss_chunk: int = 2048
+    attn_chunk: int = 1024
+    sp_activations: bool = True            # Megatron-SP residual sharding
+    pure_fsdp_train: bool = False          # ZeRO-3-only training (no TP)
+    seq_shard_kv: bool = False             # long-context decode mode
+    weight_gather_serve: bool = False      # ZeRO-3 serving (>HBM archs)
+
+    # ------------------------------------------------------------ derived
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def is_decoder_only(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid", "xlstm")
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode (SSM/hybrid state) — runs long_500k."""
+        return self.family in ("hybrid", "xlstm")
+
+    @property
+    def d_expert(self) -> int:
+        return self.d_ff  # for MoE configs d_ff is the per-expert width
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, v = self.d_model, self.vocab
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.family == "moe":
+            ffn = 3 * d * self.d_ff * self.n_experts
+            ffn += 3 * d * self.d_ff * self.n_shared_experts + d * self.n_experts
+        elif self.family == "xlstm":
+            di = 2 * d
+            ffn = d * 2 * di + 3 * di * di + di * d
+            attn = 0
+        elif self.family == "hybrid":
+            di = 2 * d
+            ffn = d * (2 * di + 2 * self.ssm_state + di // self.ssm_head_dim) + di * d
+            ffn += (attn + 3 * d * self.d_ff) / max(1, self.attn_every)
+            attn = 0
+        else:
+            n_mats = 3 if self.gated_mlp else 2
+            ffn = n_mats * d * self.d_ff
+        layers = self.n_layers + self.n_enc_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return int(layers * (attn + ffn) + emb)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = 3 * d * self.d_ff * (self.top_k + self.n_shared_experts)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return int(self.n_layers * (attn + ffn) + emb)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, with the skip reason if not."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention KV decode at 500k is quadratic-cost "
+                       "prefill / O(L) per-token reads; assignment restricts "
+                       "long_500k to SSM/hybrid archs")
+    return True, ""

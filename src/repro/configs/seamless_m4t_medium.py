@@ -1,0 +1,19 @@
+"""seamless-m4t-medium [audio]: enc-dec transformer backbone
+(arXiv:2308.11596). Audio frontend is a stub: inputs are precomputed frame
+embeddings. Plain (non-gated) ReLU FFN + LayerNorm — SparseInfer applies
+directly to the decoder FFNs (paper §III covers Falcon/OPT-style MLPs)."""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register, default_sparse
+
+
+@register("seamless-m4t-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium", family="encdec",
+        n_layers=12, n_enc_layers=12, d_model=1024, n_heads=16,
+        n_kv_heads=16, head_dim=64, d_ff=4096, vocab=256206,
+        n_frames=1024, norm="layernorm", activation="relu", gated_mlp=False,
+        tie_embeddings=True,
+        sparse=default_sparse(),
+        loss_chunk=512,
+    )

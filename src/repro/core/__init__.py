@@ -1,0 +1,36 @@
+"""SparseInfer core: training-free activation-sparsity prediction (the paper's
+primary contribution) as a composable JAX module."""
+from repro.core.predictor import (
+    AlphaSchedule,
+    margins,
+    mlp_macs,
+    neg_counts,
+    pack_signs,
+    packed_width,
+    predict_sparse,
+    predictor_op_count,
+    predictor_sign_bytes,
+    unpack_signs,
+)
+from repro.core.relufication import get_activation, is_sparsifiable, relufy
+from repro.core.selection import (
+    Selection,
+    actual_sparsity_mask,
+    apply_neuron_permutation,
+    capacity_select,
+    coactivation_permutation,
+    expected_capacity,
+    group_margins,
+    mask_from_selection,
+    union_margin,
+)
+from repro.core.sparse_mlp import (
+    SparseInferConfig,
+    apply,
+    dense_mlp,
+    gather_mlp,
+    init_gated_mlp,
+    masked_mlp,
+    pallas_mlp,
+    prepare_sparse_params,
+)

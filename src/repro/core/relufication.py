@@ -1,0 +1,50 @@
+"""ReLUfication of activation functions (paper §II; Mirzadeh et al., ProSparse).
+
+SparseInfer targets *ReLU-fied* LLMs: models whose SiLU/GELU gate activations
+were swapped for ReLU (plus optional FATReLU positive thresholds) and
+fine-tuned.  Here we provide the activation registry and the config-level
+swap.  Fine-tuning is out of scope (the paper takes ProSparse checkpoints as
+given); random-init models with ReLU gates reproduce the *mechanism* — see
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def fatrelu(x: jax.Array, threshold: float = 0.0) -> jax.Array:
+    """FATReLU (Kurtz et al.): zero below a positive threshold, identity above."""
+    return jnp.where(x > threshold, x, jnp.zeros_like(x))
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "gelu_exact": partial(jax.nn.gelu, approximate=False),
+}
+
+
+def get_activation(name: str, fatrelu_threshold: float = 0.0):
+    if name == "fatrelu":
+        return partial(fatrelu, threshold=fatrelu_threshold)
+    if name not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {name!r}")
+    return ACTIVATIONS[name]
+
+
+#: Activations whose post-activation zeros SparseInfer can predict by sign.
+SPARSIFIABLE = ("relu", "fatrelu")
+
+
+def is_sparsifiable(name: str) -> bool:
+    return name in SPARSIFIABLE
+
+
+def relufy(activation: str) -> str:
+    """SiLU/GELU -> ReLU swap (ReLUfication). Identity for already-sparse acts."""
+    return activation if activation in SPARSIFIABLE else "relu"

@@ -1,0 +1,127 @@
+"""Capacity-bounded neuron selection and mask algebra for SparseInfer-on-TPU.
+
+TPU/XLA require static shapes, so the paper's dynamic per-row skip becomes a
+*margin-ranked, capacity-bounded* selection (DESIGN.md §2): neurons are ranked
+by predictor margin (most-active first) and the top ``C`` survive.  With
+``C >= realized density`` the selected set equals the paper's predicted set.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Selection(NamedTuple):
+    """Static-shape selection of surviving neurons (or neuron groups)."""
+
+    indices: jax.Array  # (C,) int32 — gather indices, padded past `count`
+    valid: jax.Array    # (C,) bool  — True for real survivors
+    count: jax.Array    # () int32   — number of real survivors (<= C)
+
+
+def capacity_select(margin: jax.Array, capacity: int) -> Selection:
+    """Select the top-``capacity`` most-active neurons by predictor margin.
+
+    margin: (k,) float — ``N_neg - alpha*N_pos``; neuron is predicted active
+    when margin <= 0.  Survivors are the smallest margins; if more than
+    ``capacity`` neurons are predicted active, the least-confident ones are
+    dropped (graceful, SLA-bounded degradation — DESIGN.md §2).
+    """
+    k = margin.shape[-1]
+    capacity = min(capacity, k)
+    neg = -margin  # top_k selects largest; we want smallest margin
+    _, idx = jax.lax.top_k(neg, capacity)
+    sel_margin = jnp.take(margin, idx, axis=-1)
+    valid = sel_margin <= 0
+    count = jnp.sum(valid, dtype=jnp.int32)
+    # Compact valid indices to the front so gathers touch a contiguous prefix
+    # of real rows (keeps the Pallas grid's useful work dense).
+    order = jnp.argsort(~valid, stable=True)
+    idx = jnp.take(idx, order)
+    valid = jnp.take(valid, order)
+    # Padding entries re-point at index 0; their contribution is masked.
+    idx = jnp.where(valid, idx, 0)
+    return Selection(idx.astype(jnp.int32), valid, count)
+
+
+def group_margins(margin: jax.Array, group_size: int) -> jax.Array:
+    """Aggregate per-neuron margins to row-group granularity ``G``.
+
+    A group survives if *any* member survives, so the group margin is the min
+    over members.  (k,) -> (k // G,). ``k`` must divide by G.
+    """
+    k = margin.shape[-1]
+    assert k % group_size == 0, f"k={k} not divisible by group={group_size}"
+    return margin.reshape(margin.shape[:-1] + (k // group_size, group_size)).min(-1)
+
+
+def union_margin(margin: jax.Array) -> jax.Array:
+    """Union the survive sets across a token batch: (B, k) -> (k,).
+
+    A neuron survives the union when any token keeps it => min margin.
+    """
+    if margin.ndim == 1:
+        return margin
+    return margin.min(axis=tuple(range(margin.ndim - 1)))
+
+
+def mask_from_selection(sel: Selection, k: int) -> jax.Array:
+    """Boolean keep-mask (k,) equivalent to a Selection (for testing/masked path)."""
+    mask = jnp.zeros((k,), jnp.bool_)
+    updates = sel.valid
+    return mask.at[sel.indices].max(updates)
+
+
+def actual_sparsity_mask(h1: jax.Array, threshold: float = 0.0) -> jax.Array:
+    """Paper §IV 'actual sparsity': exact zeros found after the gate proj.
+
+    h1: post-activation gate values (already ReLU'd / FATReLU'd).
+    Returns keep-mask with the same shape: True where the neuron is live.
+    """
+    return h1 > threshold
+
+
+def expected_capacity(k: int, sparsity: float, slack: float = 1.3,
+                      multiple: int = 128) -> int:
+    """Default capacity: expected density with slack, rounded to a tile multiple."""
+    dense = max(1, int(round(k * (1.0 - sparsity) * slack)))
+    cap = int(np.ceil(dense / multiple) * multiple)
+    return min(cap, k)
+
+
+def coactivation_permutation(acts: np.ndarray) -> np.ndarray:
+    """Offline neuron permutation clustering co-activated neurons (DESIGN.md §2).
+
+    acts: (n_samples, k) activation indicator (bool / {0,1}) from calibration.
+    Orders neurons by activation frequency, tie-broken by the leading
+    principal direction of the co-activation pattern, so hot neurons share
+    row-groups and cold groups can be skipped wholesale.
+    Returns perm: (k,) int — new_row[i] = old_row[perm[i]].
+    """
+    acts = np.asarray(acts, np.float32)
+    freq = acts.mean(axis=0)
+    centered = acts - acts.mean(axis=0, keepdims=True)
+    # one power-iteration of the gram matrix for a cheap leading direction
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(acts.shape[0]).astype(np.float32)
+    for _ in range(8):
+        u = centered.T @ v            # (k,)
+        nrm = np.linalg.norm(u) + 1e-9
+        v = centered @ (u / nrm)
+        v /= np.linalg.norm(v) + 1e-9
+    proj = centered.T @ v
+    proj = proj / (np.abs(proj).max() + 1e-9)
+    key = freq + 1e-3 * proj
+    return np.argsort(-key).astype(np.int32)
+
+
+def apply_neuron_permutation(params: dict, perm: np.ndarray) -> dict:
+    """Permute the hidden (k) axis of neuron-major gated-MLP params."""
+    out = dict(params)
+    for name in ("wg_t", "wu_t", "wd_t"):
+        if name in out and out[name] is not None:
+            out[name] = jnp.take(out[name], jnp.asarray(perm), axis=0)
+    return out

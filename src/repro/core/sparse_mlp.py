@@ -1,0 +1,270 @@
+"""The SparseInfer gated MLP — the paper's technique as a composable module.
+
+Four execution strategies (DESIGN.md §3):
+
+``dense``   llama.cpp-equivalent baseline; also the training path.
+``masked``  predict + zero-mask. No byte savings; bitwise-identical semantics
+            to the paper's skip (used for accuracy studies on any backend).
+``gather``  predict -> margin top-C capacity selection -> row-group gather ->
+            compact GEMMs -> masked accumulate. XLA path whose HLO bytes
+            scale with C: this is what the production dry-run lowers.
+``pallas``  fused TPU kernel (scalar-prefetch gather, one HBM pass); validated
+            in interpret mode on CPU. Same math as ``gather``.
+
+Weights are neuron-major (DESIGN.md): ``wg_t, wu_t, wd_t ∈ R^{k×d}``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import predictor as P
+from repro.core import selection as S
+from repro.core.relufication import get_activation, is_sparsifiable
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseInferConfig:
+    """First-class framework config for the paper's technique."""
+
+    enabled: bool = False
+    strategy: str = "gather"          # dense | masked | gather | pallas
+    activation: str = "relu"          # must be sparsifiable when enabled
+    alpha_base: float = 1.0           # paper eq. (2)
+    alpha_early: float = 1.03         # paper §V-B: early-layer conservatism
+    alpha_early_frac: float = 0.5
+    capacity_frac: float = 0.20       # C = frac*k (margin top-C), DESIGN.md §2
+    group_size: int = 8               # TPU row-group granularity G
+    use_actual_sparsity: bool = True  # paper's +AS
+    sparse_max_batch: int = 16        # union-mask regime bound (per device)
+    fatrelu_threshold: float = 0.0
+    local_selection: bool = True      # per-TP-shard top-C (no cross-shard
+                                      # gather; EXPERIMENTS.md §Perf iter 2)
+
+    def alpha_schedule(self) -> P.AlphaSchedule:
+        return P.AlphaSchedule(self.alpha_base, self.alpha_early,
+                               self.alpha_early_frac)
+
+    def capacity(self, k: int) -> int:
+        g = self.group_size
+        n_groups = k // g
+        cap = max(1, int(round(n_groups * self.capacity_frac)))
+        # keep gather shapes MXU/VREG friendly
+        mult = max(1, 128 // g)
+        cap = int(-(-cap // mult) * mult)
+        return min(cap, n_groups)
+
+
+def init_gated_mlp(key: jax.Array, d: int, k: int, dtype=jnp.bfloat16,
+                   gated: bool = True) -> dict:
+    """Neuron-major gated-MLP params. ``gated=False`` -> plain 2-matrix FFN."""
+    kg, ku, kd = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = k ** -0.5
+    params = {
+        "wg_t": (jax.random.normal(kg, (k, d)) * scale_in).astype(dtype),
+        "wd_t": (jax.random.normal(kd, (k, d)) * scale_out).astype(dtype),
+    }
+    if gated:
+        params["wu_t"] = (jax.random.normal(ku, (k, d)) * scale_in).astype(dtype)
+    return params
+
+
+def prepare_sparse_params(params: dict) -> dict:
+    """Offline step ① (paper Fig. 1): pack gate-weight sign bits at load time."""
+    out = dict(params)
+    out["sign_wg"] = P.pack_signs(params["wg_t"])
+    return out
+
+
+def _act(cfg: SparseInferConfig):
+    if cfg.activation == "fatrelu" or cfg.fatrelu_threshold > 0.0:
+        return get_activation("fatrelu", cfg.fatrelu_threshold)
+    return get_activation(cfg.activation)
+
+
+def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig) -> jax.Array:
+    """Baseline gated MLP: (σ(x·Wg) ⊙ (x·Wu)) · Wd^T  (paper eq. 1)."""
+    act = _act(cfg)
+    h1 = act(x @ params["wg_t"].T.astype(x.dtype))
+    if "wu_t" in params:
+        h1 = h1 * (x @ params["wu_t"].T.astype(x.dtype))
+    return h1 @ params["wd_t"].astype(x.dtype)
+
+
+def _margins(params: dict, x: jax.Array, alpha) -> jax.Array:
+    d = x.shape[-1]
+    sign_wg = params.get("sign_wg")
+    if sign_wg is None:
+        sign_wg = P.pack_signs(params["wg_t"])
+    packed_x = P.pack_signs(x)
+    return P.margins(sign_wg, packed_x, d, alpha)
+
+
+def masked_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
+               alpha: float | jax.Array = 1.0,
+               return_stats: bool = False):
+    """Predict-and-mask path: exact paper semantics, any backend."""
+    act = _act(cfg)
+    m = _margins(params, x, alpha)          # (..., k)
+    keep = (m <= 0).astype(x.dtype)
+    h1 = act(x @ params["wg_t"].T.astype(x.dtype)) * keep
+    if "wu_t" in params:
+        h1 = h1 * (x @ params["wu_t"].T.astype(x.dtype))
+    y = h1 @ params["wd_t"].astype(x.dtype)
+    if return_stats:
+        stats = {"density": jnp.mean(keep), "margins": m}
+        return y, stats
+    return y
+
+
+def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
+               alpha: float | jax.Array = 1.0,
+               return_stats: bool = False):
+    """Capacity-gather path (the TPU-shaped algorithm, in XLA ops).
+
+    x: (d,) | (B, d) with B <= sparse_max_batch (one union mask), or
+    (G, B, d) grouped: per-group union + per-group selection/gather — this
+    is the production decode layout (one group per data shard, so each
+    device gathers only the rows ITS tokens need; weights are replicated
+    across data so the batched gather partitions on the index operand).
+    """
+    act = _act(cfg)
+    squeeze = x.ndim == 1
+    xb = x[None] if squeeze else x
+    grouped_in = xb.ndim == 3
+    xg = xb if grouped_in else xb[None]           # (G, B, d)
+    ngrp, b, d = xg.shape
+    k = params["wg_t"].shape[0]
+    g = cfg.group_size
+    cap = cfg.capacity(k)
+
+    # per-TP-shard "local selection" (beyond-paper; EXPERIMENTS.md §Perf):
+    # each model-shard runs top-(C/ms) over ITS k/ms neurons, so weight-row
+    # gathers never cross shards (the global-selection variant makes GSPMD
+    # psum the gathered rows). ms=1 degenerates to global selection.
+    from repro.sharding import rules as R
+    mesh = R.current_mesh()
+    ms = 1
+    if cfg.local_selection and mesh is not None and R.tp_axis(mesh):
+        msz = R.axis_size(mesh, "model")
+        if (k // g) % msz == 0 and cap % msz == 0:
+            ms = msz
+
+    m = _margins(params, xg, alpha)               # (G, B, k)
+    m = jax.vmap(S.union_margin)(m)               # (G, k)
+    gm = jax.vmap(lambda mm: S.group_margins(mm, g))(m)   # (G, k/g)
+    gm = gm.reshape(ngrp, ms, (k // g) // ms)     # (G, ms, k/g/ms)
+    gm = R.shard(gm, None, "model", None)
+    sel = jax.vmap(jax.vmap(lambda mm: S.capacity_select(mm, cap // ms)))(gm)
+    cl = cap // ms                                # local capacity per shard
+    if ms > 1:
+        sel = S.Selection(R.shard(sel.indices, None, "model", None),
+                          R.shard(sel.valid, None, "model", None),
+                          sel.count)
+
+    def take_rows_one(w_grouped, idx):
+        dnums = jax.lax.GatherDimensionNumbers(
+            offset_dims=(1, 2), collapsed_slice_dims=(0,),
+            start_index_map=(0,))
+        return jax.lax.gather(
+            w_grouped, idx[:, None], dnums,
+            slice_sizes=(1, g, d),
+            mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+
+    def take_rows(w_t):
+        w_grouped = w_t.reshape(ms, (k // g) // ms, g, d)
+        w_grouped = R.shard(w_grouped, "model", None, None, None)
+        # vmap over shards (operand+indices aligned) then over groups
+        out = jax.vmap(jax.vmap(take_rows_one, in_axes=(0, 0)),
+                       in_axes=(None, 0))(w_grouped, sel.indices)
+        # constrain BEFORE merging (Cl, g): the gather output must stay
+        # ms-sharded or the reshape constraint forces an all-gather
+        out = R.shard(out, None, "model", None, None, None)
+        out = out.reshape(ngrp, ms, cl * g, d)    # (G, ms, Cl*g, d)
+        return R.shard(out, None, "model", None, None)
+
+    wg = take_rows(params["wg_t"]).astype(xg.dtype)
+    wd = take_rows(params["wd_t"]).astype(xg.dtype)
+    vmask = jnp.repeat(sel.valid, g, axis=-1).astype(xg.dtype)  # (G,ms,Cl*g)
+
+    h1 = act(jnp.einsum("gbd,gmnd->gbmn", xg, wg)) * vmask[:, None]
+    if "wu_t" in params:
+        wu = take_rows(params["wu_t"]).astype(xg.dtype)
+        h1 = h1 * jnp.einsum("gbd,gmnd->gbmn", xg, wu)
+    if cfg.use_actual_sparsity:
+        # paper's +AS: rows whose gate is exactly zero contribute nothing to
+        # the down-proj; zeroing here lets XLA skip their FLOPs in fused form.
+        h1 = jnp.where(h1 != 0, h1, jnp.zeros_like(h1))
+    # contraction over (ms, n): shard-partial sums -> the TP all-reduce a
+    # dense down-proj would have paid anyway
+    y = jnp.einsum("gbmn,gmnd->gbd", h1, wd)      # (G, B, d)
+    if not grouped_in:
+        y = y[0]
+    if squeeze:
+        y = y[0]
+    if return_stats:
+        n_sel = sel.count.astype(jnp.float32).sum() / ngrp  # mean per group
+        stats = {
+            "capacity": cap * g,
+            "selected": (n_sel * g).astype(jnp.int32),
+            "density": n_sel * g / k,
+        }
+        return y, stats
+    return y
+
+
+def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
+               alpha: float | jax.Array = 1.0,
+               interpret: bool | None = None):
+    """Fused Pallas kernel path (TPU target; interpret=True on CPU)."""
+    from repro.kernels import ops as kops  # local import: kernels optional
+    squeeze = x.ndim == 1
+    xb = x[None] if squeeze else x
+    d = xb.shape[-1]
+    k = params["wg_t"].shape[0]
+    g = cfg.group_size
+    cap = cfg.capacity(k)
+
+    sign_wg = params.get("sign_wg")
+    if sign_wg is None:
+        sign_wg = P.pack_signs(params["wg_t"])
+    packed_x = kops.sign_pack(xb, interpret=interpret)
+    m = P.margins(sign_wg, packed_x, d, alpha)
+    m = S.union_margin(m)
+    gm = S.group_margins(m, g)
+    sel = S.capacity_select(gm, cap)
+
+    y = kops.fused_sparse_mlp(
+        xb, params["wg_t"], params.get("wu_t"), params["wd_t"],
+        sel.indices, sel.count, group_size=g,
+        activation=cfg.activation, fatrelu_threshold=cfg.fatrelu_threshold,
+        interpret=interpret,
+    )
+    return y[0] if squeeze else y
+
+
+def apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
+          alpha: jax.Array | float | None = None,
+          layer_idx: int = 0, num_layers: int = 1,
+          strategy: Optional[str] = None, **kw) -> Any:
+    """Dispatch the SparseInfer MLP by strategy with the per-layer alpha."""
+    strategy = strategy or (cfg.strategy if cfg.enabled else "dense")
+    if strategy != "dense" and not is_sparsifiable(cfg.activation):
+        raise ValueError(
+            f"SparseInfer needs a ReLU-fied activation, got {cfg.activation!r}"
+            " — run relufication first (repro.core.relufication.relufy)")
+    if alpha is None:
+        alpha = cfg.alpha_schedule().alpha_for_layer(layer_idx, num_layers)
+    if strategy == "dense":
+        return dense_mlp(params, x, cfg)
+    if strategy == "masked":
+        return masked_mlp(params, x, cfg, alpha, **kw)
+    if strategy == "gather":
+        return gather_mlp(params, x, cfg, alpha, **kw)
+    if strategy == "pallas":
+        return pallas_mlp(params, x, cfg, alpha, **kw)
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the SparseInfer hot path (predictor + sparse MLP).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated in
+interpret=True mode against the pure-jnp oracles in ref.py; ops.py holds the
+jitted, backend-dispatching wrappers used by the rest of the framework.
+"""

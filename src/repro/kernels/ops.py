@@ -1,0 +1,74 @@
+"""Jitted public wrappers for the Pallas kernels with backend dispatch.
+
+``interpret=None`` (default) resolves to ``True`` unless running on a real
+TPU backend — so the same call sites work in this CPU container (interpret
+mode, used by tests) and on hardware (compiled Mosaic kernels).  Shapes the
+kernels can't tile (e.g. d % 32 != 0) fall back to the jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import sign_pack as _sign_pack
+from repro.kernels import predict as _predict
+from repro.kernels import sparse_mlp_fused as _fused
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def sign_pack(v: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
+    """Pack sign bits of the last axis: (..., d) -> (..., d/32) int32."""
+    interp = _resolve_interpret(interpret)
+    if v.shape[-1] % 32 != 0:
+        return ref.sign_pack_ref(v)
+    shape = v.shape
+    flat = v.reshape(-1, shape[-1])
+    out = _sign_pack.sign_pack(flat, interpret=interp)
+    return out.reshape(shape[:-1] + (shape[-1] // 32,))
+
+
+def predict_counts(packed_w: jax.Array, packed_x: jax.Array, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Negative-product counts: ((k,w), (...,w)) -> (..., k) int32."""
+    interp = _resolve_interpret(interpret)
+    lead = packed_x.shape[:-1]
+    flat = packed_x.reshape(-1, packed_x.shape[-1])
+    out = _predict.predict_counts(packed_w, flat, interpret=interp)
+    return out.reshape(lead + (packed_w.shape[0],))
+
+
+def predict_margins(packed_w: jax.Array, packed_x: jax.Array, d_valid: int,
+                    alpha: float | jax.Array = 1.0, *,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Kernel-backed version of core.predictor.margins (paper eq. 2)."""
+    n_neg = predict_counts(packed_w, packed_x, interpret=interpret)
+    n_neg = n_neg.astype(jnp.float32)
+    n_pos = jnp.float32(d_valid) - n_neg
+    return n_neg - jnp.asarray(alpha, jnp.float32) * n_pos
+
+
+def fused_sparse_mlp(x: jax.Array,
+                     wg_t: jax.Array,
+                     wu_t: Optional[jax.Array],
+                     wd_t: jax.Array,
+                     sel_indices: jax.Array,
+                     sel_count: jax.Array,
+                     *,
+                     group_size: int = 8,
+                     activation: str = "relu",
+                     fatrelu_threshold: float = 0.0,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Capacity-gathered fused sparse gated MLP: (B, d) -> (B, d) f32."""
+    interp = _resolve_interpret(interpret)
+    return _fused.fused_sparse_mlp(
+        x, wg_t, wu_t, wd_t, sel_indices, sel_count,
+        group_size=group_size, activation=activation,
+        fatrelu_threshold=fatrelu_threshold, interpret=interp)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: XOR + popcount sparsity predictor (paper §IV-B2, Listing 1).
+
+The CUDA version assigns a warp per neuron row and ``__popc``s packed words.
+TPU-native version: tile the packed sign matrix (k × d/32, int32) over the
+grid, broadcast the packed input signs, XOR + ``population_count`` on the VPU
+and reduce along the word axis.  Reads ``k·d/8`` bytes — 16× fewer than one
+bf16 weight matrix — making prediction a ~6% overhead on the dense MLP's
+traffic (paper Table I: 2.2e6 predictor ops vs 2.1e8 MLP MACs for 13B).
+
+Emits raw negative-product counts; the (alpha-scaled) margin/threshold is a
+trivial epilogue done by the caller (keeps the kernel reusable for stats).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _predict_kernel(pw_ref, px_ref, out_ref):
+    pw = pw_ref[...]                      # (bk, w) int32
+    px = px_ref[...]                      # (B, w) int32
+    xor = jnp.bitwise_xor(px[:, None, :], pw[None, :, :])     # (B, bk, w)
+    counts = jnp.sum(jax.lax.population_count(xor), axis=-1)  # (B, bk)
+    out_ref[...] = counts.astype(jnp.int32)
+
+
+def choose_block_k(k: int, w: int, b: int) -> int:
+    """Tile k so the (B, bk, w) int32 intermediate stays under ~4 MiB."""
+    budget = max(8, (4 * 1024 * 1024) // (4 * w * max(b, 1)))
+    bk = min(k, budget)
+    while k % bk:
+        bk -= 1
+    return bk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_k"))
+def predict_counts(packed_w: jax.Array, packed_x: jax.Array, *,
+                   interpret: bool = True,
+                   block_k: int | None = None) -> jax.Array:
+    """packed_w: (k, w) int32; packed_x: (B, w) int32 -> (B, k) int32 counts."""
+    k, w = packed_w.shape
+    b = packed_x.shape[0]
+    bk = block_k or choose_block_k(k, w, b)
+    grid = (k // bk,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, w), lambda i: (i, 0)),
+            pl.BlockSpec((b, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, bk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=interpret,
+    )(packed_w, packed_x)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import predictor as P
+from repro.core.relufication import get_activation
+
+
+def sign_pack_ref(v: jax.Array) -> jax.Array:
+    """Oracle for kernels.sign_pack.sign_pack."""
+    return P.pack_signs(v)
+
+
+def predict_counts_ref(packed_w: jax.Array, packed_x: jax.Array) -> jax.Array:
+    """Oracle for kernels.predict.predict_counts: (B, k) neg-product counts."""
+    return P.neg_counts(packed_w, packed_x)
+
+
+def fused_sparse_mlp_ref(x: jax.Array,
+                         wg_t: jax.Array,
+                         wu_t: jax.Array | None,
+                         wd_t: jax.Array,
+                         sel_indices: jax.Array,
+                         sel_count: jax.Array,
+                         *,
+                         group_size: int = 8,
+                         activation: str = "relu",
+                         fatrelu_threshold: float = 0.0) -> jax.Array:
+    """Oracle for kernels.sparse_mlp_fused.fused_sparse_mlp.
+
+    Computes the same capacity-gathered gated MLP in plain jnp: only the first
+    ``sel_count`` groups contribute; padding entries are masked to zero.
+    """
+    b, d = x.shape
+    k = wg_t.shape[0]
+    g = group_size
+    cap = sel_indices.shape[0]
+    act = get_activation(
+        "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
+        else activation, fatrelu_threshold)
+
+    valid = (jnp.arange(cap) < sel_count)
+
+    def take(w_t):
+        grouped = w_t.reshape(k // g, g, d)
+        return jnp.take(grouped, sel_indices, axis=0).reshape(cap * g, d)
+
+    vmask = jnp.repeat(valid, g).astype(jnp.float32)
+    gsel = act(jnp.einsum("bd,nd->bn", x.astype(jnp.float32),
+                          take(wg_t).astype(jnp.float32)))
+    h = gsel * vmask
+    if wu_t is not None:
+        h = h * jnp.einsum("bd,nd->bn", x.astype(jnp.float32),
+                           take(wu_t).astype(jnp.float32))
+    y = jnp.einsum("bn,nd->bd", h, take(wd_t).astype(jnp.float32))
+    return y.astype(jnp.float32)

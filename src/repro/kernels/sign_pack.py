@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: pack sign bits of a matrix into int32 words.
+
+Paper §IV-B1 ("Pre-fetching and Packing Sign-Bit Information"): done once for
+``W_gate`` at model load, and per decode step for the input ``x``.  One pass
+over the source; output is 1/16 (bf16) – 1/32 (f32... int8: 1/8) of the input
+bytes.  VPU integer path, no MXU use.
+
+Layout: LSB-first along the last (reduction) axis — bit ``b`` of word ``i``
+is ``v[i*32 + b] < 0`` — identical to ``repro.core.predictor.pack_signs``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 32
+
+
+def _sign_pack_kernel(v_ref, out_ref):
+    v = v_ref[...]                                   # (bm, bd)
+    bm, bd = v.shape
+    bits = (v < 0).astype(jnp.uint32)
+    bits = bits.reshape(bm, bd // PACK, PACK)
+    weights = jnp.uint32(1) << jnp.arange(PACK, dtype=jnp.uint32)
+    packed = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+    out_ref[...] = packed.astype(jnp.int32)          # (bm, bd // 32)
+
+
+def choose_blocks(rows: int, d: int) -> tuple[int, int]:
+    """VMEM-sized tiling: keep the f32-upcast block under ~2 MiB."""
+    bd = d
+    # lane dim must stay a multiple of 32*128 for aligned packed output
+    while bd > 4096 and bd % (2 * PACK * 128) == 0:
+        bd //= 2
+    budget = 2 * 1024 * 1024 // (bd * 4)
+    bm = max(8, min(rows, budget))
+    while rows % bm:
+        bm -= 1
+    return bm, bd
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def sign_pack(v: jax.Array, *, interpret: bool = True,
+              block: tuple[int, int] | None = None) -> jax.Array:
+    """(rows, d) -> (rows, d/32) int32.  d must be a multiple of 32."""
+    rows, d = v.shape
+    assert d % PACK == 0, f"kernel path needs d % 32 == 0, got {d}"
+    bm, bd = block or choose_blocks(rows, d)
+    grid = (rows // bm, d // bd)
+    return pl.pallas_call(
+        _sign_pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bd), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bd // PACK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, d // PACK), jnp.int32),
+        interpret=interpret,
+    )(v)

@@ -1,0 +1,171 @@
+"""Roofline analysis over the dry-run results (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape), single-pod mesh, TPU v5e constants:
+
+  compute    = FLOPs / (chips × 197 TF/s)
+  memory     = HBM bytes / (chips × 819 GB/s)
+  collective = collective bytes / (chips × 50 GB/s ICI)
+
+Sources: the trip-count-aware jaxpr cost model (GLOBAL flops/bytes — XLA's
+cost_analysis once-counts while bodies, see costs.py; raw XLA numbers are
+also recorded in the JSONs) and the trip-count-corrected HLO collective
+parse.  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per the assignment;
+the ratio MODEL/HLO exposes remat & redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.launch.mesh import (HBM_PER_CHIP, HBM_BW, ICI_BW, PEAK_FLOPS_BF16)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D with N = (active) params, D = tokens processed by the step."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens          # fwd(2) + bwd(4)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single") -> Optional[dict]:
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    jc = rec["jaxpr_cost"]
+    flops_global = jc["flops"]
+    bytes_global = jc["bytes"]
+    coll_per_dev = rec["collectives_tc"]["total_bytes"]  # post-SPMD per-dev
+
+    t_compute = flops_global / chips / PEAK_FLOPS_BF16
+    t_memory = bytes_global / chips / HBM_BW
+    t_coll = coll_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops_global, 1.0)
+    bound = max(terms.values())
+    # roofline fraction: time the useful model math would take at peak,
+    # over the dominant-term time (ideal-overlap execution model)
+    frac = (mf / chips / PEAK_FLOPS_BF16) / max(bound, 1e-12)
+    args_fit = rec["memory"]["argument_bytes"] <= HBM_PER_CHIP
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": flops_global,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_fraction": round(frac, 4),
+        "arg_bytes_per_dev": rec["memory"]["argument_bytes"],
+        "peak_bytes_per_dev": rec["memory"]["peak_bytes_est"],
+        "fits_hbm_state": bool(args_fit),
+        "collective_by_group": rec["collectives_tc"]["bytes_by_group_size"],
+    }
+
+
+def whats_next(row: dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    d = row["dominant"]
+    if d == "memory":
+        if row["kind"] == "decode":
+            return ("decode is weight/KV-bandwidth bound: SparseInfer row "
+                    "skipping + int8 KV cut the bytes (the paper's regime)")
+        return "increase arithmetic intensity: larger per-device batch or fuse"
+    if d == "compute":
+        if row["useful_flops_ratio"] < 0.4:
+            return ("compute is remat/redundancy-heavy: relax checkpoint "
+                    "policy or cut recompute (useful ratio "
+                    f"{row['useful_flops_ratio']})")
+        return "near compute-bound: only kernel-level MXU utilization left"
+    return ("collective-bound: reshard to cut all-gathers (FSDP prefetch, "
+            "SP residuals) or overlap collectives with compute")
+
+
+def full_table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": rec["reason"][:60]})
+            continue
+        row = analyze_cell(rec)
+        if row:
+            row["next"] = whats_next(row)
+            rows.append(row)
+        else:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "failed": rec.get("error", "?")[:80]})
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac | state GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped:"
+                       f" {r['skipped']} | — | — | — | — |")
+            continue
+        if "failed" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED {r['failed']}"
+                       " | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['arg_bytes_per_dev']/2**30:.2f} | "
+            f"{'y' if r['fits_hbm_state'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = full_table(args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(markdown_table(rows))
+        for r in rows:
+            if "next" in r:
+                print(f"- {r['arch']} × {r['shape']}: {r['next']}")
+
+
+if __name__ == "__main__":
+    main()

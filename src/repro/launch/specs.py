@@ -1,0 +1,290 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and partition specs for every
+(arch × shape × step-kind) dry-run cell.  No device allocation happens here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.layers.mamba2 import Mamba2State
+from repro.layers.xlstm import MLSTMState, SLSTMState
+from repro.models import encdec, lm, vision_lm
+from repro.optim.adamw import init_adamw
+from repro.sharding import rules as R
+
+
+def model_module(cfg: ModelConfig):
+    return {"vlm": vision_lm, "encdec": encdec}.get(cfg.family, lm)
+
+
+def _batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(spec_entries, shape, mesh) -> P:
+    return P(*R._filter_spec(spec_entries, shape, mesh))
+
+
+# ------------------------------------------------------------- inputs -----
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """ShapeDtypeStructs (+ shardings) for the step inputs of this cell."""
+    ba = _batch_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {}
+
+    def tok_spec(bb, ss):
+        return jax.ShapeDtypeStruct(
+            (bb, ss), jnp.int32,
+            sharding=NamedSharding(mesh, _fit([ba, None], (bb, ss), mesh)))
+
+    if shape.kind == "train":
+        out["tokens"] = tok_spec(b, s)
+        out["labels"] = tok_spec(b, s)
+    elif shape.kind == "prefill":
+        out["tokens"] = tok_spec(b, s)
+    else:  # decode: one new token against a seq_len KV cache
+        out["tokens"] = tok_spec(b, 1)
+
+    if cfg.family == "vlm":
+        sh = (b, cfg.n_image_tokens, cfg.d_model)
+        out["images"] = jax.ShapeDtypeStruct(
+            sh, jnp.bfloat16,
+            sharding=NamedSharding(mesh, _fit([ba, None, None], sh, mesh)))
+    if cfg.family == "encdec":
+        sh = (b, cfg.n_frames, cfg.d_model)
+        out["frames"] = jax.ShapeDtypeStruct(
+            sh, jnp.bfloat16,
+            sharding=NamedSharding(mesh, _fit([ba, None, None], sh, mesh)))
+    return out
+
+
+# ------------------------------------------------------------- params -----
+
+def param_shapes(cfg: ModelConfig, serve: bool = False):
+    """abstract param tree via eval_shape (no allocation)."""
+    mod = model_module(cfg)
+
+    def build(key):
+        params = mod.init_lm(key, cfg)
+        if serve:
+            if cfg.sparse.enabled:
+                params = mod.prepare_sparse(params)
+            params = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+        return params
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def param_shardings(cfg: ModelConfig, mesh, mode: str):
+    shapes = param_shapes(cfg, serve=(mode != "train"))
+    with mesh:
+        specs = R.param_specs(shapes, mode=mode, mesh=mesh)
+    sharded = jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+    return sharded, specs
+
+
+def opt_state_specs(param_structs, mesh):
+    """AdamW state: mu/nu shard exactly like their params; step replicated."""
+    state_shapes = jax.eval_shape(init_adamw, param_structs)
+
+    def like(param_struct_tree):
+        return jax.tree.map(
+            lambda p: NamedSharding(
+                mesh, p.sharding.spec) if hasattr(p, "sharding") else
+            NamedSharding(mesh, P()), param_struct_tree)
+
+    from repro.optim.adamw import AdamWState
+    shardings = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree.map(lambda p: NamedSharding(mesh, p.sharding.spec),
+                        param_structs),
+        nu=jax.tree.map(lambda p: NamedSharding(mesh, p.sharding.spec),
+                        param_structs))
+    structs = jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(sh.shape, jnp.float32
+                                            if sh.dtype != jnp.int32
+                                            else sh.dtype, sharding=sp),
+        state_shapes, shardings)
+    return structs
+
+
+# ------------------------------------------------------------- caches -----
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Abstract decode caches with explicit shardings per family."""
+    b, max_len = shape.global_batch, shape.seq_len
+    mod = model_module(cfg)
+    shapes = jax.eval_shape(partial(mod.init_caches, cfg, b, max_len))
+    ba = _batch_axes(mesh)
+    seq_kv = cfg.seq_shard_kv or shape.name == "long_500k"
+
+    def kv_spec(shp):  # (..., B, S, K, hd) — seq-sharded (flash-decoding)
+        lead = [None] * (len(shp) - 4)
+        if seq_kv:
+            return _fit(lead + [None, (*ba, "model"), None, None], shp, mesh)
+        return _fit(lead + [ba, "model", None, None], shp, mesh)
+
+    def scale_spec(shp):  # int8-KV scales (..., B, S, K)
+        lead = [None] * (len(shp) - 3)
+        if seq_kv:
+            return _fit(lead + [None, (*ba, "model"), None], shp, mesh)
+        return _fit(lead + [ba, "model", None], shp, mesh)
+
+    def kv_tree_spec(tree):
+        return {kk: (kv_spec(v.shape) if kk in ("k", "v")
+                     else scale_spec(v.shape)) for kk, v in tree.items()}
+
+    def cross_spec(shp):  # (n, B, T, K, hd)
+        return _fit([None, ba, "model", None, None], shp, mesh)
+
+    def ssm_spec(shp):  # (..., B, H, P, N)
+        lead = [None] * (len(shp) - 4)
+        return _fit(lead + [ba, "model", None, None], shp, mesh)
+
+    def conv_spec(shp):  # (..., B, t, conv_dim)
+        lead = [None] * (len(shp) - 3)
+        return _fit(lead + [ba, None, "model"], shp, mesh)
+
+    def generic_batch_spec(shp, batch_pos):
+        spec = [None] * len(shp)
+        spec[batch_pos] = ba
+        return _fit(spec, shp, mesh)
+
+    def assign(path_tree):
+        fam = cfg.family
+        specs: Any
+        if fam in ("dense", "moe"):
+            specs = {k2: kv_tree_spec(v) for k2, v in path_tree.items()}
+        elif fam == "hybrid":
+            specs = {
+                "mamba": Mamba2State(
+                    ssm=ssm_spec(path_tree["mamba"].ssm.shape),
+                    conv=conv_spec(path_tree["mamba"].conv.shape)),
+                "attn": kv_tree_spec(path_tree["attn"]),
+            }
+            if "tail" in path_tree:
+                specs["tail"] = Mamba2State(
+                    ssm=ssm_spec(path_tree["tail"].ssm.shape),
+                    conv=conv_spec(path_tree["tail"].conv.shape))
+        elif fam == "xlstm":
+            ml = path_tree["mlstm"]
+            sl = path_tree["slstm"]
+            specs = {
+                "mlstm": MLSTMState(
+                    c=generic_batch_spec(ml.c.shape, 2),
+                    n=generic_batch_spec(ml.n.shape, 2),
+                    m=generic_batch_spec(ml.m.shape, 2),
+                    conv=conv_spec(ml.conv.shape)),
+                "slstm": SLSTMState(
+                    c=_fit([None, ba, "model"], sl.c.shape, mesh),
+                    n=_fit([None, ba, "model"], sl.n.shape, mesh),
+                    m=_fit([None, ba, "model"], sl.m.shape, mesh),
+                    h=_fit([None, ba, "model"], sl.h.shape, mesh)),
+            }
+        elif fam == "vlm":
+            specs = {
+                "self": kv_tree_spec(path_tree["self"]),
+                "cross": {"k": cross_spec(path_tree["cross"]["k"].shape),
+                          "v": cross_spec(path_tree["cross"]["v"].shape)},
+            }
+        elif fam == "encdec":
+            specs = {
+                "self": kv_tree_spec(path_tree["self"]),
+                "cross": {"k": cross_spec(path_tree["cross"]["k"].shape),
+                          "v": cross_spec(path_tree["cross"]["v"].shape)},
+            }
+        else:
+            raise ValueError(fam)
+        return specs
+
+    specs = assign(shapes)
+    structs = jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return structs
+
+
+# ---------------------------------------------------------- step fns ------
+
+def make_step_fn(cfg: ModelConfig, shape: ShapeConfig):
+    """The function each cell lowers: train_step / prefill / serve_step."""
+    mod = model_module(cfg)
+
+    if shape.kind == "train":
+        from repro.optim.adamw import AdamWConfig, adamw_update
+
+        opt = AdamWConfig()
+        m = max(1, cfg.microbatches)
+
+        def cast_bf16(p):
+            # mixed precision: f32 masters stay FSDP-sharded; the cast output
+            # is what gets all-gathered at use => FSDP collectives in bf16
+            # (halves the dominant collective term — EXPERIMENTS.md §Perf)
+            if jnp.issubdtype(p.dtype, jnp.floating) and p.ndim >= 2:
+                return p.astype(jnp.bfloat16)
+            return p
+
+        def grads_of(params, batch):
+            def loss_of(p):
+                return mod.lm_loss(jax.tree.map(cast_bf16, p), cfg, batch)
+            return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+        def train_step(params, opt_state, batch):
+            if m == 1:
+                (loss, metrics), grads = grads_of(params, batch)
+            else:
+                # microbatched grad accumulation (activation memory / m)
+                mb = jax.tree.map(
+                    lambda a: a.reshape((m, a.shape[0] // m) + a.shape[1:]),
+                    batch)
+
+                def micro(acc, one):
+                    (loss, metrics), grads = grads_of(params, one)
+                    acc = (jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32),
+                        acc[0], grads), acc[1] + loss)
+                    return acc, metrics
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), ms = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / m, gsum)
+                loss = lsum / m
+                metrics = jax.tree.map(lambda x: x[-1], ms)
+            params, opt_state, om = adamw_update(opt, params, grads,
+                                                 opt_state)
+            return params, opt_state, dict(metrics, loss=loss, **om)
+
+        return train_step
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            extra = tuple(batch[k] for k in ("images", "frames")
+                          if k in batch)
+            # prefill at full seq; caches sized to seq (decode continues)
+            return mod.prefill(params, cfg, batch["tokens"], *extra,
+                               max_len=shape.seq_len)
+        return prefill_step
+
+    def serve_step(params, batch, caches):
+        logits, caches = mod.decode_step(
+            params, cfg, batch["tokens"], caches,
+            jnp.int32(shape.seq_len - 1))
+        return logits, caches
+
+    return serve_step

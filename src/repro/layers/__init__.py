@@ -1,0 +1,1 @@
+"""Transformer/SSM layer substrate (functional JAX, pytree params)."""

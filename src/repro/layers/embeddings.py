@@ -1,0 +1,30 @@
+"""Token embeddings and output heads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int,
+                   dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, scale_by_sqrt_d: bool = False,
+          dtype=jnp.bfloat16) -> jax.Array:
+    x = jnp.take(params["table"], tokens, axis=0).astype(dtype)
+    if scale_by_sqrt_d:
+        x = x * jnp.asarray(params["table"].shape[-1] ** 0.5, dtype)
+    return x
+
+
+def init_unembed(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)}
+
+
+def logits(params: dict, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """x: (..., d) -> (..., vocab).  `params` may be the (tied) embed table."""
+    out = jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+    if softcap > 0.0:
+        out = jnp.tanh(out / softcap) * softcap
+    return out

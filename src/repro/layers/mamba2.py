@@ -1,0 +1,201 @@
+"""Mamba2 (SSD) mixer: chunked-scan training/prefill + O(1)-state decode.
+
+Implements the SSD "state space dual" recurrence (Dao & Gu 2024, minimal-ssd
+form) with a lax.scan over chunks so live memory is O(chunk²) not O(L²) —
+required for the 32k-prefill and 500k-decode shapes.  Decode keeps per-layer
+state (h: (B, H, P, N), conv tail) and costs O(1) per token, which is why the
+hybrid zamba2 arch runs the `long_500k` cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.norms import init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64          # N
+    head_dim: int = 64         # P
+    expand: int = 2
+    n_groups: int = 1          # G (B/C groups)
+    d_conv: int = 4
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array    # (B, H, P, N) f32
+    conv: jax.Array   # (B, d_conv-1, conv_dim)
+
+
+def _conv_dim(cfg: Mamba2Config) -> int:
+    return cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+
+
+def init_mamba2(key: jax.Array, cfg: Mamba2Config, dtype=jnp.float32) -> dict:
+    ki, kc, ko, ka, kd = jax.random.split(key, 5)
+    d, di = cfg.d_model, cfg.d_inner
+    proj_out = 2 * di + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    s = d ** -0.5
+    dt = jnp.exp(jax.random.uniform(kd, (cfg.n_heads,)) *
+                 (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min)) + jnp.log(cfg.dt_min))
+    return {
+        "in_proj": (jax.random.normal(ki, (d, proj_out)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(kc, (cfg.d_conv, _conv_dim(cfg))) *
+                   cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads)).astype(jnp.float32),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "norm": init_rmsnorm(di),
+        "out_proj": (jax.random.normal(ko, (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(z_xbc_dt: jax.Array, cfg: Mamba2Config):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di:di + di + 2 * gn]
+    dt = z_xbc_dt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: jax.Array, cfg: Mamba2Config):
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    return (xbc[..., :di], xbc[..., di:di + gn], xbc[..., di + gn:])
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., T) -> (..., T, T) lower-tri cumulative segment sums."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def mamba2_forward(params: dict, x: jax.Array, cfg: Mamba2Config,
+                   return_state: bool = False):
+    """x: (B, L, d) with L % chunk == 0. Chunked SSD scan."""
+    b, l, _ = x.shape
+    k = max(1, min(cfg.chunk, l))
+    while l % k:           # largest divisor <= chunk (real shapes are 2^n)
+        k -= 1
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+
+    zxd = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(zxd, cfg)
+
+    # causal depthwise conv (width d_conv) + silu
+    pad = cfg.d_conv - 1
+    xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xbc_p[:, i:i + l] * params["conv_w"][i].astype(x.dtype)
+               for i in range(cfg.d_conv)) + params["conv_b"].astype(x.dtype)
+    xbc_a = jax.nn.silu(conv)
+    xs, bs, cs = _split_xbc(xbc_a, cfg)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                       # (H,)
+    da = dt * a                                          # (B, L, H)
+
+    # keep the full-sequence tensors in x.dtype (bf16 in production) and at
+    # G (not H) width: the f32 upcast and the G->H broadcast happen
+    # per-chunk inside the scan (transient), not materialized over L.
+    xs = xs.reshape(b, l // k, k, h, p)
+    bs = bs.reshape(b, l // k, k, g, n)
+    cs_ = cs.reshape(b, l // k, k, g, n)
+    rep = h // g
+    da_c = da.reshape(b, l // k, k, h).transpose(0, 1, 3, 2)  # (B,C,H,K)
+    dt_c = dt.reshape(b, l // k, k, h)
+
+    def chunk_step(state, inp):
+        xc, bc, cc, dac, dtc = inp  # (B,K,H,P),(B,K,G,N),(B,K,G,N),(B,H,K),(B,K,H)
+        xc = xc.astype(jnp.float32)
+        bc = jnp.repeat(bc.astype(jnp.float32), rep, axis=2)   # (B,K,H,N)
+        cc = jnp.repeat(cc.astype(jnp.float32), rep, axis=2)
+        a_cum = jnp.cumsum(dac, -1)          # (B,H,K)
+        lmat = jnp.exp(_segsum(dac))         # (B,H,K,K)
+        xdt = xc * dtc[..., None]            # dt-discretized input
+        y_diag = jnp.einsum("bihn,bjhn,bhij,bjhp->bihp", cc, bc, lmat, xdt)
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,K)
+        contrib = jnp.einsum("bkhn,bhk,bkhp->bhpn", bc, decay_states, xdt)
+        y_off = jnp.einsum("bkhn,bhpn,bhk->bkhp", cc, state, jnp.exp(a_cum))
+        state = state * jnp.exp(a_cum[..., -1])[..., None, None] + contrib
+        return state, (y_diag + y_off).astype(x.dtype)
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs_t = xs.transpose(1, 0, 2, 3, 4)
+    bs_t = bs.transpose(1, 0, 2, 3, 4)
+    cs_t = cs_.transpose(1, 0, 2, 3, 4)
+    da_t = da_c.transpose(1, 0, 2, 3)
+    dt_t = dt_c.transpose(1, 0, 2, 3)
+    # sqrt-BPTT over chunks: per-chunk einsum residuals are the footprint
+    from repro.layers.scan_utils import checkpointed_scan
+    state, ys = checkpointed_scan(chunk_step, state0,
+                                  (xs_t, bs_t, cs_t, da_t, dt_t))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, p)
+    y = y + xs.reshape(b, l, h, p) * params["D"][None, None, :, None]
+    y = y.reshape(b, l, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        # conv state holds the last (d_conv-1) *pre-activation* inputs
+        conv_tail = xbc_p[:, -pad:] if pad else \
+            jnp.zeros((b, 0, _conv_dim(cfg)), x.dtype)
+        return out, Mamba2State(state, conv_tail)
+    return out
+
+
+def init_mamba2_state(batch: int, cfg: Mamba2Config,
+                      dtype=jnp.bfloat16) -> Mamba2State:
+    return Mamba2State(
+        ssm=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                      jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, _conv_dim(cfg)), dtype))
+
+
+def mamba2_decode(params: dict, x: jax.Array, state: Mamba2State,
+                  cfg: Mamba2Config):
+    """Single-token step. x: (B, 1, d) -> (y (B,1,d), new state). O(1)/token."""
+    b = x.shape[0]
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    zxd = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(zxd, cfg)
+
+    conv_in = jnp.concatenate([state.conv.astype(x.dtype), xbc[:, None]], 1)
+    conv = jnp.einsum("btc,tc->bc", conv_in, params["conv_w"].astype(x.dtype))
+    conv = conv + params["conv_b"].astype(x.dtype)
+    xbc_a = jax.nn.silu(conv)
+    xs, bs, cs = _split_xbc(xbc_a, cfg)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)                                   # (B,H)
+    xsh = xs.reshape(b, h, p).astype(jnp.float32)
+    rep = h // g
+    bsh = jnp.repeat(bs.reshape(b, g, n), rep, 1).astype(jnp.float32)
+    csh = jnp.repeat(cs.reshape(b, g, n), rep, 1).astype(jnp.float32)
+
+    upd = jnp.einsum("bhp,bhn->bhpn", xsh * dt[..., None], bsh)
+    ssm = state.ssm * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, csh)
+    y = y + xsh * params["D"][None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+    return out, Mamba2State(ssm, conv_in[:, 1:])

@@ -1,0 +1,53 @@
+"""MLP block: gated (llama-style) or plain FFN, with the SparseInfer hook.
+
+Training / prefill use the dense path (the paper applies sparsity only in
+decode, §V-C); decode dispatches to the configured SparseInfer strategy.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_mlp as SM
+from repro.core.sparse_mlp import SparseInferConfig
+
+
+def init_mlp(key: jax.Array, d: int, k: int, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    return SM.init_gated_mlp(key, d, k, dtype=dtype, gated=gated)
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
+              *, decode: bool = False, alpha: jax.Array | float | None = None,
+              layer_idx: int = 0, num_layers: int = 1) -> jax.Array:
+    """x: (..., d). Dense unless (decode and cfg.enabled).
+
+    ``alpha`` overrides the per-layer schedule (used under scan-over-layers
+    where layer_idx is traced: the schedule is precomputed into an array).
+    """
+    shape = x.shape
+    if not (decode and cfg.enabled):
+        return SM.dense_mlp(params, x, cfg)
+    xf = x.reshape(-1, shape[-1])
+    # union-mask regime bound is PER-DEVICE tokens (DESIGN.md §2): under a
+    # mesh the global batch is sharded over the data axes; tokens are
+    # grouped per shard so every device selects/gathers only its own rows
+    from repro.sharding import rules as R
+    mesh = R.current_mesh()
+    dp = R.axis_size(mesh, R.data_axes(mesh)) if mesh is not None else 1
+    n = xf.shape[0]
+    if n > cfg.sparse_max_batch * dp:
+        y = SM.dense_mlp(params, xf, cfg)
+    elif (cfg.strategy == "gather" and n > cfg.sparse_max_batch
+          and n % dp == 0 and dp > 1):
+        xg = xf.reshape(dp, n // dp, shape[-1])
+        xg = R.shard(xg, R.data_axes(mesh), None, None)
+        y = SM.gather_mlp(params, xg, cfg,
+                          alpha=1.0 if alpha is None else alpha)
+        y = y.reshape(n, shape[-1])
+    else:
+        y = SM.apply(params, xf, cfg, alpha=alpha, layer_idx=layer_idx,
+                     num_layers=num_layers)
+    return y.reshape(shape).astype(x.dtype)

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts with expert parallelism (EP).
+
+Design (DESIGN.md §3): experts are sharded over the ``model`` mesh axis.
+Since TP already replicates FFN inputs across ``model`` (after the SP
+all-gather), each model-rank builds a capacity-bounded dispatch buffer for
+its *local* experts only, runs the expert FFNs, scatter-adds weighted partial
+outputs, and the TP all-reduce that a dense FFN would have paid anyway
+combines the partials.  No all-to-all, ideal FLOPs (top-k · capacity_factor),
+balanced by construction.
+
+Dispatch is sort-based (no (T, E, C) one-hot): slots are ranked within each
+expert by router probability, so capacity overflow drops the least-confident
+tokens first.
+
+SparseInfer composes per-expert: each expert is a gated MLP, so at decode the
+predictor can skip neuron rows inside routed experts (paper technique applied
+to fine-grained MoE — see configs/deepseek_moe_16b.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.relufication import get_activation
+from repro.core.sparse_mlp import SparseInferConfig
+from repro.core import sparse_mlp as SM
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int                 # per-expert FFN width
+    n_experts: int
+    top_k: int
+    n_shared: int = 0             # deepseek shared experts (always-on)
+    d_shared: int = 0             # width of the shared expert FFN
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True # renormalize top-k probs (deepseek)
+    aux_loss_coef: float = 0.01
+    activation: str = "silu"
+
+
+def init_moe(key: jax.Array, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, e = cfg.d_model, cfg.d_expert, cfg.n_experts
+    si = d ** -0.5
+    so = f ** -0.5
+    kwg, kwu, kwd = jax.random.split(ke, 3)
+    params = {
+        "router": (jax.random.normal(kr, (d, e)) * si).astype(jnp.float32),
+        # expert weights neuron-major per expert: (E, k, d) so SparseInfer's
+        # row skipping applies unchanged inside each expert.
+        "wg_t": (jax.random.normal(kwg, (e, f, d)) * si).astype(dtype),
+        "wu_t": (jax.random.normal(kwu, (e, f, d)) * si).astype(dtype),
+        "wd_t": (jax.random.normal(kwd, (e, f, d)) * so).astype(dtype),
+    }
+    if cfg.n_shared > 0:
+        width = cfg.d_shared or cfg.d_expert * cfg.n_shared
+        params["shared"] = SM.init_gated_mlp(ks, d, width, dtype=dtype)
+    return params
+
+
+def router_probs(params: dict, x: jax.Array, cfg: MoEConfig):
+    """x: (T, d) -> (probs (T, E) f32, logits)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def _topk_route(probs: jax.Array, cfg: MoEConfig):
+    w, idx = jax.lax.top_k(probs, cfg.top_k)           # (T, K)
+    if cfg.router_norm_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def aux_load_balance_loss(probs: jax.Array, idx: jax.Array,
+                          cfg: MoEConfig) -> jax.Array:
+    """Switch-style load-balance auxiliary loss."""
+    e = cfg.n_experts
+    hits = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac_tokens = hits / jnp.maximum(hits.sum(), 1.0)
+    frac_probs = probs.mean(0)
+    return cfg.aux_loss_coef * e * jnp.sum(frac_tokens * frac_probs)
+
+
+def _capacity(cfg: MoEConfig, n_tokens: int, n_local_experts: int) -> int:
+    per_expert = n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts
+    return max(8, int(-(-per_expert // 8) * 8))
+
+
+def _expert_ffn(wg, wu, wd, xs, activation: str):
+    """xs: (E_local, C, d); w*: (E_local, f, d) -> (E_local, C, d)."""
+    act = get_activation(activation)
+    g = act(jnp.einsum("ecd,efd->ecf", xs, wg))
+    u = jnp.einsum("ecd,efd->ecf", xs, wu)
+    return jnp.einsum("ecf,efd->ecd", g * u, wd)
+
+
+def _dispatch_compute(params, x, cfg: MoEConfig, w, idx):
+    """Sort-based, token-grouped capacity dispatch + expert FFN.
+
+    x: (G, Tg, d); w, idx: (G, Tg, K) routing. Capacity is PER GROUP (one
+    group = one sequence/data shard), so the dispatch buffer is
+    (G, E, C, d) with G sharded over the data axes and E over 'model' —
+    per-device footprint is local_tokens × top_k × cf × d / model_par, the
+    EP-correct bound.  The scatter back to tokens becomes the TP all-reduce
+    a dense FFN would have paid anyway (DESIGN.md §3).
+
+    Gathers/scatters use flat 1-D indices (group-offset arithmetic) rather
+    than take_along_axis: routing indices are wrapped in stop_gradient and
+    the data-path gather keeps a plain VJP (this jaxlib's batched-gather
+    JVP is broken; flat indexing also partitions better under GSPMD).
+    """
+    from repro.sharding.rules import data_axes, shard
+    g, tg, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, tg, e)
+    nslot = tg * k
+    ba = data_axes()
+
+    flat_e = idx.reshape(g, nslot)
+    flat_w = w.reshape(g, nslot)
+    flat_t = jnp.tile(jnp.repeat(jnp.arange(tg), k)[None], (g, 1))
+
+    # rank slots within each expert by router weight: sort by (expert, -w).
+    order = jnp.argsort(jax.lax.stop_gradient(
+        flat_e.astype(jnp.float32) * 2.0 - flat_w * (1.0 - 1e-6)), axis=-1)
+    goff_slot = jnp.arange(g)[:, None] * nslot
+    e_s = flat_e.reshape(-1)[(order + goff_slot).reshape(-1)].reshape(g, nslot)
+    t_s = flat_t.reshape(-1)[(order + goff_slot).reshape(-1)].reshape(g, nslot)
+    w_s = flat_w.reshape(-1)[(order + goff_slot).reshape(-1)].reshape(g, nslot)
+
+    seg_start = jax.vmap(
+        lambda es: jnp.searchsorted(es, jnp.arange(e + 1)))(e_s)  # (G, E+1)
+    pos_in_seg = jnp.arange(nslot)[None] - jnp.take_along_axis(
+        seg_start, e_s, axis=-1)
+    keep = pos_in_seg < cap                      # overflow drops low-w slots
+    slot = jnp.where(keep, e_s * cap + pos_in_seg, e * cap)
+
+    # gather tokens into the dispatch buffer — vmapped per-group explicit
+    # gather/scatter so the op is manifestly group-local (a flat global
+    # index formulation makes GSPMD all-gather the whole token tensor)
+    def take_rows(xg, idx):
+        dnums = jax.lax.GatherDimensionNumbers(
+            offset_dims=(1,), collapsed_slice_dims=(0,), start_index_map=(0,))
+        return jax.lax.gather(
+            xg, idx[:, None], dnums, slice_sizes=(1, xg.shape[1]),
+            mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+
+    gathered = jax.vmap(take_rows)(x, t_s)            # (G, nslot, d)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+
+    def scatter_rows(vals, idx):
+        buf = jnp.zeros((e * cap + 1, d), x.dtype)
+        return buf.at[idx].set(vals)
+
+    buf = jax.vmap(scatter_rows)(gathered, slot)      # (G, E*C+1, d)
+    xs = buf[:, :-1].reshape(g, e, cap, d)
+    xs = shard(xs, ba, "model", None, None)
+
+    act = get_activation(cfg.activation)
+    gate = jnp.einsum("gecd,efd->gecf", xs, params["wg_t"].astype(x.dtype))
+    up = jnp.einsum("gecd,efd->gecf", xs, params["wu_t"].astype(x.dtype))
+    ys = jnp.einsum("gecf,efd->gecd", act(gate) * up,
+                    params["wd_t"].astype(x.dtype))
+    ys = shard(ys, ba, "model", None, None)
+
+    # combine: gather each slot's expert output, weight, scatter-add to tokens
+    contrib = jax.vmap(take_rows)(ys.reshape(g, e * cap, d),
+                                  jnp.where(keep, slot, 0))
+    contrib = jnp.where(keep[..., None], contrib, 0.0)
+    contrib = contrib * w_s[..., None].astype(x.dtype)
+
+    def scatter_add_rows(vals, idx):
+        return jnp.zeros((tg, d), x.dtype).at[idx].add(vals)
+
+    out = jax.vmap(scatter_add_rows)(contrib, t_s)    # (G, Tg, d)
+    return out
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: MoEConfig):
+    """MoE layer. x: (..., d) -> (y (..., d), aux load-balance loss).
+
+    For (B, S, d) inputs each sequence is a dispatch group (B groups);
+    flat (T, d) inputs form one group.  EP falls out of the sharding
+    constraints in ``_dispatch_compute``; on a single device the same code
+    runs unsharded (smoke tests).
+    """
+    shape = x.shape
+    xg = x.reshape((shape[0], -1, shape[-1])) if x.ndim == 3 else \
+        x.reshape((1, -1, shape[-1]))
+    probs, _ = router_probs(params, xg, cfg)
+    w, idx = _topk_route(probs, cfg)
+    y = _dispatch_compute(params, xg, cfg, w, idx)
+    aux = aux_load_balance_loss(probs.reshape(-1, cfg.n_experts),
+                                idx.reshape(-1, cfg.top_k), cfg)
+    y = y.reshape(shape)
+    if "shared" in params:
+        # always-on shared experts: a dense TP FFN (deepseek-moe)
+        y = y + SM.dense_mlp(params["shared"], x,
+                             SparseInferConfig(activation=cfg.activation))
+    return y, aux

@@ -1,0 +1,27 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies (head_dim/2,) float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotate pairs (split-half convention, llama-style).
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]                              # (..., seq, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

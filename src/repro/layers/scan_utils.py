@@ -1,0 +1,46 @@
+"""Memory-bounded scan helpers.
+
+``checkpointed_scan`` is a sqrt-BPTT scan: the time axis is split into
+chunks of ~sqrt(T); only chunk-boundary carries are saved for backward and
+each chunk recomputes its interior.  Required for recurrent cells with large
+carries (mLSTM's per-head matrix memory is O(head_dim²) — storing it per
+timestep at 4k+ sequence lengths is terabytes; storing per chunk boundary is
+gigabytes).  Forward-only callers (inference) should use plain lax.scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def checkpointed_scan(step: Callable, carry, xs, chunk: int = 0):
+    """lax.scan(step, carry, xs) with sqrt-BPTT chunk checkpointing.
+
+    xs: pytree with leading time axis T (all leaves equal T).
+    chunk: boundary interval; 0 -> round(sqrt(T)) clamped to a divisor.
+    """
+    leaves = jax.tree.leaves(xs)
+    t = leaves[0].shape[0]
+    if chunk <= 0:
+        chunk = max(1, int(math.sqrt(t)))
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n = t // chunk
+    if n <= 1:
+        return jax.lax.scan(step, carry, xs)
+
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((t,) + a.shape[2:]), ys_c)
+    return carry, ys

@@ -1,0 +1,241 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, recurrent).
+
+Faithful-structure implementation of Beck et al. 2024 with the stabilized
+exponential gating.  Both cells run as lax.scan recurrences (compile-time
+O(1) in sequence length); decode carries O(1) state per layer, so the xlstm
+arch runs the `long_500k` cell.  Simplifications vs the reference code are
+documented inline (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.norms import init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2          # mLSTM up-projection factor
+    d_conv: int = 4
+    slstm_every: int = 4     # block i is sLSTM when i % slstm_every == 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, dk, dv) matrix memory
+    n: jax.Array   # (B, H, dk) normalizer
+    m: jax.Array   # (B, H) stabilizer
+    conv: jax.Array  # (B, d_conv-1, d_inner)
+
+
+def init_mlstm(key: jax.Array, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ku, kq, kk, kv, kg, ko, kc = jax.random.split(key, 7)
+    d, di, hd = cfg.d_model, cfg.d_inner, cfg.head_dim
+    s, si = d ** -0.5, di ** -0.5
+    return {
+        "up": (jax.random.normal(ku, (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(kc, (cfg.d_conv, di)) *
+                   cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": (jax.random.normal(kq, (di, di)) * si).astype(dtype),
+        "wk": (jax.random.normal(kk, (di, di)) * si).astype(dtype),
+        "wv": (jax.random.normal(kv, (di, di)) * si).astype(dtype),
+        "w_if": (jax.random.normal(kg, (di, 2 * cfg.n_heads)) * si).astype(dtype),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                 jnp.full((cfg.n_heads,), 3.0)]).astype(dtype),
+        "norm": init_rmsnorm(di),
+        "down": (jax.random.normal(ko, (di, d)) * si).astype(dtype),
+    }
+
+
+def _mlstm_cell_step(state, inp):
+    """One timestep of the stabilized mLSTM recurrence (f32 internal)."""
+    c, n, m = state
+    q, k, v, log_i, log_f = inp          # (B,H,dk),(B,H,dk),(B,H,dv),(B,H)
+    out_dtype = v.dtype
+    q, k, v = (q.astype(jnp.float32), k.astype(jnp.float32),
+               v.astype(jnp.float32))
+    log_i = log_i.astype(jnp.float32)
+    log_f = log_f.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_s = jnp.exp(log_f + m - m_new)[..., None, None]
+    i_s = jnp.exp(log_i - m_new)[..., None, None]
+    c = f_s * c + i_s * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = f_s[..., 0] * n + i_s[..., 0] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).astype(out_dtype)
+    return (c, n, m_new), h
+
+
+def _mlstm_qkvg(params: dict, x_in: jax.Array, cfg: XLSTMConfig, conv_prev):
+    """Shared projection path. x_in: (B, L, d). Returns q,k,v,gates,z,conv_tail."""
+    b, l, _ = x_in.shape
+    di, h, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    up = x_in @ params["up"].astype(x_in.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    pad = cfg.d_conv - 1
+    xm_p = jnp.concatenate([conv_prev.astype(x_in.dtype), xm], axis=1)
+    conv = sum(xm_p[:, i:i + l] * params["conv_w"][i].astype(x_in.dtype)
+               for i in range(cfg.d_conv)) + params["conv_b"].astype(x_in.dtype)
+    xc = jax.nn.silu(conv)
+    q = (xc @ params["wq"].astype(x_in.dtype)).reshape(b, l, h, hd)
+    k = (xc @ params["wk"].astype(x_in.dtype)).reshape(b, l, h, hd) * hd ** -0.5
+    v = (xm @ params["wv"].astype(x_in.dtype)).reshape(b, l, h, hd)
+    gates = xc @ params["w_if"].astype(x_in.dtype) + params["b_if"].astype(x_in.dtype)
+    log_i = gates[..., :h].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+    return q, k, v, log_i, log_f, z, xm_p[:, l:] if pad else xm_p[:, :0]
+
+
+def mlstm_forward(params: dict, x: jax.Array, cfg: XLSTMConfig,
+                  state: MLSTMState | None = None, return_state: bool = False):
+    """x: (B, L, d). Sequence-scan mLSTM block with residual projection."""
+    b, l, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = init_mlstm_state(b, cfg, x.dtype)
+    q, k, v, log_i, log_f, z, conv_tail = _mlstm_qkvg(
+        params, x, cfg, state.conv)
+
+    def step(carry, inp):
+        return _mlstm_cell_step(carry, inp)
+
+    # seq tensors stay in x.dtype (bf16 in production) — the cell upcasts
+    # per step; feeding f32 doubles the per-block BPTT residual footprint.
+    # q/k shard their head_dim (dk) over 'model': the (B,H,dk,dv) matrix
+    # memory then lives dk-sharded (its only contraction is over dk, a
+    # per-step psum) — this is the TP dimension an mLSTM actually has.
+    from repro.sharding.rules import data_axes, shard
+    ba = data_axes()
+    q = shard(q, ba, None, None, "model")
+    k = shard(k, ba, None, None, "model")
+    v = shard(v, ba, None, None, None)
+    seq = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3),
+           log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+    # sqrt-BPTT: the (B,H,dk,dv) matrix memory must not be stored per step
+    from repro.layers.scan_utils import checkpointed_scan
+    carry0 = (shard(state.c, ba, None, "model", None), state.n, state.m)
+    (c, n, m), hs = checkpointed_scan(step, carry0, seq)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, l, cfg.d_inner).astype(x.dtype)
+    out = rmsnorm(params["norm"], hs) * jax.nn.silu(z)
+    out = out @ params["down"].astype(x.dtype)
+    if return_state:
+        return out, MLSTMState(c, n, m, conv_tail)
+    return out
+
+
+def init_mlstm_state(batch: int, cfg: XLSTMConfig, dtype=jnp.bfloat16):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype))
+
+
+def mlstm_decode(params: dict, x: jax.Array, state: MLSTMState,
+                 cfg: XLSTMConfig):
+    """x: (B, 1, d) -> (y (B,1,d), state). O(1) per token."""
+    out, new_state = mlstm_forward(params, x, cfg, state, return_state=True)
+    return out, new_state
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d) cell
+    n: jax.Array   # (B, d) normalizer
+    m: jax.Array   # (B, d) stabilizer
+    h: jax.Array   # (B, d) hidden (recurrent input)
+
+
+def init_slstm(key: jax.Array, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    kw, kr, ko = jax.random.split(key, 3)
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.s_head_dim
+    s = d ** -0.5
+    return {
+        # input projections for gates i,f,z,o
+        "w": (jax.random.normal(kw, (d, 4 * d)) * s).astype(dtype),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "r": (jax.random.normal(kr, (h, hd, 4 * hd)) * hd ** -0.5).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(dtype),
+        "norm": init_rmsnorm(d),
+        "out": (jax.random.normal(ko, (d, d)) * s).astype(dtype),
+    }
+
+
+def _slstm_step(params, cfg: XLSTMConfig, state: SLSTMState, x_t: jax.Array):
+    """x_t: (B, d). Stabilized sLSTM with block-diagonal recurrence."""
+    b, d = x_t.shape
+    h, hd = cfg.n_heads, cfg.s_head_dim
+    hx = state.h.reshape(b, h, hd).astype(x_t.dtype)
+    rec = jnp.einsum("bhi,hio->bho", hx, params["r"].astype(x_t.dtype))
+    rec = rec.reshape(b, h, 4, hd).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    gates = (x_t @ params["w"].astype(x_t.dtype) + rec +
+             params["b"].astype(x_t.dtype)).astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + state.m, gi)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    i_s = jnp.exp(gi - m_new)
+    c = f_s * state.c + i_s * jnp.tanh(gz)
+    n = f_s * state.n + i_s
+    hid = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, m_new, hid)
+
+
+def slstm_forward(params: dict, x: jax.Array, cfg: XLSTMConfig,
+                  state: SLSTMState | None = None, return_state: bool = False):
+    """x: (B, L, d): strict recurrence via lax.scan over time."""
+    b, l, d = x.shape
+    if state is None:
+        state = init_slstm_state(b, cfg)
+
+    def step(carry, x_t):
+        new = _slstm_step(params, cfg, carry, x_t)
+        return new, new.h
+
+    from repro.layers.scan_utils import checkpointed_scan
+    state, hs = checkpointed_scan(step, state, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = rmsnorm(params["norm"], hs) @ params["out"].astype(x.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_slstm_state(batch: int, cfg: XLSTMConfig) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, jnp.full((batch, d), -1e30, jnp.float32), z)
+
+
+def slstm_decode(params: dict, x: jax.Array, state: SLSTMState,
+                 cfg: XLSTMConfig):
+    new = _slstm_step(params, cfg, state, x[:, 0])
+    out = rmsnorm(params["norm"], new.h[:, None].astype(x.dtype))
+    return out @ params["out"].astype(x.dtype), new

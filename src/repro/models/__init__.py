@@ -1,0 +1,1 @@
+"""Model family builders over the layer library."""

@@ -1,0 +1,116 @@
+"""Shared model machinery: block helpers, chunked loss, sampling."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import AttentionConfig
+from repro.layers.norms import init_layernorm, init_rmsnorm, layernorm, rmsnorm
+from repro.sharding import rules as R
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    return init_layernorm(d) if cfg.norm == "layernorm" else init_rmsnorm(d)
+
+
+def norm_apply(cfg: ModelConfig, params, x):
+    if cfg.norm == "layernorm":
+        return layernorm(params, x)
+    return rmsnorm(params, x)
+
+
+def attn_cfg(cfg: ModelConfig, window: int = 0, cross: bool = False,
+             d_kv_input: int = 0, n_heads: int = 0) -> AttentionConfig:
+    return AttentionConfig(
+        d_model=cfg.d_model,
+        n_heads=n_heads or cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads if not n_heads else n_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm,
+        softcap=cfg.attn_softcap,
+        rope_theta=cfg.rope_theta,
+        window=window,
+        cross=cross,
+        d_kv_input=d_kv_input,
+    )
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def stacked_init(init_fn, key: jax.Array, n: int):
+    """vmap an init over n layers -> pytree with leading (n, ...) leaves."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def take_layer(stacked, i):
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def chunked_xent(hidden: jax.Array, labels: jax.Array, table: jax.Array,
+                 softcap: float = 0.0, chunk: int = 2048) -> jax.Array:
+    """Mean token cross-entropy without materializing (B, S, vocab) logits.
+
+    hidden: (B, S, d); labels: (B, S) int32 (-100 = ignore); table: (V, d).
+    Chunks along the SEQ axis (batch stays sharded over the data axes — a
+    flat (B·S,) chunking would dynamic-slice across the sharded batch dim
+    and GSPMD would all-gather the whole hidden state).  The target logit is
+    picked with a one-hot contraction, not take_along_axis: elementwise +
+    reduce partitions cleanly over the model-sharded vocab axis.
+    """
+    b, s, d = hidden.shape
+    chunk = max(1, min(chunk, s))
+    while s % chunk:
+        chunk -= 1
+    n = s // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)  # (n,B,c,d)
+    yc = labels.reshape(b, n, chunk).transpose(1, 0, 2)        # (n,B,c)
+
+    def one(args):
+        hb, yb = args                                  # (B,c,d), (B,c)
+        logits = jnp.einsum("bcd,vd->bcv", hb.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        if softcap > 0.0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logits = R.shard_logits(logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)        # (B,c)
+        onehot = jax.nn.one_hot(jnp.maximum(yb, 0), logits.shape[-1],
+                                dtype=logits.dtype)
+        onehot = R.shard_logits(onehot)
+        picked = jnp.sum(logits * onehot, axis=-1)
+        valid = yb >= 0
+        return jnp.sum(jnp.where(valid, lse - picked, 0.0)), jnp.sum(valid)
+
+    losses, counts = jax.lax.map(one, (hc, yc))
+    return losses.sum() / jnp.maximum(counts.sum(), 1)
+
+
+def head_logits(hidden: jax.Array, table: jax.Array,
+                softcap: float = 0.0) -> jax.Array:
+    """Full logits for decode steps: (..., d) -> (..., V)."""
+    logits = hidden.astype(jnp.float32) @ table.astype(jnp.float32).T
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return R.shard_logits(logits)
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key: jax.Array, logits: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    if temperature <= 0.0:
+        return greedy_sample(logits)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)

@@ -1,0 +1,214 @@
+"""Cross-attention VLM (llama-3.2-vision style): decoder backbone with gated
+cross-attention layers every ``cross_every`` layers.
+
+The modality frontend is a STUB per the assignment: ``images`` inputs are
+precomputed patch embeddings (B, n_image_tokens, d_model) supplied by
+``input_specs()`` — only the transformer backbone is modeled.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import attention as A
+from repro.layers import embeddings as E
+from repro.layers.mlp import init_mlp, mlp_apply
+from repro.models import common as C
+from repro.models import lm as LM
+from repro.sharding import rules as R
+
+
+def _init_cross_block(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    pd = C.param_dtype(cfg)
+    return {
+        "ln1": C.norm_init(cfg),
+        "attn": A.init_attention(ka, C.attn_cfg(cfg, cross=True), pd),
+        "gate_attn": jnp.zeros((), pd),
+        "ln2": C.norm_init(cfg),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.gated_mlp, pd),
+        "gate_mlp": jnp.zeros((), pd),
+    }
+
+
+def _layout(cfg: ModelConfig):
+    p = cfg.cross_every
+    assert cfg.n_layers % p == 0
+    n_groups = cfg.n_layers // p
+    return p, n_groups
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+    p, n_groups = _layout(cfg)
+    keys = jax.random.split(key, 4)
+    pd = C.param_dtype(cfg)
+    params = {
+        "embed": E.init_embedding(keys[0], cfg.vocab_padded, cfg.d_model, pd),
+        "final_norm": C.norm_init(cfg),
+        "self_blocks": C.stacked_init(
+            lambda k: LM._init_dense_block(k, cfg, False), keys[1],
+            n_groups * (p - 1)),
+        "cross_blocks": C.stacked_init(
+            lambda k: _init_cross_block(k, cfg), keys[2], n_groups),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = E.init_unembed(keys[3], cfg.vocab_padded,
+                                           cfg.d_model, pd)
+    return params
+
+
+def _cross_fwd(blk, x, cfg: ModelConfig, images, cross_kv=None):
+    """Gated cross-attention block. Returns (x, (k, v)) for cache seeding."""
+    h = C.norm_apply(cfg, blk["ln1"], x)
+    acfg = C.attn_cfg(cfg, cross=True)
+    if cross_kv is None:
+        h, kv = A.attend(blk["attn"], h, acfg,
+                         jnp.arange(x.shape[1]), kv_x=images,
+                         kv_positions=jnp.arange(images.shape[1]),
+                         q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                         return_kv=True)
+    else:
+        raise NotImplementedError
+    x = x + jnp.tanh(blk["gate_attn"].astype(jnp.float32)).astype(x.dtype) * h
+    x = R.shard_activations(x, sp=cfg.sp_activations)
+    h = C.norm_apply(cfg, blk["ln2"], x)
+    h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg))
+    x = x + jnp.tanh(blk["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * h
+    return R.shard_activations(x, sp=cfg.sp_activations), kv
+
+
+def _cross_decode(blk, x, cfg: ModelConfig, enc_k, enc_v, alpha):
+    h = C.norm_apply(cfg, blk["ln1"], x)
+    h = A.cross_decode_attend(blk["attn"], h, C.attn_cfg(cfg, cross=True),
+                              enc_k, enc_v)
+    x = x + jnp.tanh(blk["gate_attn"].astype(jnp.float32)).astype(x.dtype) * h
+    h = C.norm_apply(cfg, blk["ln2"], x)
+    h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg), decode=True,
+                  alpha=alpha)
+    x = x + jnp.tanh(blk["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * h
+    return x
+
+
+def _stack(params, x, cfg: ModelConfig, positions, images,
+           collect: bool, max_len: int = 0):
+    p, n_groups = _layout(cfg)
+    self_g = jax.tree.map(
+        lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]),
+        params["self_blocks"])
+    aux = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x, aux = carry
+        sg, cg = xs
+        kvs = []
+        for j in range(p - 1):
+            blk = jax.tree.map(lambda a: a[j], sg)
+            x, aux, kv = LM._block_fwd(blk, x, cfg, positions, cfg.window,
+                                       aux)
+            if collect:
+                kvs.append(LM._seed_cache(kv, max_len, cfg))
+        x, ckv = _cross_fwd(cg, x, cfg, images)
+        ys = None
+        if collect:
+            ys = (jax.tree.map(lambda *ls: jnp.stack(ls), *kvs),
+                  {"k": ckv[0], "v": ckv[1]})
+        return (x, aux), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), caches = jax.lax.scan(body, (x, aux),
+                                    (self_g, params["cross_blocks"]))
+    if collect:
+        self_c = jax.tree.map(
+            lambda a: a.reshape((n_groups * (p - 1),) + a.shape[2:]),
+            caches[0])
+        caches = {"self": self_c, "cross": caches[1]}
+    else:
+        caches = None
+    return x, aux, caches
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            images: jax.Array):
+    tokens = R.shard_tokens(tokens)
+    x = LM._embed_in(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, aux, _ = _stack(params, x, cfg, positions, images, False)
+    return C.norm_apply(cfg, params["final_norm"], x), aux
+
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict):
+    hidden, aux = forward(params, cfg, batch["tokens"], batch["images"])
+    loss = C.chunked_xent(hidden, batch["labels"], LM._head_table(params),
+                          cfg.final_softcap, cfg.loss_chunk)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            images: jax.Array, max_len: int):
+    tokens = R.shard_tokens(tokens)
+    x = LM._embed_in(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    x, _, caches = _stack(params, x, cfg, positions, images, True, max_len)
+    x = C.norm_apply(cfg, params["final_norm"], x)
+    logits = C.head_logits(x[:, -1], LM._head_table(params),
+                           cfg.final_softcap)
+    return logits, caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    p, n_groups = _layout(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    kv = A.init_kv_cache(batch, max_len, C.attn_cfg(cfg),
+                         jnp.dtype(cfg.kv_cache_dtype))
+    n_self = n_groups * (p - 1)
+    hd, kvh = cfg.resolved_head_dim, cfg.n_kv_heads
+    return {
+        "self": jax.tree.map(
+            lambda a: R.shard_kv_cache(jnp.zeros((n_self,) + a.shape,
+                                                 a.dtype), cfg.seq_shard_kv),
+            kv),
+        "cross": {
+            "k": jnp.zeros((n_groups, batch, cfg.n_image_tokens, kvh, hd), dt),
+            "v": jnp.zeros((n_groups, batch, cfg.n_image_tokens, kvh, hd), dt),
+        },
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                caches: dict, cache_len: jax.Array):
+    p, n_groups = _layout(cfg)
+    x = LM._embed_in(params, cfg, token)
+    alphas = jnp.asarray(LM._alphas(cfg)).reshape(n_groups, p)
+    self_g = jax.tree.map(
+        lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]),
+        params["self_blocks"])
+    self_c = jax.tree.map(
+        lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]), caches["self"])
+
+    def body(x, xs):
+        sg, cg, sc, cc, al = xs
+        new_kv = []
+        for j in range(p - 1):
+            blk = jax.tree.map(lambda a: a[j], sg)
+            cache = jax.tree.map(lambda a: a[j], sc)
+            x, cache = LM._block_decode(blk, x, cfg, cache, cache_len,
+                                        cfg.window, al[j])
+            new_kv.append(cache)
+        x = _cross_decode(cg, x, cfg, cc["k"], cc["v"], al[p - 1])
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *new_kv)
+
+    x, new_self = jax.lax.scan(
+        body, x, (self_g, params["cross_blocks"], self_c, caches["cross"],
+                  alphas))
+    new_self = jax.tree.map(
+        lambda a: a.reshape((n_groups * (p - 1),) + a.shape[2:]), new_self)
+    x = C.norm_apply(cfg, params["final_norm"], x)
+    logits = C.head_logits(x[:, 0], LM._head_table(params), cfg.final_softcap)
+    return logits, {"self": new_self, "cross": caches["cross"]}
+
+
+prepare_sparse = LM.prepare_sparse

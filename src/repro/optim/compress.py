@@ -1,0 +1,72 @@
+"""Gradient compression for cross-pod (DCN) all-reduce: int8 quantization
+with error feedback (EF-SGD style).
+
+On a (pod, data, model) mesh the intra-pod ICI all-reduce is cheap but the
+cross-pod DCN hop is ~10x slower; quantizing the pod-axis reduction to int8
+cuts that traffic 4x (bf16) with the quantization error carried forward by
+the error-feedback buffer, which preserves convergence (Karimireddy et al.).
+
+Implementation note: under GSPMD we cannot split one all-reduce into
+per-axis phases directly; instead the trainer quantizes gradients *before*
+the psum and dequantizes after, with the EF buffer stored alongside the
+optimizer state.  Exposed as a toggle in TrainerConfig.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict  # same pytree as grads, f32
+
+
+def init_ef(grads_like) -> EFState:
+    return EFState(jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), grads_like))
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState):
+    """Quantize (grads + residual) to int8, keeping the new residual.
+
+    Returns (quantized pytree of (q, scale), new EFState).
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return (q, s), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(ef.residual)
+    qs, res = zip(*[one(g, r) for g, r in zip(flat_g, flat_r)])
+    return (jax.tree.unflatten(treedef, list(qs)),
+            EFState(jax.tree.unflatten(treedef, list(res))))
+
+
+def decompress_grads(qgrads):
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), qgrads,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and not isinstance(x[0], tuple))
+
+
+def compression_error(grads, ef_before: EFState, ef_after: EFState):
+    """Diagnostic: relative L2 error introduced this step."""
+    num = sum(jnp.sum(jnp.square(r)) for r in jax.tree.leaves(ef_after.residual))
+    den = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)) + 1e-12
+    return jnp.sqrt(num / den)

@@ -1,0 +1,109 @@
+"""Serving runtime: prefill + decode with KV caches, SparseInfer decode
+strategies, and a slot-based continuous batching scheduler.
+
+The paper's setting (§V): decode-phase GEMVs dominate; SparseInfer predicts
+per-token activation sparsity and skips neuron rows.  Here the serve path is
+generic over the model family; the SparseInfer strategy is picked by
+``ModelConfig.sparse`` (dense | masked | gather | pallas).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import greedy_sample
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    max_len: int = 256
+    max_new_tokens: int = 32
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (prompt_len,)
+    max_new: int = 32
+    out: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+class Server:
+    """Static-slot continuous batching: finished slots are refilled from the
+    queue between decode steps (batch dim stays fixed for the jit)."""
+
+    def __init__(self, model_mod, cfg: ModelConfig, scfg: ServeConfig,
+                 params: dict, extra_inputs: Optional[dict] = None):
+        self.mod = model_mod
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = (model_mod.prepare_sparse(params)
+                       if cfg.sparse.enabled else params)
+        self.extra = extra_inputs or {}
+
+        def _prefill(params, tokens, *extra):
+            return self.mod.prefill(params, cfg, tokens, *extra,
+                                    max_len=scfg.max_len)
+
+        def _decode(params, tok, caches, length):
+            logits, caches = self.mod.decode_step(params, cfg, tok, caches,
+                                                  length)
+            return greedy_sample(logits), caches
+
+        self.prefill_fn = jax.jit(_prefill)
+        self.decode_fn = jax.jit(_decode)
+
+    # ----------------------------------------------------------- single ---
+    def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, max_new) generated ids (greedy)."""
+        b, plen = prompts.shape
+        extra = tuple(self.extra.values())
+        logits, caches = self.prefill_fn(self.params, jnp.asarray(prompts),
+                                         *extra)
+        tok = greedy_sample(logits)[:, None]
+        out = [tok]
+        length = jnp.int32(plen)
+        for _ in range(max_new - 1):
+            tok, caches = self.decode_fn(self.params, tok, caches, length)
+            tok = tok[:, None]
+            out.append(tok)
+            length = length + 1
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    # ------------------------------------------------------ batched queue --
+    def serve(self, requests: list[Request]) -> list[Request]:
+        """Slot-based scheduler: batches of scfg.batch, refilled as requests
+        finish. Prompts in a batch are right-aligned to the same length."""
+        queue = list(requests)
+        done: list[Request] = []
+        while queue:
+            chunk, queue = queue[:self.scfg.batch], queue[self.scfg.batch:]
+            t0 = time.perf_counter()
+            plen = max(len(r.prompt) for r in chunk)
+            prompts = np.zeros((self.scfg.batch, plen), np.int32)
+            for i, r in enumerate(chunk):
+                prompts[i, plen - len(r.prompt):] = r.prompt
+            max_new = max(r.max_new for r in chunk)
+            gen = self.generate(prompts, max_new)
+            dt = time.perf_counter() - t0
+            for i, r in enumerate(chunk):
+                r.out = gen[i, :r.max_new]
+                r.latency_s = dt
+                done.append(r)
+        return done
+
+
+def throughput_report(requests: list[Request]) -> dict:
+    toks = sum(len(r.out) for r in requests)
+    t = sum(r.latency_s for r in requests)
+    return {"requests": len(requests), "tokens": toks,
+            "total_s": t, "tok_per_s": toks / max(t, 1e-9)}

@@ -1,0 +1,1 @@
+"""Partition-spec rules and mesh-aware sharding helpers."""

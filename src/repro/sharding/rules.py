@@ -1,0 +1,259 @@
+"""Sharding rules: logical-axis partition specs for params and activations.
+
+MaxText-style name+shape heuristics over the param pytree, filtered by the
+axes actually present in the ambient mesh, with divisibility guards.  All
+helpers no-op when no mesh is active, so the same model code runs on a bare
+CPU (smoke tests) and on the production (pod, data, model) mesh.
+
+Modes:
+  ``train``  TP over 'model' + FSDP over ('pod','data') on the other big dim.
+  ``serve``  TP over 'model', replicated over data axes (weights stationary);
+             ``weight_gather`` additionally FSDPs weights over data axes and
+             lets XLA all-gather at use (ZeRO-3-style; for >HBM archs).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m is None or m.empty else m
+
+
+def mesh_axes(mesh=None) -> tuple:
+    mesh = mesh or current_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+_BATCH_AXES: tuple = ("pod", "data")
+
+
+def set_batch_axes(axes: tuple) -> None:
+    """Override the data-parallel axes (e.g. pure-FSDP training pulls
+    'model' into the batch axes — no TP). Call with the default to reset."""
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+
+
+def data_axes(mesh=None) -> tuple:
+    """All data-parallel axes present, filtered by the mesh."""
+    axes = mesh_axes(mesh)
+    return tuple(a for a in _BATCH_AXES if a in axes)
+
+
+def tp_axis(mesh=None):
+    """The tensor-parallel axis, unless consumed as a data axis."""
+    return "model" if ("model" in mesh_axes(mesh)
+                       and "model" not in _BATCH_AXES) else None
+
+
+def axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+    return size
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint that no-ops without an active mesh.
+
+    Spec entries may be axis names, tuples, or None; axes absent from the
+    mesh or not dividing the dim are dropped.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    clean = _filter_spec(spec, x.shape, mesh)
+    if all(s is None for s in clean):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+def _filter_spec(spec, shape, mesh):
+    axes = set(mesh.axis_names)
+    used: set = set()
+    out = []
+    for dim, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        names = (s,) if isinstance(s, str) else tuple(s)
+        # drop axes absent from the mesh or already used by an earlier dim
+        # (pure-FSDP mode pulls 'model' into the data axes, which would
+        # otherwise collide with explicit 'model' entries)
+        names = tuple(n for n in names if n in axes and n not in used)
+        if not names:
+            out.append(None)
+            continue
+        if dim < len(shape) and shape[dim] % axis_size(mesh, names) != 0:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names if len(names) > 1 else names[0])
+    return out
+
+
+# --------------------------------------------------------- param specs ----
+
+# (path regex, spec template) — first match wins. Templates use logical
+# entries: 'tp' = tensor axis, 'fsdp' = data axes (train/weight_gather only),
+# None = replicated. Templates align to the TRAILING dims (leading dims are
+# layer-stacking from scan-over-groups and stay unsharded).
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # deepseek shared experts: a normal TP FFN
+    (r"shared/(wg_t|wu_t|wd_t)$", ("tp", "fsdp")),
+    # MoE expert stacks (E, f, d): EP on experts
+    (r"moe/(wg_t|wu_t|wd_t)$", ("tp", None, "fsdp")),
+    # neuron-major MLP weights (k, d): TP on k (the paper's skip dim)
+    (r"(wg_t|wu_t|wd_t|sign_wg)$", ("tp", "fsdp")),
+    (r"router$", (None, None)),
+    (r"lora_a$", ("fsdp", None)),
+    (r"lora_b", (None, "tp")),
+    # attention in-projections (d, H*hd): TP on heads
+    (r"(wq|wk|wv|up|w_if|in_proj|w)$", ("fsdp", "tp")),
+    (r"(wo|out_proj|down|out)$", ("tp", "fsdp")),
+    (r"(bq|bk|bv|b_if)$", ("tp",)),
+    # embeddings (vocab, d): TP on vocab
+    (r"table$", ("tp", "fsdp")),
+    # mamba2 / xlstm per-head params
+    (r"(A_log|D|dt_bias)$", ("tp",)),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"r$", ("tp", None, None)),
+    # sLSTM fused gate bias (4d,), norm scales etc.: replicated
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: tuple, mode: str, mesh) -> P:
+    """Resolve a partition spec for one param array."""
+    template = None
+    for pat, tmpl in _PARAM_RULES:
+        if re.search(pat, path):
+            template = tmpl
+            break
+    if template is None or len(shape) == 0:
+        return P()
+    pad = len(shape) - len(template)
+    if pad > 0:
+        # leading stack dims (scan-over-groups) stay unsharded
+        template = (None,) * pad + tuple(template)
+    elif pad < 0:
+        template = tuple(template[:len(shape)])
+    fsdp = data_axes(mesh) if mode in ("train", "weight_gather") else ()
+    resolved = []
+    for t in template[:len(shape)]:
+        if t == "tp":
+            resolved.append(tp_axis(mesh))
+        elif t == "fsdp":
+            resolved.append(fsdp if fsdp else None)
+        else:
+            resolved.append(None)
+    clean = _filter_spec(resolved, shape, mesh)
+    return P(*clean)
+
+
+def param_specs(params, mode: str = "train", mesh=None):
+    """Pytree of PartitionSpecs matching ``params`` (by path-name rules)."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return jax.tree.map(lambda _: P(), params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: param_spec(_path_str(path), jnp.shape(x), mode, mesh),
+        params)
+
+
+def named_shardings(specs, mesh=None):
+    mesh = mesh or current_mesh()
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------- activation helpers --
+
+def shard_tokens(x: jax.Array) -> jax.Array:
+    """(B, S) token ids: batch over data axes."""
+    return shard(x, data_axes(), None)
+
+
+def shard_activations(x: jax.Array, sp: bool = False) -> jax.Array:
+    """(B, S, d) residual stream. ``sp=True`` = Megatron-SP (seq over model)."""
+    return shard(x, data_axes(), "model" if sp else None, None)
+
+
+def shard_heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, hd): heads over model."""
+    return shard(x, data_axes(), None, "model", None)
+
+
+def shard_ffn_hidden(x: jax.Array) -> jax.Array:
+    """(B, S, k): FFN hidden over model."""
+    return shard(x, data_axes(), None, "model")
+
+
+def shard_kv_scale(x: jax.Array, seq_shard: bool = False) -> jax.Array:
+    """int8-KV scales (..., B, S, K): same seq-sharding as the cache."""
+    lead = (None,) * (x.ndim - 3)
+    if seq_shard:
+        return shard(x, *lead, None, (*data_axes(), "model"), None)
+    return shard(x, *lead, data_axes(), "model", None)
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """(..., vocab): vocab over model."""
+    spec = [data_axes()] + [None] * (x.ndim - 2) + ["model"]
+    return shard(x, *spec)
+
+
+def kv_model_axis_entries(k_heads: int, head_dim: int, mesh=None) -> tuple:
+    """Place 'model' on the kv-head dim when it divides, else on head_dim.
+
+    GQA head counts (1, 4, 8, 40) rarely divide a 16-way model axis; the
+    head_dim (a contraction dim in attention — GSPMD inserts the psum) is
+    the robust fallback so KV caches never silently replicate.
+    """
+    mesh = mesh or current_mesh()
+    if mesh is None or "model" not in mesh_axes(mesh):
+        return (None, None)
+    msize = axis_size(mesh, "model")
+    if k_heads % msize == 0:
+        return ("model", None)
+    if head_dim % msize == 0:
+        return (None, "model")
+    return (None, None)
+
+
+def shard_kv_cache(x: jax.Array, seq_shard: bool = False) -> jax.Array:
+    """(B, S, K, hd) or stacked (n, B, S, K, hd).
+
+    Decode caches are SEQUENCE-sharded over 'model' (flash-decoding): S
+    always divides the axis (unlike GQA head counts), the decode attention
+    dot partitions along its S free/contraction dims without resharding,
+    and XLA inserts the max/sum softmax combine.  Long-context mode
+    (batch=1) additionally spreads S over the data axes.
+    """
+    lead = (None,) * (x.ndim - 4)
+    if seq_shard:
+        return shard(x, *lead, None, (*data_axes(), "model"), None, None)
+    return shard(x, *lead, data_axes(), "model", None, None)

@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictor as P
+from repro.core.sparse_mlp import (SparseInferConfig, dense_mlp, gather_mlp,
+                                   init_gated_mlp, masked_mlp,
+                                   prepare_sparse_params)
+from repro.layers.moe import MoEConfig, _capacity, init_moe, moe_apply
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+
+class TestSparseMLPInvariants:
+    @given(st.integers(0, 10**6), st.floats(1.0, 1.5))
+    @settings(max_examples=10, deadline=None)
+    def test_sparse_output_is_dense_minus_skipped(self, seed, alpha):
+        """masked path == dense path restricted to kept neurons (exact)."""
+        d, k = 64, 256
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(seed), d, k, jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, d))
+        cfg = SparseInferConfig(enabled=True, activation="relu")
+        y = masked_mlp(params, x, cfg, alpha=alpha)
+        m = P.margins(params["sign_wg"], P.pack_signs(x), d, alpha)
+        keep = (m <= 0).astype(x.dtype)
+        h = jax.nn.relu(x @ params["wg_t"].T) * keep
+        h = h * (x @ params["wu_t"].T)
+        want = h @ params["wd_t"]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=8, deadline=None)
+    def test_full_capacity_alpha_inf_equals_dense(self, seed):
+        """capacity=k + alpha=inf-ish => nothing skipped => dense output."""
+        d, k = 64, 256
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(seed), d, k, jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, d))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=1.0, group_size=1)
+        y = gather_mlp(params, x, cfg, alpha=1e6)
+        want = dense_mlp(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=8, deadline=None)
+    def test_gather_error_shrinks_with_capacity(self, seed):
+        d, k = 64, 256
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(seed), d, k, jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, d))
+        base = SparseInferConfig(enabled=True, activation="relu",
+                                 group_size=1)
+        ref = dense_mlp(params, x, base)
+
+        def err(frac):
+            cfg = dataclasses.replace(base, capacity_frac=frac)
+            y = gather_mlp(params, x, cfg, alpha=1e6)  # threshold off
+            return float(jnp.linalg.norm(y - ref))
+
+        # with the threshold disabled, capacity is the only knob: keeping
+        # more top-margin neurons can only reduce the error
+        assert err(1.0) <= err(0.5) + 1e-5
+        assert err(0.5) <= err(0.1) + 1e-5
+
+
+class TestMoEInvariants:
+    @given(st.integers(1, 64), st.floats(0.1, 4.0))
+    @settings(max_examples=20, deadline=None)
+    def test_capacity_positive_and_aligned(self, tokens, cf):
+        cfg = MoEConfig(d_model=8, d_expert=8, n_experts=8, top_k=2,
+                        capacity_factor=cf)
+        c = _capacity(cfg, tokens, 8)
+        assert c >= 8 and c % 8 == 0
+
+    @given(st.integers(0, 10**5))
+    @settings(max_examples=6, deadline=None)
+    def test_moe_permutation_invariance_of_total_mass(self, seed):
+        """Shuffling tokens within a group permutes outputs identically
+        (dispatch must not leak across token positions)."""
+        cfg = MoEConfig(d_model=16, d_expert=8, n_experts=4, top_k=2,
+                        capacity_factor=8.0)
+        p = init_moe(jax.random.PRNGKey(seed), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (6, 16))
+        perm = np.random.default_rng(seed).permutation(6)
+        y1, _ = moe_apply(p, x, cfg)
+        y2, _ = moe_apply(p, x[perm], cfg)
+        np.testing.assert_allclose(np.asarray(y1[perm]), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestOptimizerInvariants:
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=6, deadline=None)
+    def test_adamw_descends_quadratic(self, seed):
+        w0 = jax.random.normal(jax.random.PRNGKey(seed), (8, 8))
+        params = {"w": w0}
+        state = init_adamw(params)
+        cfg = AdamWConfig(lr_peak=0.05, warmup_steps=1, decay_steps=100,
+                          weight_decay=0.0)
+        loss0 = float(jnp.sum(w0 ** 2))
+        for _ in range(20):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = adamw_update(cfg, params, grads, state)
+        assert float(jnp.sum(params["w"] ** 2)) < loss0
+
+    @given(st.floats(0.1, 10.0), st.integers(0, 10**4))
+    @settings(max_examples=10, deadline=None)
+    def test_grad_clip_bounds_update(self, scale, seed):
+        params = {"w": jnp.zeros((4, 4))}
+        state = init_adamw(params)
+        cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=0, decay_steps=10,
+                          clip_norm=1.0, weight_decay=0.0)
+        g = jax.random.normal(jax.random.PRNGKey(seed), (4, 4)) * scale
+        _, _, metrics = adamw_update(cfg, params, {"w": g}, state)
+        assert float(metrics["grad_norm"]) >= 0
+
+
+class TestPackedSignInvariants:
+    @given(st.integers(1, 300))
+    @settings(max_examples=20, deadline=None)
+    def test_packed_width_bound(self, d):
+        w = P.packed_width(d)
+        assert (w - 1) * 32 < d <= w * 32
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=10, deadline=None)
+    def test_negating_input_flips_all_counts(self, seed):
+        """sign(-x) != sign(x) everywhere (x has no exact zeros a.s.), so
+        N_neg(-x) = d - N_neg(x)."""
+        d, k = 96, 32
+        kw, kx = jax.random.split(jax.random.PRNGKey(seed))
+        w = jax.random.normal(kw, (k, d))
+        x = jax.random.normal(kx, (d,))
+        n1 = np.asarray(P.neg_counts(P.pack_signs(w), P.pack_signs(x)))
+        n2 = np.asarray(P.neg_counts(P.pack_signs(w), P.pack_signs(-x)))
+        np.testing.assert_array_equal(n1 + n2, d)

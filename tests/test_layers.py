@@ -1,0 +1,257 @@
+"""Layer-substrate tests: attention oracle, SSM/xLSTM recurrence-vs-scan
+consistency, MoE dispatch semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.layers.attention import (AttentionConfig, attend, decode_attend,
+                                    combine_decode_partials,
+                                    decode_attend_partial, init_attention,
+                                    init_kv_cache, update_kv_cache,
+                                    _project_qkv)
+from repro.layers.rope import apply_rope
+from repro.layers.mamba2 import (Mamba2Config, Mamba2State, init_mamba2,
+                                 init_mamba2_state, mamba2_decode,
+                                 mamba2_forward)
+from repro.layers.moe import MoEConfig, init_moe, moe_apply
+from repro.layers.xlstm import (XLSTMConfig, init_mlstm, init_mlstm_state,
+                                init_slstm, init_slstm_state, mlstm_decode,
+                                mlstm_forward, slstm_decode, slstm_forward)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_attention(p, x, cfg, pos):
+    q, k, v = _project_qkv(p, x, cfg)
+    if not cfg.cross:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    b, s, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    qg = q.reshape(b, s, kvh, h // kvh, hd)
+    sc = jnp.einsum("bqkrh,btkh->bkrqt", qg, k) * hd ** -0.5
+    if cfg.softcap:
+        sc = jnp.tanh(sc / cfg.softcap) * cfg.softcap
+    mask = pos[:, None] >= pos[None, :]
+    if cfg.window:
+        mask &= (pos[:, None] - pos[None, :]) < cfg.window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    a = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bkrqt,btkh->bqkrh", a, v).reshape(b, s, h * hd)
+    return o @ p["wo"]
+
+
+class TestAttention:
+    @pytest.mark.parametrize("window,softcap,qk_norm,bias", [
+        (0, 0.0, False, False), (8, 0.0, False, False),
+        (0, 30.0, False, False), (0, 0.0, True, True)])
+    def test_flash_vs_naive(self, window, softcap, qk_norm, bias):
+        cfg = AttentionConfig(d_model=64, n_heads=4, n_kv_heads=2,
+                              head_dim=16, window=window, softcap=softcap,
+                              qk_norm=qk_norm, qkv_bias=bias)
+        p = init_attention(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64))
+        pos = jnp.arange(24)
+        y = attend(p, x, cfg, pos, q_chunk=8, kv_chunk=8)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(naive_attention(p, x, cfg, pos)),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_decode_matches_forward(self):
+        cfg = AttentionConfig(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
+        p = init_attention(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 64))
+        pos = jnp.arange(16)
+        y_ref = naive_attention(p, x, cfg, pos)
+        _, (k, v) = attend(p, x[:, :15], cfg, pos[:15], return_kv=True)
+        cache = init_kv_cache(2, 20, cfg, jnp.float32)
+        cache = update_kv_cache(cache, k, v, jnp.int32(0))
+        out, cache = decode_attend(p, x[:, 15:16], cfg, cache, jnp.int32(15))
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(y_ref[:, 15]), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_flash_decode_combine(self):
+        """Sequence-sharded partial attention combine == full attention."""
+        cfg = AttentionConfig(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16)
+        b, s = 1, 16
+        kc = jax.random.normal(jax.random.PRNGKey(3), (b, s, 2, 16))
+        vc = jax.random.normal(jax.random.PRNGKey(4), (b, s, 2, 16))
+        q = jax.random.normal(jax.random.PRNGKey(5), (b, 1, 2, 16))
+        kvpos = jnp.arange(s)
+        o_full, l_full, m_full = decode_attend_partial(
+            q, kc, vc, cfg, kvpos, jnp.int32(s - 1))
+        want = o_full / l_full[..., None]
+
+        # two shards combined via pmax/psum inside shard_map
+        import os
+        from jax.sharding import PartitionSpec as Ps
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+
+        def shard_fn(kc_l, vc_l, kvpos_l):
+            o, l, m = decode_attend_partial(q, kc_l, vc_l, cfg, kvpos_l,
+                                            jnp.int32(s - 1))
+            return combine_decode_partials(o, l, m, "data")
+
+        # emulate two shards manually (single device: compute both halves)
+        o1, l1, m1 = decode_attend_partial(q, kc[:, :8], vc[:, :8], cfg,
+                                           kvpos[:8], jnp.int32(s - 1))
+        o2, l2, m2 = decode_attend_partial(q, kc[:, 8:], vc[:, 8:], cfg,
+                                           kvpos[8:], jnp.int32(s - 1))
+        m_g = jnp.maximum(m1, m2)
+        l_g = l1 * jnp.exp(m1 - m_g) + l2 * jnp.exp(m2 - m_g)
+        o_g = o1 * jnp.exp(m1 - m_g)[..., None] + o2 * jnp.exp(m2 - m_g)[..., None]
+        got = o_g / l_g[..., None]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMamba2:
+    CFG = Mamba2Config(d_model=32, d_state=8, head_dim=8, expand=2, chunk=4)
+
+    def test_chunk_invariance(self):
+        p = init_mamba2(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+        y1 = mamba2_forward(p, x, self.CFG)
+        y2 = mamba2_forward(p, x, dataclasses.replace(self.CFG, chunk=16))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_decode_matches_forward(self):
+        p = init_mamba2(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32)) * 0.5
+        y = mamba2_forward(p, x, self.CFG)
+        st = init_mamba2_state(2, self.CFG, jnp.float32)
+        outs = []
+        for t in range(12):
+            o, st = mamba2_decode(p, x[:, t:t + 1], st, self.CFG)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(y), rtol=1e-4, atol=1e-5)
+
+    def test_prefill_state_handoff(self):
+        p = init_mamba2(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, 32)) * 0.5
+        y_full = mamba2_forward(p, x, self.CFG)
+        _, st = mamba2_forward(p, x[:, :8], self.CFG, return_state=True)
+        o, _ = mamba2_decode(p, x[:, 8:9], st, self.CFG)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(y_full[:, 8:9]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestXLSTM:
+    CFG = XLSTMConfig(d_model=32, n_heads=4, expand=2)
+
+    def test_mlstm_decode_matches_forward(self):
+        p = init_mlstm(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32)) * 0.5
+        y = mlstm_forward(p, x, self.CFG)
+        st = init_mlstm_state(2, self.CFG, jnp.float32)
+        outs = []
+        for t in range(10):
+            o, st = mlstm_decode(p, x[:, t:t + 1], st, self.CFG)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(y), rtol=1e-4, atol=1e-5)
+
+    def test_slstm_decode_matches_forward(self):
+        p = init_slstm(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 10, 32)) * 0.5
+        y = slstm_forward(p, x, self.CFG)
+        st = init_slstm_state(2, self.CFG)
+        outs = []
+        for t in range(10):
+            o, st = slstm_decode(p, x[:, t:t + 1], st, self.CFG)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                                   np.asarray(y), rtol=1e-4, atol=1e-5)
+
+    def test_mlstm_stability_long(self):
+        """Exp gating must stay finite over long sequences (stabilizer m)."""
+        p = init_mlstm(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 256, 32)) * 2.0
+        y = mlstm_forward(p, x, self.CFG)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+class TestMoE:
+    CFG = MoEConfig(d_model=32, d_expert=16, n_experts=8, top_k=2,
+                    capacity_factor=8.0, activation="silu")
+
+    def test_output_finite_and_shaped(self):
+        p = init_moe(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 7, 32))
+        y, aux = moe_apply(p, x, self.CFG)
+        assert y.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert float(aux) > 0
+
+    def test_matches_naive_routing_at_high_capacity(self):
+        """With capacity >> tokens, sort-dispatch must equal naive top-k."""
+        p = init_moe(KEY, self.CFG)
+        x = jax.random.normal(jax.random.PRNGKey(2), (10, 32))
+        y, _ = moe_apply(p, x, self.CFG)
+
+        from repro.layers.moe import router_probs, _topk_route, _expert_ffn
+        probs, _ = router_probs(p, x, self.CFG)
+        w, idx = _topk_route(probs, self.CFG)
+        want = jnp.zeros_like(x)
+        for t in range(10):
+            for j in range(self.CFG.top_k):
+                e = int(idx[t, j])
+                xe = x[t:t + 1][None]           # (1, 1, d)
+                ye = _expert_ffn(p["wg_t"][e:e + 1], p["wu_t"][e:e + 1],
+                                 p["wd_t"][e:e + 1], xe, "silu")[0, 0]
+                want = want.at[t].add(w[t, j] * ye)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_capacity_drops_lowest_weight(self):
+        cfg = dataclasses.replace(self.CFG, capacity_factor=0.01)
+        p = init_moe(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, 32))
+        y, _ = moe_apply(p, x, cfg)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_shared_experts(self):
+        cfg = dataclasses.replace(self.CFG, n_shared=2, d_shared=32)
+        p = init_moe(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (5, 32))
+        y, _ = moe_apply(p, x, cfg)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+class TestInt8KVCache:
+    def test_int8_decode_close_to_bf16(self):
+        """Quantized KV (factored scales) tracks the f32-cache decode."""
+        import dataclasses as dc
+        from repro.configs.base import ModelConfig
+        from repro.models import lm
+        base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    d_ff=128, vocab=256, max_seq=32, dtype="float32",
+                    param_dtype="float32", attn_chunk=8, loss_chunk=64,
+                    remat=False)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 256)
+        outs = {}
+        for kvdt in ("float32", "int8"):
+            cfg = ModelConfig(name="t", family="dense",
+                              kv_cache_dtype=kvdt, **base)
+            params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+            _, caches = lm.prefill(params, cfg, toks[:, :-1], max_len=16)
+            ld, _ = lm.decode_step(params, cfg, toks[:, -1:], caches,
+                                   jnp.int32(9))
+            outs[kvdt] = np.asarray(ld)
+        err = np.abs(outs["int8"] - outs["float32"]).max()
+        assert err < 0.15, err  # ~1% quantization error through 2 layers
+
+    def test_quantize_roundtrip(self):
+        from repro.layers.attention import _quantize_kv
+        x = jax.random.normal(KEY, (2, 4, 2, 16))
+        q, s = _quantize_kv(x)
+        back = q.astype(jnp.float32) * np.asarray(s, np.float32)[..., None]
+        rel = float(jnp.abs(back - x).max() / jnp.abs(x).max())
+        assert rel < 0.02

@@ -1,0 +1,62 @@
+"""Pipeline-parallelism tests: GPipe streaming on fake devices must equal
+the sequential layer stack bit-for-bit (subprocess: needs >1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.sharding.pipeline import bubble_fraction
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PIPE_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.sharding.pipeline import pipeline_apply, stage_params
+
+n_layers, d, b = 8, 16, 12
+key = jax.random.PRNGKey(0)
+ws = jax.random.normal(key, (n_layers, d, d)) * (d ** -0.5)
+x = jax.random.normal(jax.random.PRNGKey(1), (b, d))
+
+def block_fn(w_stage, xm):
+    def one(xm, w):
+        return jax.nn.relu(xm @ w), None
+    xm, _ = jax.lax.scan(one, xm, w_stage)
+    return xm
+
+# sequential reference
+ref = block_fn(ws, x)
+
+mesh = make_mesh((4,), ("pipe",))
+staged = stage_params(ws, 4)
+with mesh:
+    out = pipeline_apply(block_fn, staged, x, mesh=mesh, n_microbatches=4)
+
+err = float(jnp.abs(out - ref).max())
+print(json.dumps({"err": err}))
+"""
+
+
+class TestBubble:
+    def test_bubble_fraction(self):
+        assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+        assert bubble_fraction(1, 8) == 0.0
+        assert bubble_fraction(4, 16) < 0.17
+
+
+@pytest.mark.slow
+class TestGPipe:
+    def test_pipeline_matches_sequential(self):
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", PIPE_PROG], env=env,
+                             capture_output=True, text=True, timeout=560)
+        assert out.returncode == 0, out.stderr[-2000:]
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        assert rec["err"] < 1e-5, rec

@@ -1,0 +1,148 @@
+"""Unit + property tests for the SparseInfer predictor (paper §IV-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictor as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestPacking:
+    @given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_pack_unpack_roundtrip(self, d, seed):
+        v = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (3, d))
+        packed = P.pack_signs(v)
+        assert packed.shape == (3, P.packed_width(d))
+        back = P.unpack_signs(packed, d)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(v) < 0)
+
+    def test_pack_dtypes(self):
+        for dt in (jnp.float32, jnp.bfloat16, jnp.float16, jnp.int8):
+            v = (jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+                 ).astype(dt)
+            back = P.unpack_signs(P.pack_signs(v), 64)
+            np.testing.assert_array_equal(
+                np.asarray(back), np.asarray(v.astype(jnp.float32)) < 0)
+
+    def test_zero_packs_positive(self):
+        v = jnp.zeros((1, 32))
+        assert int(P.pack_signs(v)[0, 0]) == 0
+
+
+class TestCountsAndMargins:
+    def _naive_neg_counts(self, w, x):
+        # count sign disagreements directly
+        return ((w < 0) != (x < 0)[None, :]).sum(-1)
+
+    @given(st.integers(1, 97), st.integers(1, 33), st.integers(0, 10**6))
+    @settings(max_examples=25, deadline=None)
+    def test_neg_counts_match_naive(self, d, k, seed):
+        kw, kx = jax.random.split(jax.random.PRNGKey(seed))
+        w = jax.random.normal(kw, (k, d))
+        x = jax.random.normal(kx, (d,))
+        counts = P.neg_counts(P.pack_signs(w), P.pack_signs(x))
+        np.testing.assert_array_equal(
+            np.asarray(counts), np.asarray(self._naive_neg_counts(w, x)))
+
+    def test_padding_lanes_count_positive(self):
+        # d=33 pads 31 lanes; they must never contribute to N_neg
+        w = -jnp.ones((4, 33))
+        x = jnp.ones((33,))
+        counts = P.neg_counts(P.pack_signs(w), P.pack_signs(x))
+        np.testing.assert_array_equal(np.asarray(counts), 33)
+
+    @given(st.floats(0.8, 1.2), st.floats(0.8, 1.2), st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_alpha_monotone(self, a1, a2, seed):
+        """Larger alpha => conservativeness: skip set shrinks (paper eq. 2)."""
+        lo, hi = sorted([a1, a2])
+        kw, kx = jax.random.split(jax.random.PRNGKey(seed))
+        w = jax.random.normal(kw, (64, 96))
+        x = jax.random.normal(kx, (96,))
+        pw, px = P.pack_signs(w), P.pack_signs(x)
+        skip_lo = np.asarray(P.predict_sparse(pw, px, 96, lo))
+        skip_hi = np.asarray(P.predict_sparse(pw, px, 96, hi))
+        assert (skip_hi <= skip_lo).all()  # hi-alpha skips are a subset
+
+    def test_alpha_schedule(self):
+        s = P.AlphaSchedule(base=1.0, early=1.03, early_frac=0.5)
+        al = s.alphas(40)
+        assert (al[:20] == np.float32(1.03)).all()
+        assert (al[20:] == np.float32(1.0)).all()
+
+
+class TestStatisticalAccuracy:
+    """The paper's core hypothesis: majority sign of products predicts the
+    sign of the inner product for zero-mean Gaussian W and x."""
+
+    def test_predictor_precision_gaussian_iid(self):
+        """Worst case: 50% true sparsity => decision boundary crowded; the
+        majority-sign vote must still clearly beat chance."""
+        k, d = 4096, 1024
+        kw, kx = jax.random.split(jax.random.PRNGKey(0))
+        w = jax.random.normal(kw, (k, d)) / np.sqrt(d)
+        x = jax.random.normal(kx, (d,))
+        skip = np.asarray(P.predict_sparse(P.pack_signs(w), P.pack_signs(x),
+                                           d, 1.0))
+        actual_neg = np.asarray(w @ x) <= 0
+        precision = (skip & actual_neg).sum() / max(skip.sum(), 1)
+        recall = (skip & actual_neg).sum() / max(actual_neg.sum(), 1)
+        assert precision > 0.70, precision
+        assert recall > 0.55, recall
+
+    def test_predictor_precision_relufied_regime(self):
+        """The paper's regime: ReLU-fied gates are ~90% negative => wide
+        sign-vote margins => Fig 3's >95% precision reproduces."""
+        k, d = 4096, 1024
+        kw, kx = jax.random.split(jax.random.PRNGKey(0))
+        w = (jax.random.normal(kw, (k, d)) - 0.25) / np.sqrt(d)
+        x = jax.random.normal(kx, (d,)) + 0.25
+        pre = np.asarray(w @ x)
+        assert 0.85 < (pre <= 0).mean() < 1.0  # ~90%+-sparsity regime
+        skip = np.asarray(P.predict_sparse(P.pack_signs(w), P.pack_signs(x),
+                                           d, 1.0))
+        actual_neg = pre <= 0
+        precision = (skip & actual_neg).sum() / max(skip.sum(), 1)
+        recall = (skip & actual_neg).sum() / max(actual_neg.sum(), 1)
+        assert precision > 0.95, precision
+        assert recall > 0.80, recall
+
+    def test_alpha_raises_precision(self):
+        k, d = 4096, 1024
+        kw, kx = jax.random.split(jax.random.PRNGKey(1))
+        w = jax.random.normal(kw, (k, d)) / np.sqrt(d)
+        x = jax.random.normal(kx, (d,))
+        actual_neg = np.asarray(w @ x) <= 0
+        pw, px = P.pack_signs(w), P.pack_signs(x)
+
+        def prec(alpha):
+            skip = np.asarray(P.predict_sparse(pw, px, d, alpha))
+            return (skip & actual_neg).sum() / max(skip.sum(), 1)
+
+        assert prec(1.1) >= prec(1.0) - 1e-9
+
+
+class TestPaperTableI:
+    """Exact reproduction of the paper's op-count/memory table."""
+
+    def test_table1_13b(self):
+        d, k = 5120, 13824
+        assert P.predictor_op_count(d, k) == 2_211_840          # 2.211e6
+        assert P.mlp_macs(d, k) == 212_336_640                  # 2.123e8
+        # §V-A2: 13824 x 160 x 4B x 40 layers = 337.5 MB
+        assert P.predictor_sign_bytes(d, k) * 40 == int(337.5 * 2**20)
+
+    def test_powerinfer_comparison(self):
+        # DEJAVU predictor @ rank 1024 (paper §V-A): 1.94e7 ops, 1480 MB
+        d, k, r = 5120, 13824, 1024
+        ops = d * r + r * k
+        assert ops == 19_398_656
+        mem_mb = (d * r + r * k) * 2 * 40 / 2**20
+        assert abs(mem_mb - 1480) < 1
+        # SparseInfer advantage ratios claimed in the paper
+        assert ops / P.predictor_op_count(d, k) > 8         # "order of magnitude"
+        assert mem_mb / (P.predictor_sign_bytes(d, k) * 40 / 2**20) > 4.3

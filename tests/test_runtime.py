@@ -1,0 +1,209 @@
+"""Runtime/fault-tolerance tests: checkpoint roundtrip, bitwise resume after
+an injected failure, async writes, gradient compression, straggler watchdog,
+and the serving loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, DataIterator, SyntheticSource
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig
+from repro.optim import compress as GC
+from repro.runtime.server import Request, Server, ServeConfig
+from repro.runtime.trainer import StepWatchdog, Trainer, TrainerConfig
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, max_seq=32,
+                  dtype="float32", param_dtype="float32", attn_chunk=8,
+                  loss_chunk=64, remat=False)
+DCFG = DataConfig(vocab=128, seq_len=16, global_batch=4)
+OPT = AdamWConfig(lr_peak=1e-3, warmup_steps=2, decay_steps=50)
+
+
+def make_trainer(tmp, **kw):
+    tcfg = TrainerConfig(steps=6, ckpt_every=3, ckpt_dir=str(tmp),
+                         log_every=100, **kw)
+    t = Trainer(lm, CFG, tcfg, OPT, DCFG)
+    t.init_state(seed=0)
+    return t
+
+
+class TestData:
+    def test_deterministic_and_skippable(self):
+        it1 = DataIterator(DCFG)
+        b0 = next(it1)
+        b1 = next(it1)
+        it2 = DataIterator(DCFG)
+        it2.skip_to(1)
+        np.testing.assert_array_equal(next(it2)["tokens"], b1["tokens"])
+        it2.skip_to(0)
+        np.testing.assert_array_equal(next(it2)["tokens"], b0["tokens"])
+
+    def test_host_sharding_disjoint(self):
+        a = SyntheticSource(DataConfig(vocab=128, seq_len=16, global_batch=4,
+                                       n_hosts=2, host_id=0)).batch_at(0)
+        b = SyntheticSource(DataConfig(vocab=128, seq_len=16, global_batch=4,
+                                       n_hosts=2, host_id=1)).batch_at(0)
+        assert a["tokens"].shape[0] == 2
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+        m.save(5, tree, extra={"note": 1})
+        got, extra = m.restore(tree)
+        assert extra == {"note": 1}
+        np.testing.assert_array_equal(np.asarray(got["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_latest_discovery_and_gc(self, tmp_path):
+        m = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"a": jnp.zeros(2)}
+        for s in (1, 2, 3, 4):
+            m.save(s, tree)
+        assert m.latest_step() == 4
+        assert m.all_steps() == [3, 4]  # gc kept last 2
+
+    def test_async_write(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        tree = {"a": jnp.ones((64, 64))}
+        m.save(1, tree, blocking=False)
+        m.wait()
+        assert m.latest_step() == 1
+
+    def test_tree_mismatch_rejected(self, tmp_path):
+        m = CheckpointManager(str(tmp_path))
+        m.save(1, {"a": jnp.zeros(2)})
+        with pytest.raises(ValueError, match="mismatch"):
+            m.restore({"zzz": jnp.zeros(2)})
+
+
+class TestTrainerFaultTolerance:
+    def test_loss_decreases(self, tmp_path):
+        t = make_trainer(tmp_path)
+        hist = t.run(steps=8)
+        assert hist[-1]["loss"] < hist[0]["loss"] + 0.5  # noisy but sane
+        assert np.isfinite([h["loss"] for h in hist]).all()
+
+    def test_bitwise_resume_after_crash(self, tmp_path):
+        """Crash at step 5, resume from ckpt@3 => identical trajectory."""
+        t1 = make_trainer(tmp_path / "a", async_ckpt=False)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            t1.run(steps=10, fail_at=5)
+        # fresh process-equivalent: new trainer, same ckpt dir
+        t2 = make_trainer(tmp_path / "a", async_ckpt=False)
+        assert t2.maybe_resume()
+        assert t2.global_step == 3
+        t2.run(steps=3)  # steps 4..6
+
+        # reference: uninterrupted run
+        t3 = make_trainer(tmp_path / "b", async_ckpt=False)
+        t3.run(steps=6)
+        ref = {h["step"]: h["loss"] for h in t3.history}
+        got = {h["step"]: h["loss"] for h in t2.history}
+        for s in (4, 5, 6):
+            np.testing.assert_allclose(got[s], ref[s], rtol=0, atol=0)
+
+    def test_elastic_restore_changes_placement(self, tmp_path):
+        """Checkpoint restores under different sharding (device_put path)."""
+        t = make_trainer(tmp_path, async_ckpt=False)
+        t.run(steps=3)
+        state = {"params": t.params, "mu": t.opt_state.mu,
+                 "nu": t.opt_state.nu}
+        # restore with explicit shardings (single-device here; the API path
+        # is identical on a resized mesh — see launch/elastic.py)
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+        got, _ = t.ckpt.restore(state, shardings=sh)
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(got)[0]),
+            np.asarray(jax.tree.leaves(state)[0]))
+
+
+class TestGradCompression:
+    def test_int8_roundtrip_small_error(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.01}
+        ef = GC.init_ef(g)
+        q, ef2 = GC.compress_grads(g, ef)
+        deq = GC.decompress_grads(q)
+        rel = float(jnp.linalg.norm(deq["w"] - g["w"]) /
+                    jnp.linalg.norm(g["w"]))
+        assert rel < 0.02
+
+    def test_error_feedback_accumulates(self):
+        """EF: quantization error is carried, so the MEAN of dequantized
+        grads over steps converges to the true mean."""
+        g = {"w": jnp.full((32,), 0.003)}
+        ef = GC.init_ef(g)
+        total = jnp.zeros((32,))
+        for _ in range(50):
+            q, ef = GC.compress_grads(g, ef)
+            total = total + GC.decompress_grads(q)["w"]
+        np.testing.assert_allclose(np.asarray(total / 50),
+                                   np.asarray(g["w"]), rtol=0.05)
+
+    def test_training_with_compression_converges(self, tmp_path):
+        t = make_trainer(tmp_path, grad_compression=True)
+        hist = t.run(steps=6)
+        assert np.isfinite([h["loss"] for h in hist]).all()
+
+
+class TestStragglerWatchdog:
+    def test_flags_outlier(self):
+        wd = StepWatchdog(z=3.0, window=10)
+        for i in range(10):
+            wd.observe(i, 0.10 + 0.001 * (i % 3))
+        assert wd.observe(10, 1.0) is True
+        assert wd.observe(11, 0.10) is False
+
+    def test_data_skip_ahead_rejoins(self):
+        """A straggling host can skip to the global step without replay."""
+        it = DataIterator(DCFG)
+        for _ in range(3):
+            next(it)
+        fresh = DataIterator(DCFG)
+        fresh.skip_to(3)
+        np.testing.assert_array_equal(next(it)["tokens"],
+                                      next(fresh)["tokens"])
+
+
+class TestServer:
+    def test_generate_and_scheduler(self):
+        params = lm.init_lm(jax.random.PRNGKey(0), CFG)
+        srv = Server(lm, CFG, ServeConfig(batch=2, max_len=48,
+                                          max_new_tokens=4), params)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i, prompt=rng.integers(0, 128, size=5 + i),
+                        max_new=4) for i in range(5)]
+        done = srv.serve(reqs)
+        assert len(done) == 5
+        for r in done:
+            assert r.out.shape == (4,)
+            assert (r.out >= 0).all()
+
+    def test_sparse_decode_matches_greedy_mostly(self):
+        """SparseInfer decode must agree with dense decode on most greedy
+        tokens at conservative alpha (accuracy proxy, paper Tables II/III)."""
+        import dataclasses as dc
+        from repro.configs.registry import default_sparse
+        cfg_s = CFG.replace(sparse=default_sparse(
+            activation="relu"), activation="relu")
+        cfg_d = cfg_s.replace(sparse=dc.replace(cfg_s.sparse, enabled=False))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg_s)
+        prompts = np.random.default_rng(1).integers(0, 128, size=(2, 8))
+        gen_d = Server(lm, cfg_d, ServeConfig(batch=2, max_len=32),
+                       params).generate(prompts, 8)
+        gen_s = Server(lm, cfg_s, ServeConfig(batch=2, max_len=32),
+                       params).generate(prompts, 8)
+        agree = (gen_d == gen_s).mean()
+        assert agree > 0.5, agree

@@ -1,0 +1,99 @@
+"""Property tests for capacity selection / mask algebra (DESIGN.md §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictor as P
+from repro.core import selection as S
+
+
+class TestCapacitySelect:
+    @given(st.integers(4, 128), st.integers(1, 128), st.integers(0, 10**6))
+    @settings(max_examples=30, deadline=None)
+    def test_selected_equals_predicted_when_capacity_suffices(
+            self, k, cap, seed):
+        m = jax.random.normal(jax.random.PRNGKey(seed), (k,))
+        predicted = np.asarray(m <= 0)
+        sel = S.capacity_select(m, cap)
+        cap_eff = min(cap, k)
+        got = np.zeros(k, bool)
+        idx = np.asarray(sel.indices)
+        val = np.asarray(sel.valid)
+        got[idx[val]] = True
+        if predicted.sum() <= cap_eff:
+            np.testing.assert_array_equal(got, predicted)
+        else:
+            # graceful degradation: top-capacity by margin, all predicted
+            assert got.sum() == cap_eff
+            assert (predicted[got]).all()
+
+    @given(st.integers(1, 64), st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_valid_prefix_compaction(self, cap, seed):
+        m = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+        sel = S.capacity_select(m, cap)
+        v = np.asarray(sel.valid)
+        # valid entries form a contiguous prefix
+        assert (np.diff(v.astype(int)) <= 0).all()
+        assert int(sel.count) == v.sum()
+
+    def test_mask_roundtrip(self):
+        m = jax.random.normal(jax.random.PRNGKey(0), (64,))
+        sel = S.capacity_select(m, 64)
+        mask = np.asarray(S.mask_from_selection(sel, 64))
+        np.testing.assert_array_equal(mask, np.asarray(m <= 0))
+
+
+class TestGroupsAndUnion:
+    @given(st.sampled_from([1, 2, 4, 8, 16]), st.integers(0, 10**6))
+    @settings(max_examples=20, deadline=None)
+    def test_group_margin_survival(self, g, seed):
+        m = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+        gm = np.asarray(S.group_margins(m, g))
+        keep = np.asarray(m <= 0).reshape(-1, g).any(-1)
+        np.testing.assert_array_equal(gm <= 0, keep)
+
+    def test_union_margin_is_min(self):
+        m = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        um = np.asarray(S.union_margin(m))
+        np.testing.assert_allclose(um, np.asarray(m).min(0))
+
+    @given(st.integers(1, 8), st.integers(0, 10**6))
+    @settings(max_examples=15, deadline=None)
+    def test_union_only_grows_survivors(self, b, seed):
+        """A neuron kept by any token is kept by the union (DESIGN.md §2)."""
+        m = jax.random.normal(jax.random.PRNGKey(seed), (b, 64))
+        union_keep = np.asarray(S.union_margin(m) <= 0)
+        per_tok = np.asarray(m <= 0)
+        np.testing.assert_array_equal(union_keep, per_tok.any(0))
+
+
+class TestCoactivation:
+    def test_permutation_is_valid(self):
+        acts = (np.random.default_rng(0).random((100, 64)) < 0.2)
+        perm = S.coactivation_permutation(acts)
+        assert sorted(perm.tolist()) == list(range(64))
+
+    def test_hot_neurons_first(self):
+        rng = np.random.default_rng(1)
+        acts = np.zeros((200, 32))
+        acts[:, :8] = rng.random((200, 8)) < 0.9   # hot block
+        acts[:, 8:] = rng.random((200, 24)) < 0.05
+        perm = S.coactivation_permutation(acts)
+        assert set(perm[:8].tolist()) == set(range(8))
+
+    def test_apply_permutation(self):
+        k, d = 32, 16
+        params = {"wg_t": jnp.arange(k * d, dtype=jnp.float32).reshape(k, d),
+                  "wd_t": jnp.ones((k, d))}
+        perm = np.arange(k)[::-1].copy()
+        out = S.apply_neuron_permutation(params, perm)
+        np.testing.assert_allclose(np.asarray(out["wg_t"][0]),
+                                   np.asarray(params["wg_t"][-1]))
+
+
+class TestExpectedCapacity:
+    def test_rounding_and_bounds(self):
+        assert S.expected_capacity(13824, 0.9, 1.3, 128) % 128 == 0
+        assert S.expected_capacity(100, 0.0) == 100  # never exceeds k

@@ -1,0 +1,121 @@
+"""Strategy-equivalence tests for the SparseInfer MLP module (core)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predictor as P
+from repro.core import selection as S
+from repro.core.sparse_mlp import (SparseInferConfig, dense_mlp, gather_mlp,
+                                   init_gated_mlp, masked_mlp, pallas_mlp,
+                                   prepare_sparse_params)
+
+D, K = 256, 1024
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_gated_mlp(jax.random.PRNGKey(0), D, K, dtype=jnp.float32)
+    params = prepare_sparse_params(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, D), jnp.float32)
+    return params, x
+
+
+def _union_masked_ref(params, x, g, alpha=1.0):
+    """Dense math with the union-of-batch, group-aggregated predicted mask."""
+    m = P.margins(params["sign_wg"], P.pack_signs(x), D, alpha)
+    gm = S.group_margins(S.union_margin(m), g)
+    keep = jnp.repeat(gm <= 0, g).astype(x.dtype)
+    h1 = jax.nn.relu(x @ params["wg_t"].T) * keep
+    h1 = h1 * (x @ params["wu_t"].T)
+    return h1 @ params["wd_t"]
+
+
+class TestStrategyEquivalence:
+    def test_masked_equals_dense_with_skip(self, setup):
+        """The masked path IS the paper's semantics: dense minus skipped."""
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu")
+        ym = masked_mlp(params, x, cfg, alpha=1.0)
+        m = P.margins(params["sign_wg"], P.pack_signs(x), D, 1.0)
+        keep = (m <= 0).astype(x.dtype)
+        h1 = jax.nn.relu(x @ params["wg_t"].T) * keep
+        h1 = h1 * (x @ params["wu_t"].T)
+        want = h1 @ params["wd_t"]
+        np.testing.assert_allclose(np.asarray(ym), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("g", [1, 8])
+    def test_gather_equals_union_masked(self, setup, g):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=1.0, group_size=g)
+        yg = gather_mlp(params, x, cfg, alpha=1.0)
+        want = _union_masked_ref(params, x, g)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_pallas_equals_gather(self, setup):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.6, group_size=8)
+        yg = gather_mlp(params, x, cfg, alpha=1.0)
+        yp = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(yp),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_single_vector_input(self, setup):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.9)
+        y1 = gather_mlp(params, x[0], cfg)
+        y2 = gather_mlp(params, x[:1], cfg)[0]
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_relative_error_vs_dense_small(self, setup):
+        """At alpha=1 the sparse output should track dense closely (the
+        skipped neurons are mostly true zeros)."""
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=1.0, group_size=1)
+        yd = dense_mlp(params, x, cfg)
+        yg = gather_mlp(params, x, cfg, alpha=1.0)
+        rel = float(jnp.linalg.norm(yd - yg) / jnp.linalg.norm(yd))
+        assert rel < 0.35, rel
+
+    def test_alpha_conservatism_reduces_error(self, setup):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=1.0, group_size=1)
+        yd = dense_mlp(params, x, cfg)
+
+        def err(alpha):
+            yg = gather_mlp(params, x, cfg, alpha=alpha)
+            return float(jnp.linalg.norm(yd - yg) / jnp.linalg.norm(yd))
+
+        assert err(1.2) <= err(1.0) + 1e-6
+
+    def test_requires_relufied_activation(self, setup):
+        params, x = setup
+        from repro.core import sparse_mlp as SM
+        cfg = SparseInferConfig(enabled=True, activation="silu")
+        with pytest.raises(ValueError, match="ReLU-fied"):
+            SM.apply(params, x, cfg)
+
+    def test_ungated_ffn(self):
+        """OPT/Falcon/seamless-style plain MLP (paper §III)."""
+        params = init_gated_mlp(jax.random.PRNGKey(2), D, K,
+                                dtype=jnp.float32, gated=False)
+        params = prepare_sparse_params(params)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, D))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=1.0, group_size=1)
+        yg = gather_mlp(params, x, cfg, alpha=1.0)
+        m = P.margins(params["sign_wg"], P.pack_signs(x), D, 1.0)
+        keep = (S.union_margin(m) <= 0).astype(x.dtype)
+        want = (jax.nn.relu(x @ params["wg_t"].T) * keep) @ params["wd_t"]
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
