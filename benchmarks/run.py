@@ -28,6 +28,9 @@ def main() -> None:
         ("Tables II/III (accuracy vs alpha)", T.table23_accuracy, {}),
         ("Group granularity + co-activation permutation (DESIGN.md 2)",
          T.group_permutation_study, {}),
+        ("Adaptive-alpha controller on vs off (DESIGN.md 4, paper V-B)",
+         T.controller_serving_study,
+         {"max_new": 12 if args.quick else 24}),
     ]
     failures = 0
     for title, fn, kw in sections:

@@ -14,6 +14,32 @@ from repro.core.sparse_mlp import SparseInferConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Online adaptive-alpha controller for the serve path (DESIGN.md §4).
+
+    The paper's alpha is "a control knob for optimizing LLM inference"
+    (§V-B); this closes the loop at runtime: between decode steps the server
+    nudges each layer's alpha so realized density tracks ``target_density``,
+    with periodic masked-path audit steps bounding the false-negative rate.
+    """
+
+    enabled: bool = False
+    target_density: float = 0.25   # per-layer realized density setpoint
+    gain: float = 0.5              # integral gain on (density - target)
+    ema: float = 0.4               # EMA weight of a new observation
+    alpha_min: float = 0.25        # clamp floor (most aggressive skipping)
+    alpha_max: float = 8.0         # clamp ceiling (most conservative)
+    max_step: float = 0.25         # per-update |Δalpha| bound (slew limit)
+    audit_period: int = 8          # masked-path audit every N decode steps
+    fn_budget: float = 0.02        # tolerated active-but-skipped rate
+    fn_gain: float = 4.0           # conservatism push per unit FN excess
+    adapt_capacity: bool = False   # also re-size capacity from the observed
+                                   # keep-rate; a capacity change is a re-jit,
+                                   # so it applies between scheduler chunks
+                                   # (runtime/server.py:maybe_adapt_capacity)
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                  # dense | moe | hybrid | xlstm | vlm | encdec

@@ -15,9 +15,11 @@ from repro.core.predictor import (
 from repro.core.relufication import get_activation, is_sparsifiable, relufy
 from repro.core.selection import (
     Selection,
+    SelectionStats,
     actual_sparsity_mask,
     apply_neuron_permutation,
     capacity_select,
+    capacity_select_with_stats,
     coactivation_permutation,
     expected_capacity,
     group_margins,
@@ -25,6 +27,7 @@ from repro.core.selection import (
     union_margin,
 )
 from repro.core.sparse_mlp import (
+    MLP_STAT_KEYS,
     SparseInferConfig,
     apply,
     dense_mlp,
@@ -33,4 +36,5 @@ from repro.core.sparse_mlp import (
     masked_mlp,
     pallas_mlp,
     prepare_sparse_params,
+    zero_mlp_stats,
 )

@@ -86,11 +86,19 @@ def margins(
     Non-positive     => predicted active (keep).
     ``d_valid`` is the true reduction length (padding lanes always count as
     positive products and are excluded from N_pos here).
+
+    ``alpha`` may be a scalar or an array broadcasting against the *batch*
+    dims of ``packed_x`` (e.g. per-token alphas (B,) against margins (B, k),
+    or per-layer alphas under vmap-over-layers) — a trailing neuron axis is
+    appended so a non-scalar alpha never silently broadcasts against ``k``.
     Returns float32 (..., k).
     """
     n_neg = neg_counts(packed_w, packed_x).astype(jnp.float32)
     n_pos = jnp.float32(d_valid) - n_neg
-    return n_neg - jnp.asarray(alpha, jnp.float32) * n_pos
+    a = jnp.asarray(alpha, jnp.float32)
+    if a.ndim:
+        a = a[..., None]
+    return n_neg - a * n_pos
 
 
 def predict_sparse(
@@ -124,6 +132,12 @@ class AlphaSchedule:
             [self.alpha_for_layer(i, num_layers) for i in range(num_layers)],
             dtype=np.float32,
         )
+
+    def init_state(self, num_layers: int) -> np.ndarray:
+        """Initial per-layer alpha vector for the online controller
+        (repro.runtime.controller) — the schedule is the starting point the
+        feedback loop then adapts per layer."""
+        return self.alphas(num_layers).copy()
 
 
 def predictor_op_count(d: int, k: int) -> int:

@@ -47,6 +47,30 @@ def capacity_select(margin: jax.Array, capacity: int) -> Selection:
     return Selection(idx.astype(jnp.int32), valid, count)
 
 
+class SelectionStats(NamedTuple):
+    """Controller telemetry for one capacity selection (DESIGN.md §4).
+
+    All fields are scalars so pytrees of them stack cleanly under scan/vmap.
+    """
+
+    predicted: jax.Array  # () int32 — entries the predictor keeps (margin<=0)
+    selected: jax.Array   # () int32 — survivors after the capacity clamp
+    overflow: jax.Array   # () int32 — predicted-active entries dropped (C hit)
+    occupancy: jax.Array  # () float32 — selected / capacity (pressure gauge)
+
+
+def capacity_select_with_stats(
+        margin: jax.Array, capacity: int) -> tuple[Selection, "SelectionStats"]:
+    """:func:`capacity_select` plus the overflow/occupancy telemetry the
+    serve-path alpha controller consumes between decode steps."""
+    sel = capacity_select(margin, capacity)
+    cap_eff = min(capacity, margin.shape[-1])
+    predicted = jnp.sum(margin <= 0, dtype=jnp.int32)
+    overflow = predicted - sel.count  # >0 iff the capacity clamp dropped rows
+    occupancy = sel.count.astype(jnp.float32) / jnp.float32(cap_eff)
+    return sel, SelectionStats(predicted, sel.count, overflow, occupancy)
+
+
 def group_margins(margin: jax.Array, group_size: int) -> jax.Array:
     """Aggregate per-neuron margins to row-group granularity ``G``.
 

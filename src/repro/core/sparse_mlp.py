@@ -86,13 +86,46 @@ def _act(cfg: SparseInferConfig):
     return get_activation(cfg.activation)
 
 
-def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig) -> jax.Array:
+# Telemetry contract shared by all four strategies (DESIGN.md §4): every
+# ``return_stats=True`` call yields exactly these float32 scalars, so the
+# serve path can stack them per layer under scan and hand one fixed pytree
+# to the controller regardless of the strategy in use.
+MLP_STAT_KEYS = (
+    "predicted_density",   # fraction of k the predictor keeps (margin <= 0)
+    "realized_density",    # fraction of k actually computed (post capacity)
+    "actual_density",      # fraction of k truly active (gate > 0), measured
+                           # on whatever rows this strategy computed
+    "false_neg_rate",      # active-but-skipped fraction; exact only on paths
+                           # that compute the full gate (dense/masked audits)
+    "overflow_frac",       # predicted-active fraction dropped by the C clamp
+)
+
+
+def zero_mlp_stats() -> dict:
+    return {k: jnp.float32(0.0) for k in MLP_STAT_KEYS}
+
+
+def _stats(**kw) -> dict:
+    out = zero_mlp_stats()
+    for k, v in kw.items():
+        assert k in out, k
+        out[k] = jnp.asarray(v, jnp.float32)
+    return out
+
+
+def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
+              return_stats: bool = False):
     """Baseline gated MLP: (σ(x·Wg) ⊙ (x·Wu)) · Wd^T  (paper eq. 1)."""
     act = _act(cfg)
-    h1 = act(x @ params["wg_t"].T.astype(x.dtype))
+    g1 = act(x @ params["wg_t"].T.astype(x.dtype))
+    h1 = g1
     if "wu_t" in params:
         h1 = h1 * (x @ params["wu_t"].T.astype(x.dtype))
-    return h1 @ params["wd_t"].astype(x.dtype)
+    y = h1 @ params["wd_t"].astype(x.dtype)
+    if return_stats:
+        return y, _stats(predicted_density=1.0, realized_density=1.0,
+                         actual_density=jnp.mean(g1 > 0))
+    return y
 
 
 def _margins(params: dict, x: jax.Array, alpha) -> jax.Array:
@@ -107,16 +140,28 @@ def _margins(params: dict, x: jax.Array, alpha) -> jax.Array:
 def masked_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
                alpha: float | jax.Array = 1.0,
                return_stats: bool = False):
-    """Predict-and-mask path: exact paper semantics, any backend."""
+    """Predict-and-mask path: exact paper semantics, any backend.
+
+    This path computes the FULL gate matmul, so its stats include the exact
+    false-negative rate (active neurons the predictor skipped) — the serve
+    controller's periodic dense-audit steps run through here (DESIGN.md §4).
+    """
     act = _act(cfg)
     m = _margins(params, x, alpha)          # (..., k)
     keep = (m <= 0).astype(x.dtype)
-    h1 = act(x @ params["wg_t"].T.astype(x.dtype)) * keep
+    g1 = act(x @ params["wg_t"].T.astype(x.dtype))
+    h1 = g1 * keep
     if "wu_t" in params:
         h1 = h1 * (x @ params["wu_t"].T.astype(x.dtype))
     y = h1 @ params["wd_t"].astype(x.dtype)
     if return_stats:
-        stats = {"density": jnp.mean(keep), "margins": m}
+        active = g1 > 0
+        stats = _stats(
+            predicted_density=jnp.mean(keep),
+            realized_density=jnp.mean(keep),  # every predicted row computed
+            actual_density=jnp.mean(active),
+            false_neg_rate=jnp.mean(active & (m > 0)),
+        )
         return y, stats
     return y
 
@@ -159,7 +204,8 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     gm = jax.vmap(lambda mm: S.group_margins(mm, g))(m)   # (G, k/g)
     gm = gm.reshape(ngrp, ms, (k // g) // ms)     # (G, ms, k/g/ms)
     gm = R.shard(gm, None, "model", None)
-    sel = jax.vmap(jax.vmap(lambda mm: S.capacity_select(mm, cap // ms)))(gm)
+    sel, sstats = jax.vmap(jax.vmap(
+        lambda mm: S.capacity_select_with_stats(mm, cap // ms)))(gm)
     cl = cap // ms                                # local capacity per shard
     if ms > 1:
         sel = S.Selection(R.shard(sel.indices, None, "model", None),
@@ -191,7 +237,8 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     wd = take_rows(params["wd_t"]).astype(xg.dtype)
     vmask = jnp.repeat(sel.valid, g, axis=-1).astype(xg.dtype)  # (G,ms,Cl*g)
 
-    h1 = act(jnp.einsum("gbd,gmnd->gbmn", xg, wg)) * vmask[:, None]
+    g1 = act(jnp.einsum("gbd,gmnd->gbmn", xg, wg)) * vmask[:, None]
+    h1 = g1
     if "wu_t" in params:
         wu = take_rows(params["wu_t"]).astype(xg.dtype)
         h1 = h1 * jnp.einsum("gbd,gmnd->gbmn", xg, wu)
@@ -207,20 +254,36 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if squeeze:
         y = y[0]
     if return_stats:
-        n_sel = sel.count.astype(jnp.float32).sum() / ngrp  # mean per group
-        stats = {
-            "capacity": cap * g,
-            "selected": (n_sel * g).astype(jnp.int32),
-            "density": n_sel * g / k,
-        }
+        # sums over ms shards, means over the G token groups; counts are in
+        # row-group units (predicted at group granularity over-counts vs the
+        # per-neuron rate: a group survives if ANY member does)
+        n_sel = sel.count.astype(jnp.float32).sum() / ngrp
+        n_pred = sstats.predicted.astype(jnp.float32).sum() / ngrp
+        n_over = sstats.overflow.astype(jnp.float32).sum() / ngrp
+        stats = _stats(
+            predicted_density=n_pred * g / k,
+            realized_density=n_sel * g / k,
+            actual_density=jnp.sum(g1 > 0) / (ngrp * b * k),
+            overflow_frac=n_over * g / k,
+        )
+        # legacy keys kept for examples/notebooks
+        stats["capacity"] = cap * g
+        stats["selected"] = (n_sel * g).astype(jnp.int32)
+        stats["density"] = n_sel * g / k
         return y, stats
     return y
 
 
 def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
                alpha: float | jax.Array = 1.0,
-               interpret: bool | None = None):
-    """Fused Pallas kernel path (TPU target; interpret=True on CPU)."""
+               interpret: bool | None = None,
+               return_stats: bool = False):
+    """Fused Pallas kernel path (TPU target; interpret=True on CPU).
+
+    Stats come from the selection stage outside the kernel (the fused kernel
+    does not expose per-row gate activity, so ``actual_density`` stays 0 and
+    audit steps must use the masked path — DESIGN.md §4).
+    """
     from repro.kernels import ops as kops  # local import: kernels optional
     squeeze = x.ndim == 1
     xb = x[None] if squeeze else x
@@ -236,7 +299,7 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     m = P.margins(sign_wg, packed_x, d, alpha)
     m = S.union_margin(m)
     gm = S.group_margins(m, g)
-    sel = S.capacity_select(gm, cap)
+    sel, sstats = S.capacity_select_with_stats(gm, cap)
 
     y = kops.fused_sparse_mlp(
         xb, params["wg_t"], params.get("wu_t"), params["wd_t"],
@@ -244,7 +307,15 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
         activation=cfg.activation, fatrelu_threshold=cfg.fatrelu_threshold,
         interpret=interpret,
     )
-    return y[0] if squeeze else y
+    y = y[0] if squeeze else y
+    if return_stats:
+        stats = _stats(
+            predicted_density=sstats.predicted.astype(jnp.float32) * g / k,
+            realized_density=sstats.selected.astype(jnp.float32) * g / k,
+            overflow_frac=sstats.overflow.astype(jnp.float32) * g / k,
+        )
+        return y, stats
+    return y
 
 
 def apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
@@ -260,7 +331,7 @@ def apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if alpha is None:
         alpha = cfg.alpha_schedule().alpha_for_layer(layer_idx, num_layers)
     if strategy == "dense":
-        return dense_mlp(params, x, cfg)
+        return dense_mlp(params, x, cfg, **kw)
     if strategy == "masked":
         return masked_mlp(params, x, cfg, alpha, **kw)
     if strategy == "gather":

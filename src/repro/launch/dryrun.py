@@ -130,12 +130,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
         hlo_text = compiled.as_text()
         colls = parse_collectives(hlo_text)
         # trip-count-aware models (XLA counts while bodies once — see costs.py)
         from repro.launch.costs import (collectives_with_trip_counts,
-                                        jaxpr_cost)
+                                        jaxpr_cost, normalize_cost_analysis)
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         colls_tc = collectives_with_trip_counts(hlo_text)
         jcost = jaxpr_cost(step, *args)
 

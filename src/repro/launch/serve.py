@@ -16,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from repro.configs.base import ControllerConfig
 from repro.configs.registry import arch_names, get_config, reduced_config
 from repro.launch.mesh import make_mesh
 from repro.launch.specs import model_module
@@ -37,6 +38,16 @@ def main() -> None:
     ap.add_argument("--strategy", default=None,
                     choices=[None, "dense", "masked", "gather", "pallas"])
     ap.add_argument("--alpha", type=float, default=None)
+    # online adaptive-alpha controller (DESIGN.md §4)
+    ap.add_argument("--controller", action="store_true",
+                    help="adapt per-layer alpha online toward "
+                         "--target-density")
+    ap.add_argument("--target-density", type=float, default=0.25)
+    ap.add_argument("--ctrl-gain", type=float, default=0.5)
+    ap.add_argument("--audit-period", type=int, default=8)
+    ap.add_argument("--adapt-capacity", action="store_true",
+                    help="re-size gather capacity between request chunks "
+                         "from the observed keep-rate (re-jit boundary)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -61,9 +72,15 @@ def main() -> None:
         if cfg.family == "encdec":
             extra["frames"] = jax.numpy.asarray(rng.standard_normal(
                 (args.batch, cfg.n_frames, cfg.d_model), dtype=np.float32))
+        ccfg = ControllerConfig(enabled=args.controller,
+                                target_density=args.target_density,
+                                gain=args.ctrl_gain,
+                                audit_period=args.audit_period,
+                                adapt_capacity=args.adapt_capacity)
         srv = Server(mod, cfg, ServeConfig(batch=args.batch,
                                            max_len=args.max_len,
-                                           max_new_tokens=args.max_new),
+                                           max_new_tokens=args.max_new,
+                                           controller=ccfg),
                      params, extra_inputs=extra)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, cfg.vocab,
@@ -77,7 +94,12 @@ def main() -> None:
         rep["wall_s"] = dt
         rep["sparse"] = {"enabled": cfg.sparse.enabled,
                          "strategy": cfg.sparse.strategy,
-                         "alpha": cfg.sparse.alpha_base}
+                         "alpha": cfg.sparse.alpha_base,
+                         # srv.cfg, not cfg: adapt-capacity may have moved it
+                         "capacity_frac": round(
+                             srv.cfg.sparse.capacity_frac, 4)}
+        if srv.controller is not None:
+            rep["controller"] = srv.controller.report()
         print(json.dumps(rep, indent=1))
 
     if mesh is not None:

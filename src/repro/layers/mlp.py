@@ -21,15 +21,28 @@ def init_mlp(key: jax.Array, d: int, k: int, gated: bool = True,
 
 def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
               *, decode: bool = False, alpha: jax.Array | float | None = None,
-              layer_idx: int = 0, num_layers: int = 1) -> jax.Array:
+              layer_idx: int = 0, num_layers: int = 1,
+              return_stats: bool = False):
     """x: (..., d). Dense unless (decode and cfg.enabled).
 
     ``alpha`` overrides the per-layer schedule (used under scan-over-layers
-    where layer_idx is traced: the schedule is precomputed into an array).
+    where layer_idx is traced: the schedule is precomputed into an array; the
+    serve-path controller feeds its adapted per-layer alphas the same way).
+    ``return_stats`` additionally yields the strategy's telemetry scalars
+    (exactly ``SM.MLP_STAT_KEYS``, a fixed pytree that stacks under scan).
     """
     shape = x.shape
+
+    def finish(out):
+        if return_stats:
+            y, stats = out
+            stats = {k: jnp.asarray(stats[k], jnp.float32)
+                     for k in SM.MLP_STAT_KEYS}
+            return y.reshape(shape).astype(x.dtype), stats
+        return out.reshape(shape).astype(x.dtype)
+
     if not (decode and cfg.enabled):
-        return SM.dense_mlp(params, x, cfg)
+        return finish(SM.dense_mlp(params, x, cfg, return_stats=return_stats))
     xf = x.reshape(-1, shape[-1])
     # union-mask regime bound is PER-DEVICE tokens (DESIGN.md §2): under a
     # mesh the global batch is sharded over the data axes; tokens are
@@ -39,15 +52,19 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
     dp = R.axis_size(mesh, R.data_axes(mesh)) if mesh is not None else 1
     n = xf.shape[0]
     if n > cfg.sparse_max_batch * dp:
-        y = SM.dense_mlp(params, xf, cfg)
+        out = SM.dense_mlp(params, xf, cfg, return_stats=return_stats)
     elif (cfg.strategy == "gather" and n > cfg.sparse_max_batch
           and n % dp == 0 and dp > 1):
         xg = xf.reshape(dp, n // dp, shape[-1])
         xg = R.shard(xg, R.data_axes(mesh), None, None)
-        y = SM.gather_mlp(params, xg, cfg,
-                          alpha=1.0 if alpha is None else alpha)
-        y = y.reshape(n, shape[-1])
+        out = SM.gather_mlp(params, xg, cfg,
+                            alpha=1.0 if alpha is None else alpha,
+                            return_stats=return_stats)
+        if return_stats:
+            out = (out[0].reshape(n, shape[-1]), out[1])
+        else:
+            out = out.reshape(n, shape[-1])
     else:
-        y = SM.apply(params, xf, cfg, alpha=alpha, layer_idx=layer_idx,
-                     num_layers=num_layers)
-    return y.reshape(shape).astype(x.dtype)
+        out = SM.apply(params, xf, cfg, alpha=alpha, layer_idx=layer_idx,
+                       num_layers=num_layers, return_stats=return_stats)
+    return finish(out)

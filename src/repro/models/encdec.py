@@ -171,9 +171,13 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                caches: dict, cache_len: jax.Array):
+                caches: dict, cache_len: jax.Array, *,
+                alphas=None, collect_stats: bool = False):
     x = LM._embed_in(params, cfg, token)
-    alphas = jnp.asarray(LM._alphas(cfg))
+    if alphas is None:
+        alphas = jnp.asarray(LM._alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
 
     def body(x, xs):
         blk, sc, cc, al = xs
@@ -187,16 +191,24 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                                   cc["v"])
         x = x + h
         h = C.norm_apply(cfg, blk["ln2"], x)
-        h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg), decode=True,
-                      alpha=al)
-        return x + h, sc
+        stats = None
+        if collect_stats:
+            h, stats = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg),
+                                 decode=True, alpha=al, return_stats=True)
+        else:
+            h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg), decode=True,
+                          alpha=al)
+        return x + h, (sc, stats)
 
-    x, new_self = jax.lax.scan(
+    x, (new_self, stats) = jax.lax.scan(
         body, x, (params["dec_blocks"], caches["self"], caches["cross"],
                   alphas[:cfg.n_layers]))
     x = C.norm_apply(cfg, params["final_norm"], x)
     logits = C.head_logits(x[:, 0], LM._head_table(params), cfg.final_softcap)
-    return logits, {"self": new_self, "cross": caches["cross"]}
+    new_caches = {"self": new_self, "cross": caches["cross"]}
+    if collect_stats:
+        return logits, new_caches, stats
+    return logits, new_caches
 
 
 prepare_sparse = LM.prepare_sparse

@@ -195,8 +195,14 @@ def _block_fwd(blk, x, cfg: ModelConfig, positions, window, aux,
 
 
 def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
-                  lora=None):
-    """One transformer block, single-token decode with KV cache."""
+                  lora=None, collect_stats: bool = False):
+    """One transformer block, single-token decode with KV cache.
+
+    Returns ``(x, cache, stats)``; ``stats`` is the MLP telemetry pytree
+    (``SM.MLP_STAT_KEYS`` scalars) when ``collect_stats`` else ``None``.
+    MoE blocks report zero stats (expert routing is its own control loop).
+    """
+    from repro.core import sparse_mlp as SM
     h = C.norm_apply(cfg, blk["ln1"], x)
     acfg = C.attn_cfg(cfg, window=window)
     attn_params = blk["attn"]
@@ -209,14 +215,20 @@ def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
         h = C.norm_apply(cfg, blk["ln1_post"], h)
     x = x + h
     h = C.norm_apply(cfg, blk["ln2"], x)
+    stats = None
     if "moe" in blk:
         h, _ = moe_apply(blk["moe"], h, moe_cfg(cfg))
+        if collect_stats:
+            stats = SM.zero_mlp_stats()
+    elif collect_stats:
+        h, stats = mlp_apply(blk["mlp"], h, _mlp_sparse_cfg(cfg), decode=True,
+                             alpha=alpha, return_stats=True)
     else:
         h = mlp_apply(blk["mlp"], h, _mlp_sparse_cfg(cfg), decode=True,
                       alpha=alpha)
     if cfg.post_block_norm:
         h = C.norm_apply(cfg, blk["ln2_post"], h)
-    return x + h, cache
+    return x + h, cache, stats
 
 
 def _dense_stack_fwd(params, x, cfg: ModelConfig, positions,
@@ -278,10 +290,17 @@ def _seed_cache(kv, max_len, cfg: ModelConfig):
     return _shard_cache_tree(cache, cfg.seq_shard_kv)
 
 
-def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len):
+def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len,
+                        alphas=None, collect_stats: bool = False):
+    """``alphas``: optional traced (n_layers,) override of the static
+    schedule — the serve-path controller's adapted per-layer values enter
+    here without retracing (the static path embeds them as constants)."""
     windows = _windows(cfg)
     p = len(windows)
-    alphas = jnp.asarray(_alphas(cfg))
+    if alphas is None:
+        alphas = jnp.asarray(_alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
 
     def run(stacked, caches_s, alphas_s, n):
         grouped = jax.tree.map(
@@ -292,28 +311,43 @@ def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len):
 
         def body(x, xs):
             blk_g, cache_g, al = xs
-            new_caches = []
+            new_caches, stats = [], []
             for j in range(p):
                 blk = jax.tree.map(lambda a: a[j], blk_g)
                 cache = jax.tree.map(lambda a: a[j], cache_g)
-                x, cache = _block_decode(blk, x, cfg, cache, cache_len,
-                                         windows[j], al[j])
+                x, cache, st = _block_decode(blk, x, cfg, cache, cache_len,
+                                             windows[j], al[j],
+                                             collect_stats=collect_stats)
                 new_caches.append(cache)
-            return x, jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches)
+                if collect_stats:
+                    stats.append(st)
+            ys = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches),
+                  (jax.tree.map(lambda *ls: jnp.stack(ls), *stats)
+                   if collect_stats else None))
+            return x, ys
 
-        x2, new_caches = jax.lax.scan(body, x, (grouped, caches_g, alphas_g))
+        x2, (new_caches, stats) = jax.lax.scan(
+            body, x, (grouped, caches_g, alphas_g))
         new_caches = jax.tree.map(
             lambda a: a.reshape((n,) + a.shape[2:]), new_caches)
-        return x2, new_caches
+        if collect_stats:  # (n/p, p) scalars -> (n,) per layer
+            stats = jax.tree.map(lambda a: a.reshape((n,)), stats)
+        return x2, new_caches, stats
 
     new = {}
+    all_stats = []
     nf = cfg.first_dense_layers
     if "first_blocks" in params:
-        x, new["first"] = run(params["first_blocks"], caches["first"],
-                              alphas[:nf], nf)
-    x, new["blocks"] = run(params["blocks"], caches["blocks"], alphas[nf:],
-                           cfg.n_layers - nf)
-    return x, new
+        x, new["first"], st = run(params["first_blocks"], caches["first"],
+                                  alphas[:nf], nf)
+        all_stats.append(st)
+    x, new["blocks"], st = run(params["blocks"], caches["blocks"], alphas[nf:],
+                               cfg.n_layers - nf)
+    all_stats.append(st)
+    if collect_stats:
+        stats = jax.tree.map(lambda *ls: jnp.concatenate(ls), *all_stats)
+        return x, new, stats
+    return x, new, None
 
 
 # ------------------------------------------------------------ hybrid fwd --
@@ -390,11 +424,15 @@ def _hybrid_fwd(params, x, cfg: ModelConfig, positions, collect_state: bool,
     return x, aux, caches
 
 
-def _hybrid_decode(params, x, cfg: ModelConfig, caches, cache_len):
+def _hybrid_decode(params, x, cfg: ModelConfig, caches, cache_len,
+                   alphas=None, collect_stats: bool = False):
     mc = mamba_cfg(cfg)
     n_inv, n_main, n_tail = _hybrid_layout(cfg)
     ae = cfg.attn_every
-    alphas = jnp.asarray(_alphas(cfg))
+    if alphas is None:
+        alphas = jnp.asarray(_alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
 
     grouped = jax.tree.map(
         lambda a: a.reshape((n_inv, ae) + a.shape[1:]), params["mamba"])
@@ -406,8 +444,10 @@ def _hybrid_decode(params, x, cfg: ModelConfig, caches, cache_len):
 
     def body(x, xs):
         mamba_g, lora_g, m_state_g, kv_cache, al = xs
-        x, kv_cache = _block_decode(params["shared"], x, cfg, kv_cache,
-                                    cache_len, 0, al, lora=lora_g)
+        x, kv_cache, mlp_st = _block_decode(params["shared"], x, cfg,
+                                            kv_cache, cache_len, 0, al,
+                                            lora=lora_g,
+                                            collect_stats=collect_stats)
         new_states = []
         for j in range(ae):
             blk = jax.tree.map(lambda a: a[j], mamba_g)
@@ -417,10 +457,10 @@ def _hybrid_decode(params, x, cfg: ModelConfig, caches, cache_len):
             x = x + h
             new_states.append(st)
         return x, (jax.tree.map(lambda *ls: jnp.stack(ls), *new_states),
-                   kv_cache)
+                   kv_cache, mlp_st)
 
     al_g = alphas[:n_inv]
-    x, (m_states, kv_caches) = jax.lax.scan(
+    x, (m_states, kv_caches, mlp_stats) = jax.lax.scan(
         body, x, (grouped, lora, caches["mamba"], caches["attn"], al_g))
     new = {"mamba": m_states, "attn": kv_caches}
     if n_tail:
@@ -433,7 +473,7 @@ def _hybrid_decode(params, x, cfg: ModelConfig, caches, cache_len):
             x = x + h
             sts.append(st)
         new["tail"] = jax.tree.map(lambda *ls: jnp.stack(ls), *sts)
-    return x, new
+    return x, new, mlp_stats if collect_stats else None
 
 
 # ------------------------------------------------------------- xlstm fwd --
@@ -633,19 +673,34 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                caches: dict, cache_len: jax.Array):
-    """One decode step. token: (B, 1) -> (logits (B, V), new caches)."""
+                caches: dict, cache_len: jax.Array, *,
+                alphas=None, collect_stats: bool = False):
+    """One decode step. token: (B, 1) -> (logits (B, V), new caches).
+
+    ``alphas``: optional (n_layers,) per-layer predictor-alpha override (the
+    serve controller's adapted values; None keeps the static schedule and is
+    bit-identical to the pre-controller path).  With ``collect_stats`` the
+    return gains a third element: per-layer MLP telemetry arrays keyed by
+    ``repro.core.sparse_mlp.MLP_STAT_KEYS`` (length = alpha-consuming layers:
+    n_layers for dense/moe, invocation groups for hybrid, none for xlstm).
+    """
     x = _embed_in(params, cfg, token)
+    stats = None
     if cfg.family in ("dense", "moe"):
-        x, caches = _dense_stack_decode(params, x, cfg, caches, cache_len)
+        x, caches, stats = _dense_stack_decode(params, x, cfg, caches,
+                                               cache_len, alphas,
+                                               collect_stats)
     elif cfg.family == "hybrid":
-        x, caches = _hybrid_decode(params, x, cfg, caches, cache_len)
+        x, caches, stats = _hybrid_decode(params, x, cfg, caches, cache_len,
+                                          alphas, collect_stats)
     elif cfg.family == "xlstm":
         x, caches = _xlstm_decode(params, x, cfg, caches)
     else:
         raise ValueError(cfg.family)
     x = C.norm_apply(cfg, params["final_norm"], x)
     logits = C.head_logits(x[:, 0], _head_table(params), cfg.final_softcap)
+    if collect_stats:
+        return logits, caches, stats
     return logits, caches
 
 

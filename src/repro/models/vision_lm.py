@@ -80,16 +80,22 @@ def _cross_fwd(blk, x, cfg: ModelConfig, images, cross_kv=None):
     return R.shard_activations(x, sp=cfg.sp_activations), kv
 
 
-def _cross_decode(blk, x, cfg: ModelConfig, enc_k, enc_v, alpha):
+def _cross_decode(blk, x, cfg: ModelConfig, enc_k, enc_v, alpha,
+                  collect_stats: bool = False):
     h = C.norm_apply(cfg, blk["ln1"], x)
     h = A.cross_decode_attend(blk["attn"], h, C.attn_cfg(cfg, cross=True),
                               enc_k, enc_v)
     x = x + jnp.tanh(blk["gate_attn"].astype(jnp.float32)).astype(x.dtype) * h
     h = C.norm_apply(cfg, blk["ln2"], x)
-    h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg), decode=True,
-                  alpha=alpha)
+    stats = None
+    if collect_stats:
+        h, stats = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg),
+                             decode=True, alpha=alpha, return_stats=True)
+    else:
+        h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg), decode=True,
+                      alpha=alpha)
     x = x + jnp.tanh(blk["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * h
-    return x
+    return x, stats
 
 
 def _stack(params, x, cfg: ModelConfig, positions, images,
@@ -179,10 +185,15 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                caches: dict, cache_len: jax.Array):
+                caches: dict, cache_len: jax.Array, *,
+                alphas=None, collect_stats: bool = False):
     p, n_groups = _layout(cfg)
     x = LM._embed_in(params, cfg, token)
-    alphas = jnp.asarray(LM._alphas(cfg)).reshape(n_groups, p)
+    if alphas is None:
+        alphas = jnp.asarray(LM._alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
+    alphas = alphas.reshape(n_groups, p)
     self_g = jax.tree.map(
         lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]),
         params["self_blocks"])
@@ -191,24 +202,35 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
 
     def body(x, xs):
         sg, cg, sc, cc, al = xs
-        new_kv = []
+        new_kv, stats = [], []
         for j in range(p - 1):
             blk = jax.tree.map(lambda a: a[j], sg)
             cache = jax.tree.map(lambda a: a[j], sc)
-            x, cache = LM._block_decode(blk, x, cfg, cache, cache_len,
-                                        cfg.window, al[j])
+            x, cache, st = LM._block_decode(blk, x, cfg, cache, cache_len,
+                                            cfg.window, al[j],
+                                            collect_stats=collect_stats)
             new_kv.append(cache)
-        x = _cross_decode(cg, x, cfg, cc["k"], cc["v"], al[p - 1])
-        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *new_kv)
+            stats.append(st)
+        x, st = _cross_decode(cg, x, cfg, cc["k"], cc["v"], al[p - 1],
+                              collect_stats=collect_stats)
+        stats.append(st)
+        ys = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_kv),
+              (jax.tree.map(lambda *ls: jnp.stack(ls), *stats)
+               if collect_stats else None))
+        return x, ys
 
-    x, new_self = jax.lax.scan(
+    x, (new_self, stats) = jax.lax.scan(
         body, x, (self_g, params["cross_blocks"], self_c, caches["cross"],
                   alphas))
     new_self = jax.tree.map(
         lambda a: a.reshape((n_groups * (p - 1),) + a.shape[2:]), new_self)
     x = C.norm_apply(cfg, params["final_norm"], x)
     logits = C.head_logits(x[:, 0], LM._head_table(params), cfg.final_softcap)
-    return logits, {"self": new_self, "cross": caches["cross"]}
+    new_caches = {"self": new_self, "cross": caches["cross"]}
+    if collect_stats:  # (n_groups, p) -> (n_layers,)
+        stats = jax.tree.map(lambda a: a.reshape((n_groups * p,)), stats)
+        return logits, new_caches, stats
+    return logits, new_caches
 
 
 prepare_sparse = LM.prepare_sparse

@@ -1,0 +1,181 @@
+"""Online adaptive-alpha / capacity controller for the serve path.
+
+The paper (§V-B) frames the predictor's conservativeness ``alpha`` as "a
+control knob for optimizing LLM inference" but tunes it offline.  This module
+closes the loop the paper describes, online (full design: DESIGN.md §4):
+
+* every decode step the jitted model returns per-layer telemetry
+  (``repro.core.sparse_mlp.MLP_STAT_KEYS``): predicted / realized / actual
+  density, capacity overflow, and — on audit steps — the exact
+  false-negative rate from the full-gate masked path;
+* between decode steps (host side, numpy — nothing here is traced) the
+  controller EMA-filters the telemetry and applies a clamped integral update
+  to each layer's alpha, pushing realized density toward the target while a
+  false-negative penalty term pushes back toward conservatism.
+
+Update law, per layer ``l``::
+
+    e_l     = density_ema[l] - target_density          # >0: too dense
+    fn_ex   = max(fn_ema[l] - fn_budget, 0)            # audit overshoot
+    dalpha  = clip(-gain * e_l + fn_gain * fn_ex, ±max_step)
+    alpha_l = clip(alpha_l + dalpha, alpha_min, alpha_max)
+
+Raising alpha keeps more neurons (density rises), so the density term is
+negative feedback; the FN term only ever raises alpha.  Convergence for a
+monotone density response is exercised in tests/test_controller.py.
+
+Capacity is a *static shape* under jit: per-layer capacity recommendations
+(``capacity_hint``) therefore only apply between batches where a re-jit is
+acceptable; the hint sizes C to the observed predicted density plus slack.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ControllerConfig
+from repro.core.predictor import AlphaSchedule
+from repro.core.selection import expected_capacity
+
+# control needs only the EMAs; the step-by-step trace is debugging/reporting
+# aid and must not grow without bound on a long-lived server
+TRAJECTORY_KEEP = 4096
+
+
+@dataclasses.dataclass
+class ControllerState:
+    """Host-side controller state (one vector entry per controlled layer)."""
+
+    alphas: np.ndarray        # (L,) float32 — live per-layer alpha
+    density_ema: np.ndarray   # (L,) realized-density estimate
+    overflow_ema: np.ndarray  # (L,) capacity-overflow fraction estimate
+    fn_ema: np.ndarray        # (L,) false-negative-rate estimate (audits)
+    predicted_ema: np.ndarray  # (L,) predictor keep-rate estimate
+    steps: int = 0            # decode steps observed
+    audits: int = 0           # audit steps observed
+
+
+class AlphaController:
+    """Feedback controller owning the per-layer alpha vector.
+
+    Drive pattern (see ``runtime.server.Server.generate``)::
+
+        ctl = AlphaController(ccfg, schedule, n_layers)
+        for step in decode_steps:
+            audit = ctl.is_audit_step()
+            ..., stats = decode(..., alphas=ctl.alphas(), audit=audit)
+            ctl.observe({k: np.asarray(v) for k, v in stats.items()},
+                        audit=audit)
+    """
+
+    def __init__(self, cfg: ControllerConfig, schedule: AlphaSchedule,
+                 num_layers: int):
+        self.cfg = cfg
+        self.num_layers = num_layers
+        a0 = schedule.init_state(num_layers).astype(np.float32)
+        t = np.float32(cfg.target_density)
+        self.state = ControllerState(
+            alphas=np.clip(a0, cfg.alpha_min, cfg.alpha_max),
+            density_ema=np.full(num_layers, t, np.float32),
+            overflow_ema=np.zeros(num_layers, np.float32),
+            fn_ema=np.zeros(num_layers, np.float32),
+            predicted_ema=np.full(num_layers, t, np.float32),
+        )
+        self._trajectory: collections.deque = collections.deque(
+            maxlen=TRAJECTORY_KEEP)
+
+    # ------------------------------------------------------------- inputs --
+    def alphas(self) -> np.ndarray:
+        """Per-layer alphas to feed the next decode step (copy: the jit
+        argument must not alias state the update below mutates)."""
+        return self.state.alphas.copy()
+
+    def is_audit_step(self) -> bool:
+        """True when the NEXT decode step should run the masked full-gate
+        audit path (exact paper semantics + measurable false negatives)."""
+        p = self.cfg.audit_period
+        return p > 0 and (self.state.steps + 1) % p == 0
+
+    # ------------------------------------------------------------- update --
+    def observe(self, stats: dict, audit: bool = False) -> None:
+        """Fold one decode step's per-layer telemetry into the state and
+        apply the alpha update law.  ``stats`` arrays must be length-L
+        (slot-batch aggregation happens inside the jitted step: the stats
+        scalars are already means over the batch)."""
+        s, c = self.state, self.cfg
+        beta = np.float32(c.ema)
+
+        def ema(prev, obs):
+            obs = np.asarray(obs, np.float32)
+            if obs.shape != prev.shape:
+                raise ValueError(
+                    f"telemetry shape {obs.shape} != layers {prev.shape}")
+            return (1 - beta) * prev + beta * obs
+
+        if audit:
+            # Audit steps ONLY update the false-negative estimate: the
+            # masked path's density stats live on a different scale than
+            # the serving strategy's (per-token mean, no capacity clamp,
+            # zero overflow vs the gather path's batch-union clamped
+            # fractions) — folding them in would yank the density/overflow
+            # EMAs at the audit cadence and oscillate alpha.
+            s.fn_ema = ema(s.fn_ema, stats["false_neg_rate"])
+            s.audits += 1
+        else:
+            s.density_ema = ema(s.density_ema, stats["realized_density"])
+            s.predicted_ema = ema(s.predicted_ema,
+                                  stats["predicted_density"])
+            s.overflow_ema = ema(s.overflow_ema, stats["overflow_frac"])
+        s.steps += 1
+
+        err = s.density_ema - np.float32(c.target_density)
+        fn_excess = np.maximum(s.fn_ema - np.float32(c.fn_budget), 0.0)
+        dalpha = np.clip(-c.gain * err + c.fn_gain * fn_excess,
+                         -c.max_step, c.max_step)
+        s.alphas = np.clip(s.alphas + dalpha.astype(np.float32),
+                           c.alpha_min, c.alpha_max).astype(np.float32)
+        self._trajectory.append({
+            "step": s.steps,
+            "audit": bool(audit),
+            "mean_density": float(s.density_ema.mean()),
+            "mean_alpha": float(s.alphas.mean()),
+            "mean_overflow": float(s.overflow_ema.mean()),
+            "mean_fn": float(s.fn_ema.mean()),
+        })
+
+    # ------------------------------------------------------------ outputs --
+    def capacity_hint(self, k: int, slack: float = 1.3,
+                      multiple: int = 128) -> int:
+        """Recommended capacity (in neurons) for the NEXT jit: observed
+        predictor keep-rate (max over layers so no layer is starved —
+        ``predicted_ema`` already counts the rows the clamp dropped) plus
+        slack, tile-rounded via :func:`expected_capacity`.  Only meaningful
+        with ``adapt_capacity``; the caller owns the re-jit boundary."""
+        keep = min(1.0, float(np.max(self.state.predicted_ema)))
+        return expected_capacity(k, 1.0 - keep, slack, multiple)
+
+    def converged(self, tol: float = 0.02) -> bool:
+        return bool(np.all(np.abs(
+            self.state.density_ema - self.cfg.target_density) <= tol))
+
+    def report(self) -> dict:
+        """Summary for throughput reports / benchmarks."""
+        s = self.state
+        return {
+            "steps": s.steps,
+            "audits": s.audits,
+            "target_density": self.cfg.target_density,
+            "mean_realized_density": float(s.density_ema.mean()),
+            "density_per_layer": [round(float(v), 4) for v in s.density_ema],
+            "alpha_per_layer": [round(float(v), 4) for v in s.alphas],
+            "mean_false_neg": float(s.fn_ema.mean()),
+            "mean_overflow": float(s.overflow_ema.mean()),
+            "converged_2pct": self.converged(0.02),
+        }
+
+    @property
+    def trajectory(self) -> list[dict]:
+        return list(self._trajectory)

@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ControllerConfig, ModelConfig
 from repro.models.common import greedy_sample
+from repro.runtime.controller import AlphaController
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +27,10 @@ class ServeConfig:
     max_len: int = 256
     max_new_tokens: int = 32
     greedy: bool = True
+    # Online adaptive-alpha feedback loop (DESIGN.md §4). Off by default:
+    # the static-AlphaSchedule path below stays bit-identical when disabled.
+    controller: ControllerConfig = dataclasses.field(
+        default_factory=ControllerConfig)
 
 
 @dataclasses.dataclass
@@ -62,6 +67,75 @@ class Server:
         self.prefill_fn = jax.jit(_prefill)
         self.decode_fn = jax.jit(_decode)
 
+        # ---- adaptive-alpha controller wiring (DESIGN.md §4) -------------
+        # The controller lives across generate() calls so adaptation carries
+        # over between scheduler batches.  Alphas enter the jitted step as a
+        # traced (L,) argument: updating them never retraces.  Audit steps
+        # re-dispatch through the masked strategy (full gate matmul => exact
+        # false negatives, exact paper skip semantics for the emitted token).
+        self.controller: Optional[AlphaController] = None
+        if scfg.controller.enabled and cfg.sparse.enabled:
+            if cfg.family == "xlstm":
+                raise ValueError("xlstm has no SparseInfer MLP decode path; "
+                                 "controller unsupported")
+            self.controller = AlphaController(
+                scfg.controller, cfg.sparse.alpha_schedule(),
+                self._n_controlled_layers())
+            self._build_controller_fns()
+
+    def _build_controller_fns(self) -> None:
+        """(Re)build the stats-collecting decode jits against the CURRENT
+        self.cfg — called at init and again whenever maybe_adapt_capacity
+        changes the static capacity (which forces a re-jit anyway)."""
+        cfg = self.cfg
+
+        def _decode_ctrl(params, tok, caches, length, alphas):
+            logits, caches, stats = self.mod.decode_step(
+                params, cfg, tok, caches, length, alphas=alphas,
+                collect_stats=True)
+            return greedy_sample(logits), caches, stats
+
+        audit_cfg = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, strategy="masked"))
+
+        def _decode_audit(params, tok, caches, length, alphas):
+            logits, caches, stats = self.mod.decode_step(
+                params, audit_cfg, tok, caches, length, alphas=alphas,
+                collect_stats=True)
+            return greedy_sample(logits), caches, stats
+
+        self.decode_ctrl_fn = jax.jit(_decode_ctrl)
+        self.decode_audit_fn = jax.jit(_decode_audit)
+
+    def maybe_adapt_capacity(self) -> bool:
+        """Apply the controller's capacity recommendation (DESIGN.md §4).
+
+        Capacity is a static shape under jit, so it can only move where a
+        re-jit is acceptable — the scheduler calls this between request
+        chunks.  Returns True when the effective capacity changed (and the
+        controller decode fns were rebuilt)."""
+        ctl, sc = self.controller, self.scfg.controller
+        if ctl is None or not sc.adapt_capacity or ctl.state.steps == 0:
+            return False
+        k = self.cfg.d_ff
+        hint = ctl.capacity_hint(k)
+        sp = dataclasses.replace(self.cfg.sparse,
+                                 capacity_frac=min(1.0, hint / k))
+        new_cfg = self.cfg.replace(sparse=sp)
+        if new_cfg.sparse.capacity(k) == self.cfg.sparse.capacity(k):
+            return False
+        self.cfg = new_cfg
+        self._build_controller_fns()
+        return True
+
+    def _n_controlled_layers(self) -> int:
+        """Length of the per-layer alpha/stats vectors for this family (must
+        match what decode_step consumes/emits)."""
+        if self.cfg.family == "hybrid":
+            n_inv = (self.cfg.n_layers // self.cfg.attn_every)
+            return n_inv
+        return self.cfg.n_layers
+
     # ----------------------------------------------------------- single ---
     def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
         """prompts: (B, P) int32 -> (B, max_new) generated ids (greedy)."""
@@ -72,8 +146,21 @@ class Server:
         tok = greedy_sample(logits)[:, None]
         out = [tok]
         length = jnp.int32(plen)
+        ctl = self.controller
         for _ in range(max_new - 1):
-            tok, caches = self.decode_fn(self.params, tok, caches, length)
+            if ctl is None:
+                tok, caches = self.decode_fn(self.params, tok, caches, length)
+            else:
+                audit = ctl.is_audit_step()
+                fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
+                # hybrid stats come back sized n_inv; alphas enter sized
+                # n_layers (decode_step slices) — pad from controller width
+                alphas = np.resize(ctl.alphas(),
+                                   self.cfg.n_layers).astype(np.float32)
+                tok, caches, stats = fn(self.params, tok, caches, length,
+                                        jnp.asarray(alphas))
+                ctl.observe({k: np.asarray(v) for k, v in stats.items()},
+                            audit=audit)
             tok = tok[:, None]
             out.append(tok)
             length = length + 1
@@ -99,6 +186,7 @@ class Server:
                 r.out = gen[i, :r.max_new]
                 r.latency_s = dt
                 done.append(r)
+            self.maybe_adapt_capacity()  # re-jit boundary (DESIGN.md §4)
         return done
 
 

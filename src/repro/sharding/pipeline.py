@@ -93,8 +93,13 @@ def pipeline_apply(block_fn: Callable, stage_weights, x, *,
     in_specs = (jax.tree.map(lambda _: P(axis), stage_weights,
                              is_leaf=lambda a: hasattr(a, "shape")),
                 P())
-    fn = jax.shard_map(stage_loop, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(), check_vma=False)
+    if hasattr(jax, "shard_map"):  # jax >= 0.5
+        fn = jax.shard_map(stage_loop, mesh=mesh, in_specs=in_specs,
+                           out_specs=P(), check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(stage_loop, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(), check_rep=False)
     return fn(stage_weights, x)
 
 

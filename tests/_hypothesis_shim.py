@@ -1,0 +1,86 @@
+"""Seeded-sampling fallback for ``hypothesis`` so the tier-1 suite runs with
+no extra deps.
+
+Implements just the surface the test files use::
+
+    from hypothesis import given, settings, strategies as st
+    @given(st.integers(1, 200), st.floats(0.8, 1.2), st.sampled_from([1, 2]))
+    @settings(max_examples=30, deadline=None)
+    def test_...(self, d, a, g): ...
+
+Each strategy draws from a ``numpy`` Generator seeded deterministically from
+the test name and example index, so runs are reproducible and failures
+re-fire on re-run.  ``max_examples`` is capped (property sweeps are a
+thoroughness tool; the tier-1 budget is 2 minutes).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+# Each drawn shape retraces/recompiles jax primitives, so examples are
+# compile-bound: a handful of seeded draws keeps the whole shimmed sweep
+# inside the tier-1 budget while still varying shapes (hypothesis runs the
+# full count in the nightly job, where it is installed).
+MAX_EXAMPLES_CAP = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `hypothesis.strategies` as a namespace
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        n = min(getattr(fn, "_shim_max_examples", 10), MAX_EXAMPLES_CAP)
+        base_seed = zlib.crc32(fn.__qualname__.encode())
+
+        # NOT functools.wraps: __wrapped__ would make pytest introspect the
+        # original signature and treat the drawn parameters as fixtures.
+        def wrapper(*args, **kwargs):
+            for i in range(n):
+                rng = np.random.default_rng((base_seed, i))
+                drawn = [s.example(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on shim example {i} "
+                        f"with drawn arguments {drawn!r}: {e}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,18 @@
+"""Shared test setup: CPU backend + persistent XLA compilation cache.
+
+The tier-1 suite is compile-bound (dozens of small jitted models), so a
+persistent cache cuts repeat runs roughly in half.  Cache misses (first run,
+jax upgrade) only cost the compiles the run would have done anyway.
+"""
+import os
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+try:
+    jax.config.update("jax_compilation_cache_dir",
+                      os.path.join(os.path.dirname(__file__), "..",
+                                   ".pytest_cache", "jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
+except Exception:  # older jax without the persistent cache — fine
+    pass

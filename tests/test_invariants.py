@@ -4,7 +4,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # tier-1 runs with no extra deps
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import predictor as P
 from repro.core.sparse_mlp import (SparseInferConfig, dense_mlp, gather_mlp,
@@ -79,6 +84,7 @@ class TestMoEInvariants:
         c = _capacity(cfg, tokens, 8)
         assert c >= 8 and c % 8 == 0
 
+    @pytest.mark.slow
     @given(st.integers(0, 10**5))
     @settings(max_examples=6, deadline=None)
     def test_moe_permutation_invariance_of_total_mass(self, seed):

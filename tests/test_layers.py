@@ -46,8 +46,10 @@ def naive_attention(p, x, cfg, pos):
 
 class TestAttention:
     @pytest.mark.parametrize("window,softcap,qk_norm,bias", [
-        (0, 0.0, False, False), (8, 0.0, False, False),
-        (0, 30.0, False, False), (0, 0.0, True, True)])
+        (0, 0.0, False, False),
+        pytest.param(8, 0.0, False, False, marks=pytest.mark.slow),
+        pytest.param(0, 30.0, False, False, marks=pytest.mark.slow),
+        pytest.param(0, 0.0, True, True, marks=pytest.mark.slow)])
     def test_flash_vs_naive(self, window, softcap, qk_norm, bias):
         cfg = AttentionConfig(d_model=64, n_heads=4, n_kv_heads=2,
                               head_dim=16, window=window, softcap=softcap,
@@ -60,6 +62,7 @@ class TestAttention:
                                    np.asarray(naive_attention(p, x, cfg, pos)),
                                    rtol=2e-4, atol=2e-4)
 
+    @pytest.mark.slow
     def test_decode_matches_forward(self):
         cfg = AttentionConfig(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
         p = init_attention(KEY, cfg)
@@ -89,8 +92,8 @@ class TestAttention:
         # two shards combined via pmax/psum inside shard_map
         import os
         from jax.sharding import PartitionSpec as Ps
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
 
         def shard_fn(kc_l, vc_l, kvpos_l):
             o, l, m = decode_attend_partial(q, kc_l, vc_l, cfg, kvpos_l,
@@ -110,6 +113,7 @@ class TestAttention:
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 class TestMamba2:
     CFG = Mamba2Config(d_model=32, d_state=8, head_dim=8, expand=2, chunk=4)
 
@@ -143,6 +147,7 @@ class TestMamba2:
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 class TestXLSTM:
     CFG = XLSTMConfig(d_model=32, n_heads=4, expand=2)
 
@@ -178,6 +183,7 @@ class TestXLSTM:
         assert bool(jnp.all(jnp.isfinite(y)))
 
 
+@pytest.mark.slow
 class TestMoE:
     CFG = MoEConfig(d_model=32, d_expert=16, n_experts=8, top_k=2,
                     capacity_factor=8.0, activation="silu")
@@ -225,6 +231,7 @@ class TestMoE:
         assert bool(jnp.all(jnp.isfinite(y)))
 
 
+@pytest.mark.slow
 class TestInt8KVCache:
     def test_int8_decode_close_to_bf16(self):
         """Quantized KV (factored scales) tracks the f32-cache decode."""

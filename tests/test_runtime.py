@@ -93,6 +93,7 @@ class TestTrainerFaultTolerance:
         assert hist[-1]["loss"] < hist[0]["loss"] + 0.5  # noisy but sane
         assert np.isfinite([h["loss"] for h in hist]).all()
 
+    @pytest.mark.slow
     def test_bitwise_resume_after_crash(self, tmp_path):
         """Crash at step 5, resume from ckpt@3 => identical trajectory."""
         t1 = make_trainer(tmp_path / "a", async_ckpt=False)
@@ -112,6 +113,7 @@ class TestTrainerFaultTolerance:
         for s in (4, 5, 6):
             np.testing.assert_allclose(got[s], ref[s], rtol=0, atol=0)
 
+    @pytest.mark.slow
     def test_elastic_restore_changes_placement(self, tmp_path):
         """Checkpoint restores under different sharding (device_put path)."""
         t = make_trainer(tmp_path, async_ckpt=False)
@@ -120,8 +122,8 @@ class TestTrainerFaultTolerance:
                  "nu": t.opt_state.nu}
         # restore with explicit shardings (single-device here; the API path
         # is identical on a resized mesh — see launch/elastic.py)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
         got, _ = t.ckpt.restore(state, shardings=sh)
@@ -152,6 +154,7 @@ class TestGradCompression:
         np.testing.assert_allclose(np.asarray(total / 50),
                                    np.asarray(g["w"]), rtol=0.05)
 
+    @pytest.mark.slow
     def test_training_with_compression_converges(self, tmp_path):
         t = make_trainer(tmp_path, grad_compression=True)
         hist = t.run(steps=6)

@@ -28,8 +28,8 @@ class TestSpecFiltering:
             specs, is_leaf=lambda s: isinstance(s, P)))
 
     def test_duplicate_axis_dropped(self):
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("model",))
         out = R._filter_spec(["model", "model"], (4, 4), mesh)
         assert out[0] == "model" and out[1] is None
 
