@@ -6,7 +6,7 @@ Fig. 3    — per-layer precision/recall incl. the early-layer degradation
 Fig. 4    — end-to-end decode latency: dense vs SparseInfer (CPU wall time
             at the paper's real 7B/13B dims + TPU byte-model projection)
 Tables II/III — accuracy vs alpha (logit KL + greedy-token agreement proxy;
-            GSM8K/BBH need trained ProSparse checkpoints — DESIGN.md §5)
+            GSM8K/BBH need trained ProSparse checkpoints — DESIGN.md §6)
 """
 from __future__ import annotations
 
@@ -307,4 +307,108 @@ def controller_serving_study(max_new: int = 24, batch: int = 2) -> list[str]:
         f"controller.on.audit,fn={on_rep['mean_false_neg']:.4f},"
         f"audits={on_rep['audits']}",
     ]
+    return rows
+
+
+# -------------------- slot-refill scheduler + SLA tiers (DESIGN.md §5) -----
+
+def slot_refill_study(n_requests: int = 8, batch: int = 2) -> list[str]:
+    """Chunked vs slot-refill continuous batching, and a mixed-SLA run.
+
+    Workload: heterogeneous decode budgets.  The chunked scheduler runs
+    each chunk to its SLOWEST request's budget, so short requests burn
+    decode steps they don't need; slot-refill retires every request at its
+    own budget and refills the slot.  The useful-step count below is
+    scheduler math (deterministic); tokens/s is CPU wall clock over the
+    same workload (jits pre-warmed on a throwaway queue).  NOTE the proxy
+    regime: at these reduced dims a decode step costs ~1 ms, so the
+    per-step host roundtrip and the batch-1 refill prefills can mask the
+    saved steps on CPU — the step counts are the hardware-independent
+    signal (decode dominates at paper scale, §V).
+
+    The SLA section serves a latency:balanced:quality mix through the
+    masked strategy (per-token skip => per-tier density telemetry) with a
+    live per-tier controller: realized densities must come out ordered by
+    the tiers' targets (tests/test_scheduler.py pins this)."""
+    from repro.configs.base import ControllerConfig
+    from repro.configs.registry import reduced_config
+    from repro.launch.specs import model_module
+    from repro.runtime.server import (Request, Server, ServeConfig,
+                                      throughput_report)
+
+    cfg = reduced_config("prosparse-llama2-7b").replace(
+        d_model=128, d_ff=256, n_layers=4)
+    cfg = cfg.replace(sparse=dataclasses.replace(
+        cfg.sparse, capacity_frac=0.5, group_size=1))
+    mod = model_module(cfg)
+    params = relufy_gate_bias(mod.init_lm(jax.random.PRNGKey(0), cfg), 0.05)
+
+    def reqs():
+        return [Request(uid=i,
+                        prompt=np.random.default_rng(i).integers(
+                            0, cfg.vocab, size=8),
+                        max_new=4 + 8 * (i % 3),
+                        sla=("latency", "balanced", "quality")[i % 3])
+                for i in range(n_requests)]
+
+    # Decode-step accounting, same unit for both schedulers: invocations of
+    # the jitted batch-B decode step (the first token of each request comes
+    # from its prefill, so a request needs max_new-1 decode steps).
+    budgets = [r.max_new for r in reqs()]
+    chunked_steps = sum(max(budgets[i:i + batch]) - 1
+                        for i in range(0, len(budgets), batch))
+
+    def slot_refill_steps() -> int:
+        q = list(budgets)
+
+        def next_need() -> int:
+            while q:
+                b = q.pop(0) - 1
+                if b > 0:
+                    return b
+            return 0
+
+        slots = [next_need() for _ in range(batch)]
+        steps = 0
+        while any(slots):
+            steps += 1
+            for i in range(batch):
+                if slots[i]:
+                    slots[i] -= 1
+                    if slots[i] == 0:
+                        slots[i] = next_need()
+        return steps
+
+    refill_steps = slot_refill_steps()
+    rows = [f"scheduler.decode_steps,slot_refill={refill_steps},"
+            f"chunked={chunked_steps}_saved="
+            f"{(chunked_steps - refill_steps) / chunked_steps:.0%}"]
+
+    for refill in (False, True):
+        srv = Server(mod, cfg, ServeConfig(batch=batch, max_len=64,
+                                           slot_refill=refill), params)
+        srv.serve(reqs())                     # warmup/compile
+        rep = throughput_report(srv.serve(reqs()))
+        name = "slot_refill" if refill else "chunked"
+        rows.append(
+            f"scheduler.{name},tok_per_s={rep['tok_per_s']:.1f},"
+            f"p95_latency_ms={rep['p95_latency_s'] * 1e3:.0f}")
+
+    # mixed SLA, per-tier controller, masked strategy (exact per-token skip)
+    sp = dataclasses.replace(cfg.sparse, strategy="masked")
+    live = ControllerConfig(enabled=True, per_tier=True, target_density=0.2,
+                            gain=0.5, ema=0.3, audit_period=0, fn_budget=1.0)
+    srv = Server(mod, cfg.replace(sparse=sp),
+                 ServeConfig(batch=3, max_len=96, controller=live), params)
+    long_reqs = [Request(uid=i, prompt=np.random.default_rng(i).integers(
+                             0, cfg.vocab, size=8), max_new=24,
+                         sla=("latency", "balanced", "quality")[i % 3])
+                 for i in range(6)]
+    srv.serve(long_reqs)
+    tiers = srv.controller.report()["tiers"]
+    for name in ("latency", "balanced", "quality"):
+        t = tiers[name]
+        rows.append(
+            f"scheduler.sla.{name},density={t['realized_density']:.3f},"
+            f"target={t['target_density']:.3f}")
     return rows

@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
 Prints ``name,value,derived`` CSV rows. See benchmarks/paper_tables.py for
-the per-table implementations and DESIGN.md §6 for the experiment index.
+the per-table implementations and DESIGN.md §7 for the experiment index.
 """
 import argparse
 import sys
@@ -31,6 +31,9 @@ def main() -> None:
         ("Adaptive-alpha controller on vs off (DESIGN.md 4, paper V-B)",
          T.controller_serving_study,
          {"max_new": 12 if args.quick else 24}),
+        ("Slot-refill scheduler + SLA tiers (DESIGN.md 5)",
+         T.slot_refill_study,
+         {"n_requests": 4 if args.quick else 8}),
     ]
     failures = 0
     for title, fn, kw in sections:

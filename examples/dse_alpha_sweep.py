@@ -31,7 +31,7 @@ for alpha in (0.95, 1.0, 1.05, 1.1):
                                 capacity_frac=cap, group_size=1)
         y, st = gather_mlp(params, x, cfg, alpha=alpha, return_stats=True)
         rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
-        kept = float(st["realized_density"])
+        kept = float(jnp.mean(st["realized_density"]))  # per-token stats
         print(f"{alpha:6.2f} {cap*100:6.0f} {kept*100:6.1f} "
               f"{cap*100:7.0f} {rel:8.4f}")
 print("\nreading: alpha raises fidelity at fixed capacity; capacity caps "
@@ -51,7 +51,9 @@ for target in (0.05, 0.10, 0.20):
         audit = ctl.is_audit_step()
         _, st = masked_mlp(params, xb, cfg0,
                            alpha=float(ctl.alphas()[0]), return_stats=True)
-        ctl.observe({k: np.asarray(v)[None] for k, v in st.items()
+        # per-token stats (B,) -> batch mean -> the controller's (L,) = (1,)
+        ctl.observe({k: np.asarray(v).mean(keepdims=True)
+                     for k, v in st.items()
                      if k in ("predicted_density", "realized_density",
                               "actual_density", "false_neg_rate",
                               "overflow_frac")}, audit=audit)

@@ -1,5 +1,7 @@
 """End-to-end serving driver (deliverable b): batched requests through the
-slot scheduler with SparseInfer decode, dense vs sparse comparison.
+slot-refill scheduler with SparseInfer decode — dense vs sparse comparison,
+chunked vs slot-refill scheduling, and a mixed-SLA run with per-tier
+realized-density telemetry (DESIGN.md §5).
 
     PYTHONPATH=src python examples/serve_e2e.py [--arch prosparse-llama2-13b]
 """
@@ -10,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.configs.base import ControllerConfig
 from repro.configs.registry import reduced_config
 from repro.launch.specs import model_module
 from repro.runtime.server import Request, Server, ServeConfig, \
@@ -58,6 +61,41 @@ def main():
                          for a, b in zip(dense_out, sparse_out)])
         print(f"sparseinfer alpha={alpha}: {rep_s['tok_per_s']:.1f} tok/s, "
               f"greedy agreement vs dense: {agree:.2f}")
+
+    # ---- scheduler comparison: chunked vs slot-refill (DESIGN.md §5) -----
+    # Heterogeneous budgets: in the chunked scheduler every request waits
+    # for its chunk's slowest; slot-refill retires each request when ITS
+    # budget is spent and refills the slot.
+    def reqs_mixed():
+        return [Request(uid=i,
+                        prompt=np.random.default_rng(i).integers(
+                            0, cfg.vocab, size=8),
+                        max_new=2 + 5 * (i % 3),
+                        sla=("latency", "balanced", "quality")[i % 3])
+                for i in range(args.requests)]
+
+    for refill in (False, True):
+        srv = Server(mod, cfg, ServeConfig(batch=2, max_len=64,
+                                           slot_refill=refill), params)
+        rep = throughput_report(srv.serve(reqs_mixed()))
+        print(f"{'slot-refill' if refill else 'chunked':>11}: "
+              f"{rep['tokens']} tokens, {rep['tok_per_s']:.1f} tok/s, "
+              f"p95 latency {rep['p95_latency_s']*1e3:.0f} ms")
+
+    # ---- mixed SLA tiers: per-tier realized density -----------------------
+    # masked strategy => per-token skip, so each tier's alpha offset shows
+    # up in its own realized density (frozen controller: telemetry only).
+    sp = dataclasses.replace(cfg.sparse, enabled=True, strategy="masked",
+                             capacity_frac=1.0, group_size=1)
+    frozen = ControllerConfig(enabled=True, per_tier=True, gain=0.0,
+                              fn_gain=0.0, audit_period=0)
+    srv = Server(mod, cfg.replace(sparse=sp),
+                 ServeConfig(batch=3, max_len=64, controller=frozen), params)
+    srv.serve(reqs_mixed())
+    tiers = srv.controller.report()["tiers"]
+    print("per-tier realized density (alpha offsets, frozen controller):")
+    for name in ("latency", "balanced", "quality"):
+        print(f"  {name:>9}: {tiers[name]['realized_density']:.3f}")
 
 
 if __name__ == "__main__":

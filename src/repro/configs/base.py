@@ -14,6 +14,35 @@ from repro.core.sparse_mlp import SparseInferConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class SLATier:
+    """One per-request service tier (DESIGN.md §5).
+
+    The paper's alpha is a per-token knob (``core/predictor.py:margins``
+    broadcasts batch alphas), so each request can pick its own point on the
+    accuracy/sparsity curve: a tier maps to a per-slot alpha offset added to
+    the per-layer schedule, and — when the controller runs — to a per-tier
+    density target the feedback loop regulates independently.
+    """
+
+    name: str
+    alpha_offset: float = 0.0   # added to every layer's schedule alpha
+    target_scale: float = 1.0   # multiplies ControllerConfig.target_density
+
+    def target(self, base_density: float) -> float:
+        return float(min(1.0, max(1e-3, base_density * self.target_scale)))
+
+
+# Tier offsets are sized for the reduced CPU configs (margin thresholds move
+# in counts of (alpha-1)*N_pos, so small d needs large offsets); paper-scale
+# models would use offsets in the 0.01-0.05 band (§V-B).
+DEFAULT_SLA_TIERS: tuple = (
+    SLATier("latency", alpha_offset=-0.25, target_scale=0.6),
+    SLATier("balanced"),
+    SLATier("quality", alpha_offset=0.25, target_scale=1.4),
+)
+
+
+@dataclasses.dataclass(frozen=True)
 class ControllerConfig:
     """Online adaptive-alpha controller for the serve path (DESIGN.md §4).
 
@@ -37,6 +66,10 @@ class ControllerConfig:
                                    # keep-rate; a capacity change is a re-jit,
                                    # so it applies between scheduler chunks
                                    # (runtime/server.py:maybe_adapt_capacity)
+    per_tier: bool = False         # one (alpha vector, density target) per
+                                   # ServeConfig.sla_tiers entry: state is
+                                   # (T, L), telemetry aggregates per tier
+                                   # (slot-refill scheduler, DESIGN.md §5)
 
 
 @dataclasses.dataclass(frozen=True)

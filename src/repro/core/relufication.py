@@ -5,7 +5,7 @@ were swapped for ReLU (plus optional FATReLU positive thresholds) and
 fine-tuned.  Here we provide the activation registry and the config-level
 swap.  Fine-tuning is out of scope (the paper takes ProSparse checkpoints as
 given); random-init models with ReLU gates reproduce the *mechanism* — see
-DESIGN.md §5.
+DESIGN.md §6.
 """
 from __future__ import annotations
 

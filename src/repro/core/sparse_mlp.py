@@ -86,10 +86,13 @@ def _act(cfg: SparseInferConfig):
     return get_activation(cfg.activation)
 
 
-# Telemetry contract shared by all four strategies (DESIGN.md §4): every
-# ``return_stats=True`` call yields exactly these float32 scalars, so the
-# serve path can stack them per layer under scan and hand one fixed pytree
-# to the controller regardless of the strategy in use.
+# Telemetry contract shared by all four strategies (DESIGN.md §4/§5): every
+# ``return_stats=True`` call yields exactly these float32 arrays shaped like
+# the TOKEN dims of the input (``x.shape[:-1]``), so the serve path can stack
+# them per layer under scan — (L, B) per decode step — and aggregate per SLA
+# tier on the host regardless of the strategy in use.  Quantities that only
+# exist at batch/union granularity (gather's capacity clamp, the fused
+# kernel's selection) are broadcast over the token axis.
 MLP_STAT_KEYS = (
     "predicted_density",   # fraction of k the predictor keeps (margin <= 0)
     "realized_density",    # fraction of k actually computed (post capacity)
@@ -101,15 +104,15 @@ MLP_STAT_KEYS = (
 )
 
 
-def zero_mlp_stats() -> dict:
-    return {k: jnp.float32(0.0) for k in MLP_STAT_KEYS}
+def zero_mlp_stats(shape: tuple = ()) -> dict:
+    return {k: jnp.zeros(shape, jnp.float32) for k in MLP_STAT_KEYS}
 
 
-def _stats(**kw) -> dict:
-    out = zero_mlp_stats()
+def _stats(shape: tuple = (), **kw) -> dict:
+    out = zero_mlp_stats(shape)
     for k, v in kw.items():
         assert k in out, k
-        out[k] = jnp.asarray(v, jnp.float32)
+        out[k] = jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape)
     return out
 
 
@@ -123,8 +126,9 @@ def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
         h1 = h1 * (x @ params["wu_t"].T.astype(x.dtype))
     y = h1 @ params["wd_t"].astype(x.dtype)
     if return_stats:
-        return y, _stats(predicted_density=1.0, realized_density=1.0,
-                         actual_density=jnp.mean(g1 > 0))
+        return y, _stats(x.shape[:-1],
+                         predicted_density=1.0, realized_density=1.0,
+                         actual_density=jnp.mean(g1 > 0, axis=-1))
     return y
 
 
@@ -145,6 +149,8 @@ def masked_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     This path computes the FULL gate matmul, so its stats include the exact
     false-negative rate (active neurons the predictor skipped) — the serve
     controller's periodic dense-audit steps run through here (DESIGN.md §4).
+    ``alpha`` may be a scalar or an array broadcasting against the token
+    dims of ``x`` (per-slot SLA alphas, DESIGN.md §5).
     """
     act = _act(cfg)
     m = _margins(params, x, alpha)          # (..., k)
@@ -157,10 +163,11 @@ def masked_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if return_stats:
         active = g1 > 0
         stats = _stats(
-            predicted_density=jnp.mean(keep),
-            realized_density=jnp.mean(keep),  # every predicted row computed
-            actual_density=jnp.mean(active),
-            false_neg_rate=jnp.mean(active & (m > 0)),
+            x.shape[:-1],
+            predicted_density=jnp.mean(keep, axis=-1),
+            realized_density=jnp.mean(keep, axis=-1),  # every predicted row
+            actual_density=jnp.mean(active, axis=-1),  # computed
+            false_neg_rate=jnp.mean(active & (m > 0), axis=-1),
         )
         return y, stats
     return y
@@ -199,8 +206,8 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
         if (k // g) % msz == 0 and cap % msz == 0:
             ms = msz
 
-    m = _margins(params, xg, alpha)               # (G, B, k)
-    m = jax.vmap(S.union_margin)(m)               # (G, k)
+    m_tok = _margins(params, xg, alpha)           # (G, B, k) per-token
+    m = jax.vmap(S.union_margin)(m_tok)           # (G, k) batch union
     gm = jax.vmap(lambda mm: S.group_margins(mm, g))(m)   # (G, k/g)
     gm = gm.reshape(ngrp, ms, (k // g) // ms)     # (G, ms, k/g/ms)
     gm = R.shard(gm, None, "model", None)
@@ -254,19 +261,29 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if squeeze:
         y = y[0]
     if return_stats:
-        # sums over ms shards, means over the G token groups; counts are in
-        # row-group units (predicted at group granularity over-counts vs the
-        # per-neuron rate: a group survives if ANY member does)
-        n_sel = sel.count.astype(jnp.float32).sum() / ngrp
-        n_pred = sstats.predicted.astype(jnp.float32).sum() / ngrp
-        n_over = sstats.overflow.astype(jnp.float32).sum() / ngrp
+        # Per-token stats (contract: token dims of the input).  Selection /
+        # capacity quantities only exist per batch-union group: they are
+        # summed over the ms shards and broadcast over the group's tokens.
+        # Counts are in row-group units (a group survives if ANY member
+        # does, so group-granularity predicted over-counts the per-neuron
+        # rate); per-token predicted comes from the pre-union margins at the
+        # same group granularity.
+        grp_keep = jnp.any(m_tok.reshape(ngrp, b, k // g, g) <= 0, axis=-1)
+        sel_frac = sel.count.astype(jnp.float32).sum(-1) * g / k      # (G,)
+        over_frac = sstats.overflow.astype(jnp.float32).sum(-1) * g / k
         stats = _stats(
-            predicted_density=n_pred * g / k,
-            realized_density=n_sel * g / k,
-            actual_density=jnp.sum(g1 > 0) / (ngrp * b * k),
-            overflow_frac=n_over * g / k,
+            (ngrp, b),
+            predicted_density=jnp.mean(grp_keep, axis=-1),
+            realized_density=sel_frac[:, None],
+            actual_density=jnp.sum(g1 > 0, axis=(-2, -1)) / k,
+            overflow_frac=over_frac[:, None],
         )
-        # legacy keys kept for examples/notebooks
+        if not grouped_in:
+            stats = {kk: v[0] for kk, v in stats.items()}
+        if squeeze:
+            stats = {kk: v[0] for kk, v in stats.items()}
+        # legacy scalar keys kept for examples/notebooks
+        n_sel = sel.count.astype(jnp.float32).sum() / ngrp
         stats["capacity"] = cap * g
         stats["selected"] = (n_sel * g).astype(jnp.int32)
         stats["density"] = n_sel * g / k
@@ -296,9 +313,9 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if sign_wg is None:
         sign_wg = P.pack_signs(params["wg_t"])
     packed_x = kops.sign_pack(xb, interpret=interpret)
-    m = P.margins(sign_wg, packed_x, d, alpha)
-    m = S.union_margin(m)
-    gm = S.group_margins(m, g)
+    m = P.margins(sign_wg, packed_x, d, alpha)    # (B, k) per-token
+    m_u = S.union_margin(m)
+    gm = S.group_margins(m_u, g)
     sel, sstats = S.capacity_select_with_stats(gm, cap)
 
     y = kops.fused_sparse_mlp(
@@ -309,11 +326,17 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     )
     y = y[0] if squeeze else y
     if return_stats:
+        # per-token predicted from the pre-union margins; selection-level
+        # quantities broadcast over the batch (one union selection)
+        grp_keep = jnp.any(m.reshape(xb.shape[0], k // g, g) <= 0, axis=-1)
         stats = _stats(
-            predicted_density=sstats.predicted.astype(jnp.float32) * g / k,
+            xb.shape[:-1],
+            predicted_density=jnp.mean(grp_keep, axis=-1),
             realized_density=sstats.selected.astype(jnp.float32) * g / k,
             overflow_frac=sstats.overflow.astype(jnp.float32) * g / k,
         )
+        if squeeze:
+            stats = {kk: v[0] for kk, v in stats.items()}
         return y, stats
     return y
 

@@ -4,6 +4,10 @@ CPU demo (reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch prosparse-llama2-13b \
         --reduced --requests 8 --max-new 16 --strategy gather
 
+Slot-refill continuous batching with a per-request SLA mix (DESIGN.md §5):
+    ... --strategy masked --sla-mix latency:1,balanced:2,quality:1 \
+        --controller --per-tier
+
 Production: same flags plus --mesh 16x16 (weights TP over 'model').
 """
 from __future__ import annotations
@@ -25,6 +29,27 @@ from repro.runtime.server import Request, Server, ServeConfig, \
     throughput_report
 
 
+def parse_sla_mix(mix: str, n_requests: int) -> list:
+    """``"latency:1,balanced:2"`` -> a tier name per request, interleaved
+    round-robin in weight proportion (so every scheduler batch sees the
+    mix, not a sorted prefix)."""
+    pairs = []
+    for part in mix.split(","):
+        name, _, w = part.strip().partition(":")
+        pairs.append((name, int(w) if w else 1))
+    total = sum(w for _, w in pairs)
+    if total <= 0 or any(w < 0 for _, w in pairs):
+        raise ValueError(f"--sla-mix needs positive weights, got {mix!r}")
+    out, acc = [], [0.0] * len(pairs)
+    for _ in range(n_requests):
+        for j, (_, w) in enumerate(pairs):
+            acc[j] += w / total
+        j = max(range(len(pairs)), key=lambda j: acc[j])
+        acc[j] -= 1.0
+        out.append(pairs[j][0])
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=arch_names())
@@ -38,15 +63,29 @@ def main() -> None:
     ap.add_argument("--strategy", default=None,
                     choices=[None, "dense", "masked", "gather", "pallas"])
     ap.add_argument("--alpha", type=float, default=None)
+    # slot-refill continuous batching + per-request SLA tiers (DESIGN.md §5)
+    ap.add_argument("--slot-refill", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="slot-refill continuous batching (default); "
+                         "--no-slot-refill selects the legacy chunked "
+                         "scheduler")
+    ap.add_argument("--sla-mix", default="balanced:1",
+                    help="comma list tier:weight (tiers: latency, balanced, "
+                         "quality) — requests are assigned tiers "
+                         "proportionally, e.g. latency:1,balanced:2,"
+                         "quality:1")
     # online adaptive-alpha controller (DESIGN.md §4)
     ap.add_argument("--controller", action="store_true",
                     help="adapt per-layer alpha online toward "
                          "--target-density")
+    ap.add_argument("--per-tier", action="store_true",
+                    help="one controller (alpha vector, density target) per "
+                         "SLA tier (DESIGN.md §5)")
     ap.add_argument("--target-density", type=float, default=0.25)
     ap.add_argument("--ctrl-gain", type=float, default=0.5)
     ap.add_argument("--audit-period", type=int, default=8)
     ap.add_argument("--adapt-capacity", action="store_true",
-                    help="re-size gather capacity between request chunks "
+                    help="re-size gather capacity at refill boundaries "
                          "from the observed keep-rate (re-jit boundary)")
     args = ap.parse_args()
 
@@ -76,22 +115,30 @@ def main() -> None:
                                 target_density=args.target_density,
                                 gain=args.ctrl_gain,
                                 audit_period=args.audit_period,
-                                adapt_capacity=args.adapt_capacity)
+                                adapt_capacity=args.adapt_capacity,
+                                per_tier=args.per_tier)
         srv = Server(mod, cfg, ServeConfig(batch=args.batch,
                                            max_len=args.max_len,
                                            max_new_tokens=args.max_new,
+                                           slot_refill=args.slot_refill,
                                            controller=ccfg),
                      params, extra_inputs=extra)
+        slas = parse_sla_mix(args.sla_mix, args.requests)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, cfg.vocab,
                                             size=args.prompt_len),
-                        max_new=args.max_new)
+                        max_new=args.max_new, sla=slas[i])
                 for i in range(args.requests)]
         t0 = time.perf_counter()
         done = srv.serve(reqs)
         dt = time.perf_counter() - t0
         rep = throughput_report(done)
         rep["wall_s"] = dt
+        rep["scheduler"] = ("slot_refill" if args.slot_refill else "chunked")
+        rep["sla_mix"] = {s: slas.count(s) for s in dict.fromkeys(slas)}
+        # the chunked scheduler decodes every chunk on the uniform schedule
+        # (Server warns); don't let the report read as a tiered measurement
+        rep["sla_applied"] = bool(args.slot_refill)
         rep["sparse"] = {"enabled": cfg.sparse.enabled,
                          "strategy": cfg.sparse.strategy,
                          "alpha": cfg.sparse.alpha_base,

@@ -207,25 +207,35 @@ def _quantize_kv(x: jax.Array):
 
 def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
                     index: jax.Array) -> dict:
-    """Insert (B, S_new, K, hd) at sequence offset `index`."""
-    idx = index.astype(jnp.int32)
+    """Insert (B, S_new, K, hd) at sequence offset `index`.
+
+    ``index`` may be a scalar (one shared offset, the chunked-scheduler
+    layout) or (B,) — one offset per batch slot, the slot-refill continuous
+    batching layout (DESIGN.md §5) where every slot sits at its own length.
+    """
+    idx = jnp.asarray(index).astype(jnp.int32)
+    per_slot = idx.ndim == 1
+
+    def put(buf, upd, seq_axis_rank):
+        upd = upd.astype(buf.dtype)
+        if not per_slot:
+            starts = (0, idx) + (0,) * (seq_axis_rank - 2)
+            return jax.lax.dynamic_update_slice(buf, upd, starts)
+        one = lambda b, u, i: jax.lax.dynamic_update_slice(
+            b, u, (i,) + (0,) * (seq_axis_rank - 2))
+        return jax.vmap(one)(buf, upd, idx)
+
     out = dict(cache)
     if cache["k"].dtype == jnp.int8:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
-        out["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
-                                                (0, idx, 0, 0))
-        out["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
-                                                (0, idx, 0, 0))
-        out["k_scale"] = jax.lax.dynamic_update_slice(
-            cache["k_scale"], ks, (0, idx, 0))
-        out["v_scale"] = jax.lax.dynamic_update_slice(
-            cache["v_scale"], vs, (0, idx, 0))
+        out["k"] = put(cache["k"], kq, 4)
+        out["v"] = put(cache["v"], vq, 4)
+        out["k_scale"] = put(cache["k_scale"], ks, 3)
+        out["v_scale"] = put(cache["v_scale"], vs, 3)
         return out
-    out["k"] = jax.lax.dynamic_update_slice(
-        cache["k"], k_new.astype(cache["k"].dtype), (0, idx, 0, 0))
-    out["v"] = jax.lax.dynamic_update_slice(
-        cache["v"], v_new.astype(cache["v"].dtype), (0, idx, 0, 0))
+    out["k"] = put(cache["k"], k_new, 4)
+    out["v"] = put(cache["v"], v_new, 4)
     return out
 
 
@@ -254,18 +264,24 @@ def decode_attend_partial(q, cache_k, cache_v, cfg: AttentionConfig,
                           k_scale=None, v_scale=None):
     """Flash-decoding partial over a KV shard: returns (o_unnorm, l, m).
 
-    kv_positions: (S,) global positions of cache slots (for masks); slots
-    past the live length must carry position > q_position.
+    kv_positions: (S,) — or (B,S) per-slot — global positions of cache slots
+    (for masks); slots past the live length must carry position >
+    q_position.  q_position: scalar, or (B,) when every batch slot decodes
+    at its own length (slot-refill scheduler, DESIGN.md §5).
     int8 caches pass per-(B,S,K) scales; they factor out of both dots
     (applied to scores / folded into p) so nothing dequantizes in memory.
     """
     s = decode_scores(q, cache_k, cfg, kv_positions)         # (B,K,rep,S)
     if k_scale is not None:
         s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
-    mask = kv_positions <= q_position
+    q_pos = jnp.asarray(q_position)
+    if q_pos.ndim:                                           # per-slot (B,)
+        q_pos = q_pos[:, None]                               # vs (B,S) or (S,)
+    mask = kv_positions <= q_pos
     if cfg.window > 0:
-        mask &= (q_position - kv_positions) < cfg.window
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask &= (q_pos - kv_positions) < cfg.window
+    mask = mask[:, None, None, :] if mask.ndim == 2 else mask[None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
     m = s.max(-1)                                            # (B,K,rep)
     p = jnp.exp(s - m[..., None])
     l = p.sum(-1)
@@ -298,22 +314,32 @@ def finalize_decode(o, l, params: dict, x_dtype, cfg: AttentionConfig):
 def decode_attend(params: dict, x: jax.Array, cfg: AttentionConfig,
                   cache: dict, cache_len: jax.Array,
                   kv_positions: Optional[jax.Array] = None) -> tuple:
-    """Single-token decode. x: (B, 1, d). Returns (out (B,1,d), new_cache)."""
+    """Single-token decode. x: (B, 1, d). Returns (out (B,1,d), new_cache).
+
+    ``cache_len`` is a scalar (all slots at the same length) or (B,) — the
+    slot-refill scheduler's layout where each batch slot holds its own
+    request at its own position (DESIGN.md §5).
+    """
     from repro.layers.rope import apply_rope
-    pos = cache_len.reshape(1)                               # scalar position
+    cl = jnp.asarray(cache_len)
+    per_slot = cl.ndim == 1
+    # (B,1) per-slot positions or (1,1) shared — broadcasts against (B,1,H,hd)
+    pos = cl[:, None] if per_slot else cl.reshape(1)[None]
     q, k, v = _project_qkv(params, x, cfg)
     if not cfg.cross:
-        q = apply_rope(q, pos[None], cfg.rope_theta)
-        k = apply_rope(k, pos[None], cfg.rope_theta)
-    cache = update_kv_cache(cache, k, v, cache_len)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    cache = update_kv_cache(cache, k, v, cl)
     s_max = cache["k"].shape[1]
     if kv_positions is None:
         kv_positions = jnp.arange(s_max)
     # dead slots (>= cache_len+1) get position s_max+pos -> masked out
-    live = kv_positions <= cache_len
-    kvp = jnp.where(live, kv_positions, q_pos_sentinel(s_max, cache_len))
+    cmp = cl[:, None] if per_slot else cl
+    live = kv_positions <= cmp                       # (S,) or (B,S)
+    sent = q_pos_sentinel(s_max, cl)
+    kvp = jnp.where(live, kv_positions, sent[:, None] if per_slot else sent)
     o, l, m = decode_attend_partial(q, cache["k"], cache["v"], cfg, kvp,
-                                    cache_len, cache.get("k_scale"),
+                                    cl, cache.get("k_scale"),
                                     cache.get("v_scale"))
     return finalize_decode(o, l, params, x.dtype, cfg), cache
 

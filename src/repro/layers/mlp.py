@@ -28,8 +28,11 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
     ``alpha`` overrides the per-layer schedule (used under scan-over-layers
     where layer_idx is traced: the schedule is precomputed into an array; the
     serve-path controller feeds its adapted per-layer alphas the same way).
-    ``return_stats`` additionally yields the strategy's telemetry scalars
-    (exactly ``SM.MLP_STAT_KEYS``, a fixed pytree that stacks under scan).
+    It may be a scalar or a per-token vector broadcasting against the token
+    dims — the slot-refill scheduler's per-slot SLA alphas (DESIGN.md §5).
+    ``return_stats`` additionally yields the strategy's telemetry, exactly
+    ``SM.MLP_STAT_KEYS``, one float32 value per token (a fixed pytree that
+    stacks under scan).
     """
     shape = x.shape
 
@@ -57,11 +60,14 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
           and n % dp == 0 and dp > 1):
         xg = xf.reshape(dp, n // dp, shape[-1])
         xg = R.shard(xg, R.data_axes(mesh), None, None)
-        out = SM.gather_mlp(params, xg, cfg,
-                            alpha=1.0 if alpha is None else alpha,
+        ag = 1.0 if alpha is None else alpha
+        if getattr(ag, "ndim", 0) == 1:          # per-token -> per-group
+            ag = ag.reshape(dp, n // dp)
+        out = SM.gather_mlp(params, xg, cfg, alpha=ag,
                             return_stats=return_stats)
         if return_stats:
-            out = (out[0].reshape(n, shape[-1]), out[1])
+            st = {k: out[1][k].reshape(n) for k in SM.MLP_STAT_KEYS}
+            out = (out[0].reshape(n, shape[-1]), st)
         else:
             out = out.reshape(n, shape[-1])
     else:

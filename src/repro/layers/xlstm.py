@@ -4,7 +4,7 @@ Faithful-structure implementation of Beck et al. 2024 with the stabilized
 exponential gating.  Both cells run as lax.scan recurrences (compile-time
 O(1) in sequence length); decode carries O(1) state per layer, so the xlstm
 arch runs the `long_500k` cell.  Simplifications vs the reference code are
-documented inline (DESIGN.md §5).
+documented inline (DESIGN.md §6).
 """
 from __future__ import annotations
 

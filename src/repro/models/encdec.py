@@ -173,6 +173,10 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 caches: dict, cache_len: jax.Array, *,
                 alphas=None, collect_stats: bool = False):
+    """Contract as ``models.lm.decode_step``: cache_len scalar or (B,)
+    per-slot; alphas None | (L,) | (L, B) per-layer-per-slot (the scan
+    slices leading rows, so each decoder FFN sees its layer's scalar or
+    per-token alpha); stats (L, B) per-token (DESIGN.md §5)."""
     x = LM._embed_in(params, cfg, token)
     if alphas is None:
         alphas = jnp.asarray(LM._alphas(cfg))

@@ -219,7 +219,7 @@ def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
     if "moe" in blk:
         h, _ = moe_apply(blk["moe"], h, moe_cfg(cfg))
         if collect_stats:
-            stats = SM.zero_mlp_stats()
+            stats = SM.zero_mlp_stats((x.shape[0],))
     elif collect_stats:
         h, stats = mlp_apply(blk["mlp"], h, _mlp_sparse_cfg(cfg), decode=True,
                              alpha=alpha, return_stats=True)
@@ -292,9 +292,10 @@ def _seed_cache(kv, max_len, cfg: ModelConfig):
 
 def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len,
                         alphas=None, collect_stats: bool = False):
-    """``alphas``: optional traced (n_layers,) override of the static
-    schedule — the serve-path controller's adapted per-layer values enter
-    here without retracing (the static path embeds them as constants)."""
+    """``alphas``: optional traced override of the static schedule — either
+    (n_layers,) per-layer or (n_layers, B) per-layer-per-slot (SLA tiers,
+    DESIGN.md §5).  The serve-path controller's adapted values enter here
+    without retracing (the static path embeds them as constants)."""
     windows = _windows(cfg)
     p = len(windows)
     if alphas is None:
@@ -307,7 +308,7 @@ def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len,
             lambda a: a.reshape((n // p, p) + a.shape[1:]), stacked)
         caches_g = jax.tree.map(
             lambda a: a.reshape((n // p, p) + a.shape[1:]), caches_s)
-        alphas_g = alphas_s.reshape(n // p, p)
+        alphas_g = alphas_s.reshape((n // p, p) + alphas_s.shape[1:])
 
         def body(x, xs):
             blk_g, cache_g, al = xs
@@ -330,8 +331,9 @@ def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len,
             body, x, (grouped, caches_g, alphas_g))
         new_caches = jax.tree.map(
             lambda a: a.reshape((n,) + a.shape[2:]), new_caches)
-        if collect_stats:  # (n/p, p) scalars -> (n,) per layer
-            stats = jax.tree.map(lambda a: a.reshape((n,)), stats)
+        if collect_stats:  # (n/p, p, B) -> (n, B) per layer
+            stats = jax.tree.map(
+                lambda a: a.reshape((n,) + a.shape[2:]), stats)
         return x2, new_caches, stats
 
     new = {}
@@ -677,12 +679,18 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 alphas=None, collect_stats: bool = False):
     """One decode step. token: (B, 1) -> (logits (B, V), new caches).
 
-    ``alphas``: optional (n_layers,) per-layer predictor-alpha override (the
-    serve controller's adapted values; None keeps the static schedule and is
-    bit-identical to the pre-controller path).  With ``collect_stats`` the
-    return gains a third element: per-layer MLP telemetry arrays keyed by
-    ``repro.core.sparse_mlp.MLP_STAT_KEYS`` (length = alpha-consuming layers:
-    n_layers for dense/moe, invocation groups for hybrid, none for xlstm).
+    ``cache_len``: scalar shared length, or (B,) per-slot lengths — the
+    slot-refill scheduler's layout where each batch slot holds its own
+    request at its own position (DESIGN.md §5).
+    ``alphas``: optional predictor-alpha override (the serve controller's
+    adapted values; None keeps the static schedule and is bit-identical to
+    the pre-controller path).  Shape (n_layers,) per-layer, or
+    (n_layers, B) per-layer-per-slot — the SLA-tier alpha vector threads
+    through every MLP strategy as a per-token alpha.  With
+    ``collect_stats`` the return gains a third element: per-layer MLP
+    telemetry arrays keyed by ``repro.core.sparse_mlp.MLP_STAT_KEYS``,
+    shaped (L, B) (L = alpha-consuming layers: n_layers for dense/moe,
+    invocation groups for hybrid, none for xlstm).
     """
     x = _embed_in(params, cfg, token)
     stats = None

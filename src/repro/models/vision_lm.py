@@ -193,7 +193,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
         alphas = jnp.asarray(LM._alphas(cfg))
     else:
         alphas = jnp.asarray(alphas, jnp.float32)
-    alphas = alphas.reshape(n_groups, p)
+    # (L,) or (L, B) per-layer-per-slot (DESIGN.md §5)
+    alphas = alphas.reshape((n_groups, p) + alphas.shape[1:])
     self_g = jax.tree.map(
         lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]),
         params["self_blocks"])
@@ -227,8 +228,9 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     x = C.norm_apply(cfg, params["final_norm"], x)
     logits = C.head_logits(x[:, 0], LM._head_table(params), cfg.final_softcap)
     new_caches = {"self": new_self, "cross": caches["cross"]}
-    if collect_stats:  # (n_groups, p) -> (n_layers,)
-        stats = jax.tree.map(lambda a: a.reshape((n_groups * p,)), stats)
+    if collect_stats:  # (n_groups, p, B) -> (n_layers, B)
+        stats = jax.tree.map(
+            lambda a: a.reshape((n_groups * p,) + a.shape[2:]), stats)
         return logits, new_caches, stats
     return logits, new_caches
 

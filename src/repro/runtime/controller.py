@@ -13,7 +13,7 @@ closes the loop the paper describes, online (full design: DESIGN.md §4):
   to each layer's alpha, pushing realized density toward the target while a
   false-negative penalty term pushes back toward conservatism.
 
-Update law, per layer ``l``::
+Update law, per layer ``l`` (and per SLA tier ``t`` when tiered)::
 
     e_l     = density_ema[l] - target_density          # >0: too dense
     fn_ex   = max(fn_ema[l] - fn_budget, 0)            # audit overshoot
@@ -24,19 +24,29 @@ Raising alpha keeps more neurons (density rises), so the density term is
 negative feedback; the FN term only ever raises alpha.  Convergence for a
 monotone density response is exercised in tests/test_controller.py.
 
+**SLA tiers (DESIGN.md §5).**  Constructed with ``tiers`` (a sequence of
+``configs.base.SLATier``) the controller holds one alpha vector per
+(tier, layer): state arrays become (T, L), each tier starts from the
+schedule plus its alpha offset and regulates toward its own density target
+(``target_density * tier.target_scale``).  The slot-refill scheduler maps
+each batch slot to its request's tier (``slot_alphas``) and aggregates the
+per-token decode telemetry per tier (``aggregate_tier_stats``) before
+``observe``; tiers with no active slot in a step are frozen for that step.
+
 Capacity is a *static shape* under jit: per-layer capacity recommendations
 (``capacity_hint``) therefore only apply between batches where a re-jit is
-acceptable; the hint sizes C to the observed predicted density plus slack.
+acceptable; the hint sizes C to the observed union selection demand
+(realized density + clamp overflow) plus slack.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.configs.base import ControllerConfig
+from repro.configs.base import ControllerConfig, SLATier
 from repro.core.predictor import AlphaSchedule
 from repro.core.selection import expected_capacity
 
@@ -45,21 +55,55 @@ from repro.core.selection import expected_capacity
 TRAJECTORY_KEEP = 4096
 
 
+def aggregate_tier_stats(stats: dict, tier_idx: np.ndarray, n_tiers: int,
+                         active: Optional[np.ndarray] = None):
+    """Aggregate per-slot decode telemetry per SLA tier.
+
+    stats: dict of (L, B) float arrays (``decode_step(collect_stats=True)``
+    output); tier_idx: (B,) int tier of each slot; active: (B,) bool mask of
+    live slots (None = all live).  Returns ``(tier_stats, counts)`` where
+    tier_stats maps each key to (T, L) — the mean over that tier's live
+    slots — and counts is (T,) int.  Empty tiers get zeros and count 0 (the
+    controller freezes them for the step).  The mean over an unordered slot
+    subset makes the aggregation invariant to slot permutation
+    (tests/test_controller.py::TestTiers).
+    """
+    tier_idx = np.asarray(tier_idx)
+    b = tier_idx.shape[0]
+    act = np.ones(b, bool) if active is None else np.asarray(active, bool)
+    counts = np.zeros(n_tiers, np.int64)
+    onehot = np.zeros((n_tiers, b), np.float32)
+    for t in range(n_tiers):
+        sel = act & (tier_idx == t)
+        counts[t] = int(sel.sum())
+        if counts[t]:
+            onehot[t, sel] = 1.0 / counts[t]
+    out = {}
+    for k, v in stats.items():
+        v = np.asarray(v, np.float32)
+        if v.ndim != 2 or v.shape[1] != b:
+            raise ValueError(f"stats[{k!r}] shape {v.shape} != (L, {b})")
+        out[k] = v @ onehot.T                     # (L, T)
+        out[k] = np.ascontiguousarray(out[k].T)   # (T, L)
+    return out, counts
+
+
 @dataclasses.dataclass
 class ControllerState:
-    """Host-side controller state (one vector entry per controlled layer)."""
+    """Host-side controller state — one entry per controlled layer, with a
+    leading tier axis when the controller is tiered: (L,) or (T, L)."""
 
-    alphas: np.ndarray        # (L,) float32 — live per-layer alpha
-    density_ema: np.ndarray   # (L,) realized-density estimate
-    overflow_ema: np.ndarray  # (L,) capacity-overflow fraction estimate
-    fn_ema: np.ndarray        # (L,) false-negative-rate estimate (audits)
-    predicted_ema: np.ndarray  # (L,) predictor keep-rate estimate
+    alphas: np.ndarray        # live per-layer alpha
+    density_ema: np.ndarray   # realized-density estimate
+    overflow_ema: np.ndarray  # capacity-overflow fraction estimate
+    fn_ema: np.ndarray        # false-negative-rate estimate (audits)
+    predicted_ema: np.ndarray  # predictor keep-rate estimate
     steps: int = 0            # decode steps observed
     audits: int = 0           # audit steps observed
 
 
 class AlphaController:
-    """Feedback controller owning the per-layer alpha vector.
+    """Feedback controller owning the per-layer (× per-tier) alpha vector.
 
     Drive pattern (see ``runtime.server.Server.generate``)::
 
@@ -69,29 +113,56 @@ class AlphaController:
             ..., stats = decode(..., alphas=ctl.alphas(), audit=audit)
             ctl.observe({k: np.asarray(v) for k, v in stats.items()},
                         audit=audit)
+
+    With ``tiers`` the stats must be pre-aggregated per tier
+    (:func:`aggregate_tier_stats`) and passed with their slot counts.
     """
 
     def __init__(self, cfg: ControllerConfig, schedule: AlphaSchedule,
-                 num_layers: int):
+                 num_layers: int,
+                 tiers: Optional[Sequence[SLATier]] = None):
         self.cfg = cfg
         self.num_layers = num_layers
+        self.tiers: Optional[tuple] = tuple(tiers) if tiers else None
         a0 = schedule.init_state(num_layers).astype(np.float32)
-        t = np.float32(cfg.target_density)
+        if self.tiers:
+            a0 = np.stack([a0 + np.float32(t.alpha_offset)
+                           for t in self.tiers])          # (T, L)
+            self._target = np.asarray(
+                [t.target(cfg.target_density) for t in self.tiers],
+                np.float32)[:, None]                       # (T, 1)
+        else:
+            self._target = np.float32(cfg.target_density)
+        t = np.broadcast_to(self._target, a0.shape).astype(np.float32)
         self.state = ControllerState(
             alphas=np.clip(a0, cfg.alpha_min, cfg.alpha_max),
-            density_ema=np.full(num_layers, t, np.float32),
-            overflow_ema=np.zeros(num_layers, np.float32),
-            fn_ema=np.zeros(num_layers, np.float32),
-            predicted_ema=np.full(num_layers, t, np.float32),
+            density_ema=t.copy(),
+            overflow_ema=np.zeros_like(a0),
+            fn_ema=np.zeros_like(a0),
+            predicted_ema=t.copy(),
         )
         self._trajectory: collections.deque = collections.deque(
             maxlen=TRAJECTORY_KEEP)
 
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers) if self.tiers else 1
+
     # ------------------------------------------------------------- inputs --
     def alphas(self) -> np.ndarray:
-        """Per-layer alphas to feed the next decode step (copy: the jit
-        argument must not alias state the update below mutates)."""
+        """Alphas to feed the next decode step — (L,) untiered, (T, L)
+        tiered (copy: the jit argument must not alias state the update
+        below mutates)."""
         return self.state.alphas.copy()
+
+    def slot_alphas(self, tier_idx: np.ndarray) -> np.ndarray:
+        """Per-layer-per-slot alpha matrix (L, B) for ``decode_step``:
+        column b carries slot b's tier alphas.  tier_idx: (B,) int."""
+        a = self.state.alphas
+        if a.ndim == 1:
+            a = a[None]
+        return np.ascontiguousarray(
+            a[np.asarray(tier_idx)].T.astype(np.float32))
 
     def is_audit_step(self) -> bool:
         """True when the NEXT decode step should run the masked full-gate
@@ -100,20 +171,30 @@ class AlphaController:
         return p > 0 and (self.state.steps + 1) % p == 0
 
     # ------------------------------------------------------------- update --
-    def observe(self, stats: dict, audit: bool = False) -> None:
-        """Fold one decode step's per-layer telemetry into the state and
-        apply the alpha update law.  ``stats`` arrays must be length-L
-        (slot-batch aggregation happens inside the jitted step: the stats
-        scalars are already means over the batch)."""
+    def observe(self, stats: dict, audit: bool = False,
+                tier_counts: Optional[np.ndarray] = None) -> None:
+        """Fold one decode step's telemetry into the state and apply the
+        alpha update law.  ``stats`` arrays must match the state shape —
+        (L,) untiered, (T, L) tiered (slot aggregation happens in
+        :func:`aggregate_tier_stats`; untiered batch aggregation inside the
+        jitted step or in the caller).  ``tier_counts`` (T,) marks tiers
+        with no live slots this step: their EMAs and alphas are frozen."""
         s, c = self.state, self.cfg
         beta = np.float32(c.ema)
+        if tier_counts is not None:
+            upd = (np.asarray(tier_counts) > 0)[:, None]   # (T, 1)
+            if upd.shape[0] != self.n_tiers:
+                raise ValueError(
+                    f"tier_counts width {upd.shape[0]} != {self.n_tiers}")
+        else:
+            upd = np.bool_(True)
 
         def ema(prev, obs):
             obs = np.asarray(obs, np.float32)
             if obs.shape != prev.shape:
                 raise ValueError(
-                    f"telemetry shape {obs.shape} != layers {prev.shape}")
-            return (1 - beta) * prev + beta * obs
+                    f"telemetry shape {obs.shape} != state {prev.shape}")
+            return np.where(upd, (1 - beta) * prev + beta * obs, prev)
 
         if audit:
             # Audit steps ONLY update the false-negative estimate: the
@@ -131,12 +212,15 @@ class AlphaController:
             s.overflow_ema = ema(s.overflow_ema, stats["overflow_frac"])
         s.steps += 1
 
-        err = s.density_ema - np.float32(c.target_density)
+        err = s.density_ema - self._target
         fn_excess = np.maximum(s.fn_ema - np.float32(c.fn_budget), 0.0)
         dalpha = np.clip(-c.gain * err + c.fn_gain * fn_excess,
                          -c.max_step, c.max_step)
-        s.alphas = np.clip(s.alphas + dalpha.astype(np.float32),
-                           c.alpha_min, c.alpha_max).astype(np.float32)
+        s.alphas = np.where(
+            upd,
+            np.clip(s.alphas + dalpha.astype(np.float32),
+                    c.alpha_min, c.alpha_max),
+            s.alphas).astype(np.float32)
         self._trajectory.append({
             "step": s.steps,
             "audit": bool(audit),
@@ -149,32 +233,52 @@ class AlphaController:
     # ------------------------------------------------------------ outputs --
     def capacity_hint(self, k: int, slack: float = 1.3,
                       multiple: int = 128) -> int:
-        """Recommended capacity (in neurons) for the NEXT jit: observed
-        predictor keep-rate (max over layers so no layer is starved —
-        ``predicted_ema`` already counts the rows the clamp dropped) plus
-        slack, tile-rounded via :func:`expected_capacity`.  Only meaningful
-        with ``adapt_capacity``; the caller owns the re-jit boundary."""
-        keep = min(1.0, float(np.max(self.state.predicted_ema)))
+        """Recommended capacity (in neurons) for the NEXT jit: the observed
+        union selection demand — realized density plus the overflow the
+        current clamp dropped (selection stats satisfy predicted = selected
+        + overflow, and both terms are union-level, unlike the per-token
+        ``predicted_ema`` which understates the batch-union need) — max
+        over tiers and layers so no layer is starved, plus slack,
+        tile-rounded via :func:`expected_capacity`.  Only meaningful with
+        ``adapt_capacity``; the caller owns the re-jit boundary."""
+        demand = self.state.density_ema + self.state.overflow_ema
+        keep = min(1.0, float(np.max(demand)))
         return expected_capacity(k, 1.0 - keep, slack, multiple)
 
     def converged(self, tol: float = 0.02) -> bool:
         return bool(np.all(np.abs(
-            self.state.density_ema - self.cfg.target_density) <= tol))
+            self.state.density_ema - self._target) <= tol))
 
     def report(self) -> dict:
         """Summary for throughput reports / benchmarks."""
         s = self.state
-        return {
+        rep = {
             "steps": s.steps,
             "audits": s.audits,
             "target_density": self.cfg.target_density,
             "mean_realized_density": float(s.density_ema.mean()),
-            "density_per_layer": [round(float(v), 4) for v in s.density_ema],
-            "alpha_per_layer": [round(float(v), 4) for v in s.alphas],
             "mean_false_neg": float(s.fn_ema.mean()),
             "mean_overflow": float(s.overflow_ema.mean()),
             "converged_2pct": self.converged(0.02),
         }
+        if self.tiers:
+            rep["tiers"] = {
+                t.name: {
+                    "target_density": t.target(self.cfg.target_density),
+                    "realized_density": float(s.density_ema[i].mean()),
+                    "alpha_per_layer": [round(float(v), 4)
+                                        for v in s.alphas[i]],
+                    "density_per_layer": [round(float(v), 4)
+                                          for v in s.density_ema[i]],
+                    "false_neg": float(s.fn_ema[i].mean()),
+                }
+                for i, t in enumerate(self.tiers)
+            }
+        else:
+            rep["density_per_layer"] = [round(float(v), 4)
+                                        for v in s.density_ema]
+            rep["alpha_per_layer"] = [round(float(v), 4) for v in s.alphas]
+        return rep
 
     @property
     def trajectory(self) -> list[dict]:

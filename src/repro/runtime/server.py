@@ -1,24 +1,45 @@
 """Serving runtime: prefill + decode with KV caches, SparseInfer decode
-strategies, and a slot-based continuous batching scheduler.
+strategies, and a slot-refill continuous batching scheduler.
 
 The paper's setting (§V): decode-phase GEMVs dominate; SparseInfer predicts
 per-token activation sparsity and skips neuron rows.  Here the serve path is
 generic over the model family; the SparseInfer strategy is picked by
 ``ModelConfig.sparse`` (dense | masked | gather | pallas).
+
+Scheduling (DESIGN.md §5): the default scheduler keeps the jitted decode
+step's batch dimension fixed and treats each batch index as a *slot*.  Every
+slot holds one request at its own sequence position (``cache_len`` enters the
+jit as a traced (B,) vector); when a request finishes, its slot is refilled
+from the queue between decode steps — a batch-1 prefill splices the new
+request's caches into the slot, with no retrace of the decode step — so no
+request ever waits for the chunk's slowest.  Each request's ``sla`` tier maps
+to a per-slot alpha column of the (L, B) alpha matrix, letting every request
+pick its own point on the paper's accuracy/sparsity curve.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ControllerConfig, ModelConfig
+from repro.configs.base import (DEFAULT_SLA_TIERS, ControllerConfig,
+                                ModelConfig, SLATier)
 from repro.models.common import greedy_sample
-from repro.runtime.controller import AlphaController
+from repro.runtime.controller import AlphaController, aggregate_tier_stats
+
+# Alpha column for a dead (drained) slot: margin = N_neg - alpha*N_pos with a
+# huge negative alpha is positive for every neuron (N_neg + N_pos = d_valid
+# >= 1), so the slot predicts all-sparse and contributes NOTHING to the
+# gather/pallas batch-union selection — a dead slot must not consume shared
+# capacity or perturb live requests' row selection (DESIGN.md §5).
+DEAD_SLOT_ALPHA = -1e9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +48,14 @@ class ServeConfig:
     max_len: int = 256
     max_new_tokens: int = 32
     greedy: bool = True
+    # Slot-refill continuous batching (DESIGN.md §5).  False falls back to
+    # the legacy chunked scheduler (fixed chunks run to completion) — kept
+    # for A/B benchmarks and the scheduler parity tests.
+    slot_refill: bool = True
+    # Per-request SLA tiers: Request.sla names one of these; the tier's
+    # alpha offset (and, under a per-tier controller, its density target)
+    # applies to every token the request decodes.
+    sla_tiers: tuple = DEFAULT_SLA_TIERS
     # Online adaptive-alpha feedback loop (DESIGN.md §4). Off by default:
     # the static-AlphaSchedule path below stays bit-identical when disabled.
     controller: ControllerConfig = dataclasses.field(
@@ -38,13 +67,39 @@ class Request:
     uid: int
     prompt: np.ndarray           # (prompt_len,)
     max_new: int = 32
+    sla: str = "balanced"        # ServeConfig.sla_tiers entry
     out: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+    latency_s: float = 0.0       # admission -> last token (wall clock)
+    t_start: float = 0.0         # perf_counter at admission
+    t_end: float = 0.0           # perf_counter at completion
+
+
+def _splice_slot(full, one, slot):
+    """Copy a batch-1 cache pytree into batch slot ``slot`` of a full-batch
+    cache pytree.  The batch axis position varies per leaf (KV caches carry
+    it behind the stacked layer dims, SSM states behind (group, layer)), so
+    it is located as the single axis where the shapes differ.  Traceable:
+    ``slot`` may be a traced scalar, so the scheduler jits one splice for
+    all slots (the shape logic is static)."""
+    def leaf(f, o):
+        if f.shape == o.shape:           # batch == 1: the slot IS the batch
+            return o.astype(f.dtype)
+        diffs = [i for i, (a, b) in enumerate(zip(f.shape, o.shape))
+                 if a != b]
+        if len(diffs) != 1 or o.shape[diffs[0]] != 1:
+            raise ValueError(f"cannot locate batch axis: {f.shape} vs "
+                             f"{o.shape}")
+        starts = [jnp.int32(0)] * f.ndim
+        starts[diffs[0]] = jnp.asarray(slot, jnp.int32)
+        return jax.lax.dynamic_update_slice(f, o.astype(f.dtype), starts)
+    return jax.tree.map(leaf, full, one)
 
 
 class Server:
-    """Static-slot continuous batching: finished slots are refilled from the
-    queue between decode steps (batch dim stays fixed for the jit)."""
+    """Slot-refill continuous batching: finished slots are refilled from the
+    queue between decode steps (batch dim stays fixed for the jit, each slot
+    decodes at its own ``cache_len``); per-request SLA tiers select per-slot
+    alphas (DESIGN.md §5)."""
 
     def __init__(self, model_mod, cfg: ModelConfig, scfg: ServeConfig,
                  params: dict, extra_inputs: Optional[dict] = None):
@@ -54,6 +109,9 @@ class Server:
         self.params = (model_mod.prepare_sparse(params)
                        if cfg.sparse.enabled else params)
         self.extra = extra_inputs or {}
+        self._tier_index = {t.name: i for i, t in enumerate(scfg.sla_tiers)}
+        self._tier_offsets = np.asarray(
+            [t.alpha_offset for t in scfg.sla_tiers], np.float32)
 
         def _prefill(params, tokens, *extra):
             return self.mod.prefill(params, cfg, tokens, *extra,
@@ -64,23 +122,47 @@ class Server:
                                                   length)
             return greedy_sample(logits), caches
 
+        def _decode_alphas(params, tok, caches, length, alphas):
+            logits, caches = self.mod.decode_step(params, cfg, tok, caches,
+                                                  length, alphas=alphas)
+            return greedy_sample(logits), caches
+
         self.prefill_fn = jax.jit(_prefill)
         self.decode_fn = jax.jit(_decode)
+        # controller-off SLA path: static schedule + per-slot tier offsets
+        self.decode_alpha_fn = jax.jit(_decode_alphas)
+        # slot index is traced: one compiled splice serves every refill
+        self.splice_fn = jax.jit(_splice_slot)
 
-        # ---- adaptive-alpha controller wiring (DESIGN.md §4) -------------
-        # The controller lives across generate() calls so adaptation carries
-        # over between scheduler batches.  Alphas enter the jitted step as a
-        # traced (L,) argument: updating them never retraces.  Audit steps
-        # re-dispatch through the masked strategy (full gate matmul => exact
-        # false negatives, exact paper skip semantics for the emitted token).
+        # ---- adaptive-alpha controller wiring (DESIGN.md §4/§5) ----------
+        # The controller lives across generate()/serve() calls so adaptation
+        # carries over between requests.  Alphas enter the jitted step as a
+        # traced (L,) — or (L, B) per-slot — argument: updating them never
+        # retraces.  Audit steps re-dispatch through the masked strategy
+        # (full gate matmul => exact false negatives, exact paper skip
+        # semantics for the emitted token).  With ``per_tier`` the state is
+        # (T, L): one alpha vector and density target per SLA tier.
         self.controller: Optional[AlphaController] = None
         if scfg.controller.enabled and cfg.sparse.enabled:
             if cfg.family == "xlstm":
                 raise ValueError("xlstm has no SparseInfer MLP decode path; "
                                  "controller unsupported")
+            tiers = scfg.sla_tiers if scfg.controller.per_tier else None
+            if tiers and cfg.sparse.strategy in ("gather", "pallas"):
+                # union strategies share ONE row selection per batch, so
+                # every tier observes the same realized density — the
+                # per-tier density feedback degenerates (alphas saturate
+                # toward the clamps).  Predicted density and audit FN still
+                # separate per tier; only `masked` separates realized.
+                warnings.warn(
+                    f"per_tier controller with the {cfg.sparse.strategy!r} "
+                    "union strategy: realized density is batch-shared, so "
+                    "per-tier density targets cannot converge — use "
+                    "strategy='masked' for per-tier density control "
+                    "(DESIGN.md §5)", stacklevel=2)
             self.controller = AlphaController(
                 scfg.controller, cfg.sparse.alpha_schedule(),
-                self._n_controlled_layers())
+                self._n_controlled_layers(), tiers=tiers)
             self._build_controller_fns()
 
     def _build_controller_fns(self) -> None:
@@ -111,9 +193,9 @@ class Server:
         """Apply the controller's capacity recommendation (DESIGN.md §4).
 
         Capacity is a static shape under jit, so it can only move where a
-        re-jit is acceptable — the scheduler calls this between request
-        chunks.  Returns True when the effective capacity changed (and the
-        controller decode fns were rebuilt)."""
+        re-jit is acceptable — the scheduler calls this at refill
+        boundaries.  Returns True when the effective capacity changed (and
+        the controller decode fns were rebuilt)."""
         ctl, sc = self.controller, self.scfg.controller
         if ctl is None or not sc.adapt_capacity or ctl.state.steps == 0:
             return False
@@ -136,9 +218,83 @@ class Server:
             return n_inv
         return self.cfg.n_layers
 
+    # ------------------------------------------------------- alpha plumbing
+    def _tier_of(self, req: Request) -> int:
+        try:
+            return self._tier_index[req.sla]
+        except KeyError:
+            raise ValueError(
+                f"request {req.uid}: unknown SLA tier {req.sla!r} "
+                f"(configured: {sorted(self._tier_index)})") from None
+
+    def _pad_layers(self, a: np.ndarray) -> np.ndarray:
+        """Pad a controller-width alpha array up to n_layers rows (hybrid's
+        controller width is the invocation-group count; decode_step slices
+        back down, so padded rows are never consumed)."""
+        n = self.cfg.n_layers
+        if a.shape[0] == n:
+            return np.asarray(a, np.float32)
+        out = np.ones((n,) + a.shape[1:], np.float32)
+        out[: a.shape[0]] = a
+        return out
+
+    def _slot_alpha_matrix(self, tier_idx: np.ndarray,
+                           active: Optional[np.ndarray] = None) -> np.ndarray:
+        """(n_layers, B) per-layer-per-slot alphas for the jitted step.
+        Dead slots (``active`` False) get the neutralizing alpha so they
+        predict all-sparse and stay out of the union selection."""
+        ctl = self.controller
+        if ctl is None:
+            base = self.cfg.sparse.alpha_schedule().alphas(self.cfg.n_layers)
+            mat = (base[:, None] +
+                   self._tier_offsets[tier_idx][None, :]).astype(np.float32)
+        elif ctl.tiers:
+            mat = self._pad_layers(ctl.slot_alphas(tier_idx))
+        else:
+            # untiered controller: adapted vector + static tier offsets
+            a = self._pad_layers(ctl.alphas())
+            mat = (a[:, None] +
+                   self._tier_offsets[tier_idx][None, :]).astype(np.float32)
+        if active is not None and not active.all():
+            mat = mat.copy()
+            mat[:, ~np.asarray(active, bool)] = DEAD_SLOT_ALPHA
+        return mat
+
+    def _observe_step(self, stats: dict, tier_idx: np.ndarray,
+                      active: Optional[np.ndarray], audit: bool) -> None:
+        """Fold one decode step's (L, B) telemetry into the controller:
+        per-tier aggregation when tiered, masked batch mean otherwise
+        (``active`` None means every slot is live — generate())."""
+        ctl = self.controller
+        stats = {k: np.asarray(v) for k, v in stats.items()}
+        if ctl.tiers:
+            agg, counts = aggregate_tier_stats(stats, tier_idx, ctl.n_tiers,
+                                               active)
+            ctl.observe(agg, audit=audit, tier_counts=counts)
+        else:
+            sel = slice(None) if active is None else active
+            ctl.observe({k: v[:, sel].mean(-1) for k, v in stats.items()},
+                        audit=audit)
+
+    def _uniform_alpha_serve(self, requests: list[Request]) -> bool:
+        """True when every request decodes with the unmodified schedule, so
+        the legacy no-alphas decode jit (bit-identical to the seed path)
+        can serve the whole queue."""
+        if self.controller is not None:
+            return False
+        if not self.cfg.sparse.enabled or self.cfg.family == "xlstm":
+            return True
+        return all(self._tier_offsets[self._tier_of(r)] == 0.0
+                   for r in requests)
+
     # ----------------------------------------------------------- single ---
     def generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
-        """prompts: (B, P) int32 -> (B, max_new) generated ids (greedy)."""
+        """prompts: (B, P) int32 -> (B, max_new) generated ids (greedy).
+
+        One fixed batch run to completion (the chunked scheduler's inner
+        loop; also the reference path for scheduler parity tests).  All
+        slots share the 'balanced' alpha; a tiered controller contributes
+        its balanced-tier vector."""
         b, plen = prompts.shape
         extra = tuple(self.extra.values())
         logits, caches = self.prefill_fn(self.params, jnp.asarray(prompts),
@@ -147,20 +303,29 @@ class Server:
         out = [tok]
         length = jnp.int32(plen)
         ctl = self.controller
+        bal = self._tier_index.get("balanced")
+        if bal is None:
+            if ctl is not None and ctl.tiers:
+                raise ValueError(
+                    "generate() runs the whole batch on the 'balanced' tier "
+                    "but ServeConfig.sla_tiers has no such tier "
+                    f"({sorted(self._tier_index)}); use serve() with "
+                    "per-request SLAs or add a 'balanced' tier")
+            bal = 0
         for _ in range(max_new - 1):
             if ctl is None:
                 tok, caches = self.decode_fn(self.params, tok, caches, length)
             else:
                 audit = ctl.is_audit_step()
                 fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
-                # hybrid stats come back sized n_inv; alphas enter sized
-                # n_layers (decode_step slices) — pad from controller width
-                alphas = np.resize(ctl.alphas(),
-                                   self.cfg.n_layers).astype(np.float32)
+                if ctl.tiers:
+                    alphas = self._slot_alpha_matrix(np.full(b, bal))
+                else:
+                    alphas = self._pad_layers(ctl.alphas())
                 tok, caches, stats = fn(self.params, tok, caches, length,
                                         jnp.asarray(alphas))
-                ctl.observe({k: np.asarray(v) for k, v in stats.items()},
-                            audit=audit)
+                # stats come back (L, B); aggregate over the uniform batch
+                self._observe_step(stats, np.full(b, bal), None, audit)
             tok = tok[:, None]
             out.append(tok)
             length = length + 1
@@ -168,8 +333,44 @@ class Server:
 
     # ------------------------------------------------------ batched queue --
     def serve(self, requests: list[Request]) -> list[Request]:
-        """Slot-based scheduler: batches of scfg.batch, refilled as requests
-        finish. Prompts in a batch are right-aligned to the same length."""
+        """Run a queue of requests through the scheduler.  Slot-refill
+        continuous batching by default (each request measured and retired
+        individually); ``ServeConfig.slot_refill=False`` selects the legacy
+        chunked scheduler."""
+        # validate the whole queue BEFORE any work: a bad request must not
+        # abort a half-served batch (and the chunked path would otherwise
+        # silently clamp oversized cache writes)
+        for r in requests:
+            self._tier_of(r)
+            if len(r.prompt) + r.max_new > self.scfg.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt {len(r.prompt)} + max_new "
+                    f"{r.max_new} exceeds max_len {self.scfg.max_len}")
+        if self.scfg.slot_refill:
+            return self._serve_slot_refill(requests)
+        # chunk composition is deterministic, so padded-chunk overflow
+        # (chunk-max prompt + chunk-max budget) is also checkable up front
+        for c0 in range(0, len(requests), self.scfg.batch):
+            chunk = requests[c0:c0 + self.scfg.batch]
+            need = (max(len(r.prompt) for r in chunk) +
+                    max(r.max_new for r in chunk))
+            if need > self.scfg.max_len:
+                raise ValueError(
+                    f"chunk {c0 // self.scfg.batch}: padded prompt + chunk "
+                    f"max_new = {need} exceeds max_len {self.scfg.max_len}")
+        return self._serve_chunked(requests)
+
+    def _serve_chunked(self, requests: list[Request]) -> list[Request]:
+        """Legacy scheduler: fixed chunks of scfg.batch run to completion
+        (every request in a chunk waits for the chunk's slowest; uniform
+        alpha — per-request SLA tiers need the slot-refill scheduler).
+        Prompts in a chunk are right-aligned to the same length."""
+        if any(self._tier_offsets[self._tier_of(r)] != 0.0
+               for r in requests):
+            warnings.warn(
+                "chunked scheduler ignores per-request SLA tiers (the whole "
+                "chunk decodes on the uniform schedule); use slot_refill "
+                "for per-request alphas (DESIGN.md §5)", stacklevel=2)
         queue = list(requests)
         done: list[Request] = []
         while queue:
@@ -181,17 +382,139 @@ class Server:
                 prompts[i, plen - len(r.prompt):] = r.prompt
             max_new = max(r.max_new for r in chunk)
             gen = self.generate(prompts, max_new)
-            dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
             for i, r in enumerate(chunk):
                 r.out = gen[i, :r.max_new]
-                r.latency_s = dt
+                r.t_start, r.t_end = t0, t1
+                r.latency_s = t1 - t0
                 done.append(r)
             self.maybe_adapt_capacity()  # re-jit boundary (DESIGN.md §4)
         return done
 
+    def _serve_slot_refill(self, requests: list[Request]) -> list[Request]:
+        """Slot-refill continuous batching (DESIGN.md §5).
+
+        Host-side per-slot state: the owning request, its emitted-token
+        buffer and cache length.  The jitted decode step sees only fixed
+        shapes — tokens (B, 1), lengths (B,), alphas (L,) or (L, B) — so
+        refilling a slot (batch-1 prefill + cache splice + new column
+        values) never retraces.  Per-request wall-clock latency runs from
+        admission to last token."""
+        scfg, B = self.scfg, self.scfg.batch
+        ctl = self.controller
+        queue = collections.deque(requests)
+        done: list[Request] = []
+        legacy = self._uniform_alpha_serve(requests)
+
+        caches = self.mod.init_caches(self.cfg, B, scfg.max_len)
+        extra = tuple(self.extra.values())
+        tok = np.zeros((B, 1), np.int32)
+        lengths = np.zeros(B, np.int32)
+        active = np.zeros(B, bool)
+        tier_idx = np.zeros(B, np.int64)
+        slot_req: list[Optional[Request]] = [None] * B
+        slot_out: list[list[int]] = [[] for _ in range(B)]
+
+        def finish(i: int) -> None:
+            r = slot_req[i]
+            r.out = np.asarray(slot_out[i][: r.max_new], np.int32)
+            r.t_end = time.perf_counter()
+            r.latency_s = r.t_end - r.t_start
+            done.append(r)
+            slot_req[i] = None
+            active[i] = False
+
+        def admit(i: int) -> None:
+            """Fill slot i from the queue (batch-1 prefill at the prompt's
+            natural length -> exact single-request semantics; the trace
+            caches per distinct prompt length)."""
+            nonlocal caches
+            while queue:
+                r = queue.popleft()
+                t = self._tier_of(r)      # queue pre-validated in serve()
+                plen = len(r.prompt)
+                r.t_start = time.perf_counter()
+                prompt = jnp.asarray(
+                    np.asarray(r.prompt, np.int32)[None, :])
+                ex = tuple(e[i:i + 1] for e in extra)
+                logits, one = self.prefill_fn(self.params, prompt, *ex)
+                first = int(np.asarray(greedy_sample(logits))[0])
+                slot_req[i] = r
+                slot_out[i] = [first]
+                tok[i, 0] = first
+                lengths[i] = plen
+                tier_idx[i] = t
+                active[i] = True
+                caches = self.splice_fn(caches, one, jnp.int32(i))
+                if r.max_new <= 1:
+                    finish(i)     # prefill alone satisfied it; keep draining
+                    continue
+                return
+
+        for i in range(B):
+            admit(i)
+        alpha_mat: Optional[np.ndarray] = None  # cached off-controller matrix
+        while active.any():
+            jt, jl = jnp.asarray(tok), jnp.asarray(lengths)
+            if ctl is not None:
+                audit = ctl.is_audit_step()
+                fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
+                # rebuilt per step: the controller adapts between steps
+                alphas = self._slot_alpha_matrix(tier_idx, active)
+                ntok, caches, stats = fn(self.params, jt, caches, jl,
+                                         jnp.asarray(alphas))
+                self._observe_step(stats, tier_idx, active, audit)
+            elif legacy and active.all():
+                # uniform schedule, every slot live: the seed decode jit
+                # (bit-identical path; no alpha plumbing at all)
+                ntok, caches = self.decode_fn(self.params, jt, caches, jl)
+            else:
+                # static alphas change only at refill boundaries — cache the
+                # matrix; dead slots are neutralized out of the union
+                if alpha_mat is None:
+                    alpha_mat = self._slot_alpha_matrix(tier_idx, active)
+                ntok, caches = self.decode_alpha_fn(
+                    self.params, jt, caches, jl, jnp.asarray(alpha_mat))
+            ntok = np.asarray(ntok)
+            refill = []
+            for i in range(B):
+                if not active[i]:
+                    continue
+                slot_out[i].append(int(ntok[i]))
+                tok[i, 0] = int(ntok[i])
+                lengths[i] += 1
+                if len(slot_out[i]) >= slot_req[i].max_new:
+                    finish(i)
+                    refill.append(i)
+            if refill:
+                alpha_mat = None             # slot composition changed
+                if queue:
+                    self.maybe_adapt_capacity()  # re-jit (DESIGN.md §4)
+                    for i in refill:
+                        admit(i)
+        return done
+
 
 def throughput_report(requests: list[Request]) -> dict:
-    toks = sum(len(r.out) for r in requests)
-    t = sum(r.latency_s for r in requests)
+    """Aggregate a served queue: tokens over TRUE wall-clock (first
+    admission to last completion — concurrent requests share that window;
+    summing per-request latencies would count each decode step once per
+    co-resident request and deflate tok/s by ~the batch factor), plus
+    per-request latency percentiles."""
+    toks = sum(len(r.out) for r in requests if r.out is not None)
+    served = [r for r in requests if r.t_end > 0.0]
+    wall = (max(r.t_end for r in served) - min(r.t_start for r in served)
+            if served else 0.0)
+    lats = sorted(r.latency_s for r in served)
+
+    def pct(q: float) -> float:
+        if not lats:
+            return 0.0
+        # nearest-rank: ceil(q*n)-1, with float fuzz rounded away (int(q*n)
+        # would report the max as p95 for every n <= 20)
+        rank = math.ceil(round(q * len(lats), 9))
+        return lats[min(len(lats) - 1, max(0, rank - 1))]
     return {"requests": len(requests), "tokens": toks,
-            "total_s": t, "tok_per_s": toks / max(t, 1e-9)}
+            "total_s": wall, "tok_per_s": toks / max(wall, 1e-9),
+            "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
+            "p50_latency_s": pct(0.5), "p95_latency_s": pct(0.95)}

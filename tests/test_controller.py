@@ -1,19 +1,20 @@
-"""Adaptive-alpha controller tests (DESIGN.md §4): update-law properties,
-closed-loop convergence on synthetic activations, and the regression that
-controller-off serving is bit-identical to the static AlphaSchedule path."""
+"""Adaptive-alpha controller tests (DESIGN.md §4/§5): update-law properties,
+closed-loop convergence on synthetic activations, per-SLA-tier state and
+telemetry aggregation, and the regression that controller-off serving is
+bit-identical to the static AlphaSchedule path."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ControllerConfig, ModelConfig
+from repro.configs.base import ControllerConfig, ModelConfig, SLATier
 from repro.core import predictor as P
 from repro.core.sparse_mlp import (MLP_STAT_KEYS, SparseInferConfig,
                                    init_gated_mlp, masked_mlp,
                                    prepare_sparse_params)
 from repro.models import lm
-from repro.runtime.controller import AlphaController
+from repro.runtime.controller import AlphaController, aggregate_tier_stats
 from repro.runtime.server import Server, ServeConfig
 
 jax.config.update("jax_platform_name", "cpu")
@@ -140,6 +141,115 @@ class TestUpdateLaw:
         hi = ctl.capacity_hint(4096, multiple=128)
         assert lo < hi <= 4096 and lo % 128 == 0
 
+    def test_capacity_hint_covers_clamp_overflow(self):
+        """The hint sizes C to the UNION demand: realized density plus the
+        rows the current clamp dropped — per-token predicted alone would
+        under-size capacity for B co-resident slots."""
+        a, b = self._ctl(), self._ctl()
+        for _ in range(20):
+            a.observe(_stats(4, density=0.2, predicted=0.1))
+            b.observe(_stats(4, density=0.2, predicted=0.1, overflow=0.3))
+        assert b.capacity_hint(4096) > a.capacity_hint(4096)
+
+
+class TestTiers:
+    """Per-(tier, layer) controller state (DESIGN.md §5)."""
+
+    TIERS = (SLATier("latency", alpha_offset=-0.25, target_scale=0.5),
+             SLATier("balanced"),
+             SLATier("quality", alpha_offset=0.25, target_scale=1.5))
+    CC = ControllerConfig(enabled=True, per_tier=True, target_density=0.2,
+                          gain=1.0, ema=0.5, alpha_min=0.25, alpha_max=4.0,
+                          max_step=0.25, audit_period=0)
+
+    def _ctl(self, n=2):
+        return AlphaController(self.CC, P.AlphaSchedule(early=1.0), n,
+                               tiers=self.TIERS)
+
+    @staticmethod
+    def _tier_stats(values):  # values: (T,) density per tier, L=2
+        t = np.asarray(values, np.float32)[:, None]
+        full = np.broadcast_to(t, (len(values), 2)).copy()
+        return {"predicted_density": full, "realized_density": full,
+                "actual_density": full, "false_neg_rate": 0 * full,
+                "overflow_frac": 0 * full}
+
+    def test_init_offsets_and_targets(self):
+        ctl = self._ctl()
+        a = ctl.alphas()
+        assert a.shape == (3, 2)
+        np.testing.assert_allclose(a[1] - a[0], 0.25)
+        np.testing.assert_allclose(a[2] - a[1], 0.25)
+        rep = ctl.report()["tiers"]
+        assert abs(rep["latency"]["target_density"] - 0.1) < 1e-9
+        assert abs(rep["quality"]["target_density"] - 0.3) < 1e-9
+
+    def test_distinct_targets_converge_to_distinct_alphas(self):
+        """Two tiers observing the SAME density plant drift apart: each
+        integrates toward its own target, so the lower-target tier ends at
+        a strictly lower alpha (sparser operating point)."""
+        ctl = self._ctl()
+        for _ in range(30):
+            # plant: density responds monotonically to each tier's alpha
+            dens = np.clip(0.25 * ctl.alphas().mean(-1), 0.0, 1.0)
+            ctl.observe(self._tier_stats(dens),
+                        tier_counts=np.asarray([1, 1, 1]))
+        a = ctl.alphas()
+        assert a[0].mean() < a[1].mean() < a[2].mean(), a
+        rep = ctl.report()["tiers"]
+        for name in ("latency", "balanced", "quality"):
+            t = rep[name]
+            assert abs(t["realized_density"] - t["target_density"]) < 0.05, \
+                rep
+
+    def test_empty_tier_is_frozen(self):
+        ctl = self._ctl()
+        a0 = ctl.alphas()
+        st = self._tier_stats([0.9, 0.9, 0.9])
+        ctl.observe(st, tier_counts=np.asarray([2, 0, 2]))
+        a1 = ctl.alphas()
+        assert (a1[0] < a0[0]).all() and (a1[2] < a0[2]).all()
+        np.testing.assert_array_equal(a1[1], a0[1])   # no slots, no update
+        np.testing.assert_array_equal(ctl.state.density_ema[1],
+                                      np.full(2, 0.2, np.float32))
+
+    def test_aggregation_invariant_to_slot_permutation(self):
+        rng = np.random.default_rng(0)
+        L, B = 3, 8
+        stats = {k: rng.random((L, B)).astype(np.float32)
+                 for k in MLP_STAT_KEYS}
+        tier_idx = rng.integers(0, 3, size=B)
+        active = rng.random(B) < 0.8
+        agg, counts = aggregate_tier_stats(stats, tier_idx, 3, active)
+        perm = rng.permutation(B)
+        agg_p, counts_p = aggregate_tier_stats(
+            {k: v[:, perm] for k, v in stats.items()},
+            tier_idx[perm], 3, active[perm])
+        np.testing.assert_array_equal(counts, counts_p)
+        for k in MLP_STAT_KEYS:
+            assert agg[k].shape == (3, L)
+            np.testing.assert_allclose(agg[k], agg_p[k], atol=1e-6)
+
+    def test_aggregation_respects_active_mask(self):
+        L, B = 2, 4
+        stats = {k: np.zeros((L, B), np.float32) for k in MLP_STAT_KEYS}
+        stats["realized_density"][:, 0] = 1.0   # active, tier 0
+        stats["realized_density"][:, 1] = 0.5   # INACTIVE, tier 0
+        agg, counts = aggregate_tier_stats(
+            stats, np.asarray([0, 0, 1, 2]), 3,
+            np.asarray([True, False, True, True]))
+        assert counts.tolist() == [1, 1, 1]
+        np.testing.assert_allclose(agg["realized_density"][0],
+                                   np.ones(L))   # the inactive slot ignored
+
+    def test_slot_alphas_matrix_layout(self):
+        ctl = self._ctl(n=2)
+        mat = ctl.slot_alphas(np.asarray([2, 0, 1]))
+        assert mat.shape == (2, 3)
+        np.testing.assert_allclose(mat[:, 0], ctl.alphas()[2])
+        np.testing.assert_allclose(mat[:, 1], ctl.alphas()[0])
+        np.testing.assert_allclose(mat[:, 2], ctl.alphas()[1])
+
 
 class TestConvergence:
     def test_density_reaches_target_on_synthetic_activations(self):
@@ -168,8 +278,9 @@ class TestConvergence:
             audit = ctl.is_audit_step()
             st = step_fn(x, float(ctl.alphas()[0]))
             if first_obs is None and not audit:
-                first_obs = float(np.asarray(st["realized_density"]))
-            ctl.observe({kk: np.asarray(st[kk])[None]
+                first_obs = float(np.asarray(st["realized_density"]).mean())
+            # stats are per-token (B,); the controller wants (L,) = (1,)
+            ctl.observe({kk: np.asarray(st[kk]).mean(keepdims=True)
                          for kk in MLP_STAT_KEYS}, audit=audit)
             if step >= 40:
                 tail.append(float(ctl.state.density_ema[0]))
@@ -250,8 +361,8 @@ class TestServeRegression:
                                          collect_stats=True)
         np.testing.assert_array_equal(np.asarray(l_static),
                                       np.asarray(l_arg))
-        for kk in MLP_STAT_KEYS:
-            assert stats[kk].shape == (cfg.n_layers,)
+        for kk in MLP_STAT_KEYS:  # per-token telemetry: (L, B)
+            assert stats[kk].shape == (cfg.n_layers, 2)
 
     def test_adapt_capacity_resizes_between_chunks(self):
         """adapt_capacity: the scheduler shrinks an oversized capacity at
