@@ -1,0 +1,121 @@
+"""Kernel-level microbench for the sparse decode-MLP pipeline.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--quick] \
+        [--out BENCH_kernels.json]
+
+For each capacity bucket of the ladder, measures the single-dispatch-pair
+pallas pipeline (predictor kernel -> XLA top-C -> fused MLP kernel,
+interpret mode on CPU) against the gather and dense XLA paths:
+
+* ``dispatches``      — pallas_call count in the lowered pipeline (the
+                        DESIGN.md §2 invariant: <= 2 per sparse MLP)
+* ``hbm_bytes``       — the analytic TPU traffic model
+                        (kernels.sparse_mlp_fused.kernel_hbm_bytes)
+* ``wall_us``         — CPU wall-clock per decode-step MLP (proxy trend
+                        only; interpret mode is not TPU time)
+
+Writes one JSON document so CI can archive a comparable series per commit
+(nightly job uploads the artifact — .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_mlp import (SparseInferConfig, dense_mlp, gather_mlp,
+                                   init_gated_mlp, pallas_mlp,
+                                   prepare_sparse_params)
+from repro.kernels import ops
+from repro.kernels.sparse_mlp_fused import kernel_hbm_bytes
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    for _ in range(2):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def bench(d: int, k: int, b: int, buckets: tuple, iters: int,
+          group_size: int = 8) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = init_gated_mlp(key, d, k, dtype=jnp.float32)
+    # bias toward the ReLU-fied regime so selection pressure is realistic
+    params["wg_t"] = params["wg_t"] - 0.1 / np.sqrt(d)
+    params = prepare_sparse_params(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, d), jnp.float32)
+
+    cfg_d = SparseInferConfig(enabled=False, activation="relu")
+    t_dense = _time(jax.jit(lambda p, xx: dense_mlp(p, xx, cfg_d)),
+                    params, x, iters=iters)
+
+    rows = []
+    for frac in buckets:
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=frac, group_size=group_size)
+        cap_groups = cfg.capacity(k)
+        f_pallas = jax.jit(lambda p, xx, c=cfg: pallas_mlp(
+            p, xx, c, alpha=1.0, interpret=True))
+        f_pallas_stats = jax.jit(lambda p, xx, c=cfg: pallas_mlp(
+            p, xx, c, alpha=1.0, interpret=True, return_stats=True))
+        f_gather = jax.jit(lambda p, xx, c=cfg: gather_mlp(
+            p, xx, c, alpha=1.0))
+        dispatches = ops.count_pallas_dispatches(
+            lambda xx: pallas_mlp(params, xx, cfg, alpha=1.0,
+                                  interpret=True, return_stats=True), x)
+        bm = kernel_hbm_bytes(b, d, k, cap_groups, group_size)
+        rows.append({
+            "capacity_frac": frac,
+            "cap_groups": cap_groups,
+            "dispatches": dispatches,
+            "hbm_bytes": bm,
+            "wall_us": {
+                "pallas_interpret": _time(f_pallas, params, x,
+                                          iters=iters) * 1e6,
+                "pallas_interpret_stats": _time(f_pallas_stats, params, x,
+                                                iters=iters) * 1e6,
+                "gather": _time(f_gather, params, x, iters=iters) * 1e6,
+            },
+        })
+    return {
+        "shape": {"d": d, "k": k, "batch": b, "group_size": group_size},
+        "backend": jax.default_backend(),
+        "dense_wall_us": t_dense * 1e6,
+        "buckets": rows,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--d", type=int, default=0)
+    ap.add_argument("--k", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    d = args.d or (512 if args.quick else 1024)
+    k = args.k or (2048 if args.quick else 4096)
+    iters = 2 if args.quick else 5
+    report = bench(d, k, args.batch, (0.0625, 0.125, 0.25, 0.5), iters)
+    report["generated_unix"] = time.time()
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    for row in report["buckets"]:
+        print(f"bench_kernels,cap={row['capacity_frac']},"
+              f"dispatches={row['dispatches']},"
+              f"modeled_reduction={row['hbm_bytes']['reduction']:.2f}x,"
+              f"pallas_us={row['wall_us']['pallas_interpret']:.0f},"
+              f"gather_us={row['wall_us']['gather']:.0f}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

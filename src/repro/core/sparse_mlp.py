@@ -43,6 +43,14 @@ class SparseInferConfig:
     fatrelu_threshold: float = 0.0
     local_selection: bool = True      # per-TP-shard top-C (no cross-shard
                                       # gather; EXPERIMENTS.md §Perf iter 2)
+    # Capacity-bucket ladder (DESIGN.md §2): optional tuple of capacity
+    # fractions the serve path pre-jits one decode step per bucket for; the
+    # controller's capacity_hint picks a bucket BETWEEN decode steps (a host
+    # dict lookup — no retrace stall).  Empty = static capacity_frac only.
+    capacity_buckets: tuple = ()
+    # Exact group-count override used by the per-bucket configs the server
+    # builds (0 = derive from capacity_frac).  Not meant for user configs.
+    capacity_override: int = 0
 
     def alpha_schedule(self) -> P.AlphaSchedule:
         return P.AlphaSchedule(self.alpha_base, self.alpha_early,
@@ -51,11 +59,28 @@ class SparseInferConfig:
     def capacity(self, k: int) -> int:
         g = self.group_size
         n_groups = k // g
+        if self.capacity_override:
+            return min(self.capacity_override, n_groups)
         cap = max(1, int(round(n_groups * self.capacity_frac)))
         # keep gather shapes MXU/VREG friendly
         mult = max(1, 128 // g)
         cap = int(-(-cap // mult) * mult)
         return min(cap, n_groups)
+
+    def capacity_ladder(self, k: int) -> tuple:
+        """MXU-aligned group counts for the bucket ladder (sorted, deduped;
+        falls back to the single static capacity when no buckets are set)."""
+        if not self.capacity_buckets:
+            return (self.capacity(k),)
+        g = self.group_size
+        n_groups = k // g
+        mult = max(1, 128 // g)
+        caps = set()
+        for frac in self.capacity_buckets:
+            cap = max(1, int(round(n_groups * float(frac))))
+            cap = int(-(-cap // mult) * mult)
+            caps.add(min(cap, n_groups))
+        return tuple(sorted(caps))
 
 
 def init_gated_mlp(key: jax.Array, d: int, k: int, dtype=jnp.bfloat16,
@@ -95,12 +120,18 @@ def _act(cfg: SparseInferConfig):
 # kernel's selection) are broadcast over the token axis.
 MLP_STAT_KEYS = (
     "predicted_density",   # fraction of k the predictor keeps (margin <= 0)
-    "realized_density",    # fraction of k actually computed (post capacity)
+    "realized_density",    # fraction of k this TOKEN got of its predicted
+                           # set (post capacity clamp); batch-shared on paths
+                           # without per-token accounting (see DESIGN.md §4)
     "actual_density",      # fraction of k truly active (gate > 0), measured
                            # on whatever rows this strategy computed
-    "false_neg_rate",      # active-but-skipped fraction; exact only on paths
-                           # that compute the full gate (dense/masked audits)
+    "false_neg_rate",      # active-but-skipped fraction; exact on full-gate
+                           # paths (dense/masked audits), in-union proxy on
+                           # the pallas path's in-kernel telemetry
     "overflow_frac",       # predicted-active fraction dropped by the C clamp
+    "union_demand_frac",   # fraction of k the BATCH-UNION selection demands
+                           # (selected + clamp-dropped) — what capacity_hint
+                           # must cover; 1.0 on dense
 )
 
 
@@ -128,7 +159,8 @@ def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if return_stats:
         return y, _stats(x.shape[:-1],
                          predicted_density=1.0, realized_density=1.0,
-                         actual_density=jnp.mean(g1 > 0, axis=-1))
+                         actual_density=jnp.mean(g1 > 0, axis=-1),
+                         union_demand_frac=1.0)
     return y
 
 
@@ -162,12 +194,15 @@ def masked_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     y = h1 @ params["wd_t"].astype(x.dtype)
     if return_stats:
         active = g1 > 0
+        k = m.shape[-1]
+        union_keep = jnp.any((m <= 0).reshape(-1, k), axis=0)
         stats = _stats(
             x.shape[:-1],
             predicted_density=jnp.mean(keep, axis=-1),
             realized_density=jnp.mean(keep, axis=-1),  # every predicted row
             actual_density=jnp.mean(active, axis=-1),  # computed
             false_neg_rate=jnp.mean(active & (m > 0), axis=-1),
+            union_demand_frac=jnp.mean(union_keep),    # no clamp: union keep
         )
         return y, stats
     return y
@@ -277,6 +312,7 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
             realized_density=sel_frac[:, None],
             actual_density=jnp.sum(g1 > 0, axis=(-2, -1)) / k,
             overflow_frac=over_frac[:, None],
+            union_demand_frac=(sel_frac + over_frac)[:, None],
         )
         if not grouped_in:
             stats = {kk: v[0] for kk, v in stats.items()}
@@ -295,16 +331,22 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
                alpha: float | jax.Array = 1.0,
                interpret: bool | None = None,
                return_stats: bool = False):
-    """Fused Pallas kernel path (TPU target; interpret=True on CPU).
+    """Single-dispatch-pair fused pipeline (TPU target; interpret on CPU).
 
-    Stats come from the selection stage outside the kernel (the fused kernel
-    does not expose per-row gate activity, so ``actual_density`` stays 0 and
-    audit steps must use the masked path — DESIGN.md §4).
+    Two Pallas dispatches per sparse MLP (DESIGN.md §2): ① the fused
+    predictor (sign-pack + XOR/popcount + alpha margin + group-min in one
+    kernel — no packed input or (B, k) count matrix in HBM) emits per-token
+    per-group margins; the batch-union top-C selection is a tiny XLA
+    epilogue; ② the fused MLP kernel computes the selected groups and, with
+    ``return_stats``, accumulates per-token telemetry in-kernel (realized
+    gate activity + in-union false-negative proxy), so ``MLP_STAT_KEYS``
+    are populated natively PER SLOT — no masked-path audit fallback, and
+    per-slot realized density through the union selection (DESIGN.md §4).
     """
     from repro.kernels import ops as kops  # local import: kernels optional
     squeeze = x.ndim == 1
     xb = x[None] if squeeze else x
-    d = xb.shape[-1]
+    b, d = xb.shape
     k = params["wg_t"].shape[0]
     g = cfg.group_size
     cap = cfg.capacity(k)
@@ -312,33 +354,40 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     sign_wg = params.get("sign_wg")
     if sign_wg is None:
         sign_wg = P.pack_signs(params["wg_t"])
-    packed_x = kops.sign_pack(xb, interpret=interpret)
-    m = P.margins(sign_wg, packed_x, d, alpha)    # (B, k) per-token
-    m_u = S.union_margin(m)
-    gm = S.group_margins(m_u, g)
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    gm_tok, pred_cnt = kops.predict_group_margins(
+        sign_wg, xb, d, a, group_size=g, interpret=interpret)
+    gm = S.union_margin(gm_tok)                   # (k/g,) batch union
     sel, sstats = S.capacity_select_with_stats(gm, cap)
 
-    y = kops.fused_sparse_mlp(
+    out = kops.fused_sparse_mlp(
         xb, params["wg_t"], params.get("wu_t"), params["wd_t"],
-        sel.indices, sel.count, group_size=g,
-        activation=cfg.activation, fatrelu_threshold=cfg.fatrelu_threshold,
-        interpret=interpret,
+        sel.indices, sel.count, gm_tok if return_stats else None,
+        group_size=g, activation=cfg.activation,
+        fatrelu_threshold=cfg.fatrelu_threshold,
+        collect_stats=return_stats, interpret=interpret,
+    )
+    if not return_stats:
+        return out[0] if squeeze else out
+    y, tel = out
+    tel = tel.astype(jnp.float32)                 # (B, 3): actual, fn, real
+    kf = jnp.float32(k)
+    predicted = pred_cnt.astype(jnp.float32) * g / kf
+    realized = tel[:, 2] / kf
+    stats = _stats(
+        xb.shape[:-1],
+        predicted_density=predicted,
+        realized_density=realized,
+        actual_density=tel[:, 0] / kf,
+        false_neg_rate=tel[:, 1] / kf,
+        # per-slot clamp drops: the token's predicted groups not selected
+        overflow_frac=jnp.maximum(predicted - realized, 0.0),
+        union_demand_frac=sstats.predicted.astype(jnp.float32) * g / kf,
     )
     y = y[0] if squeeze else y
-    if return_stats:
-        # per-token predicted from the pre-union margins; selection-level
-        # quantities broadcast over the batch (one union selection)
-        grp_keep = jnp.any(m.reshape(xb.shape[0], k // g, g) <= 0, axis=-1)
-        stats = _stats(
-            xb.shape[:-1],
-            predicted_density=jnp.mean(grp_keep, axis=-1),
-            realized_density=sstats.selected.astype(jnp.float32) * g / k,
-            overflow_frac=sstats.overflow.astype(jnp.float32) * g / k,
-        )
-        if squeeze:
-            stats = {kk: v[0] for kk, v in stats.items()}
-        return y, stats
-    return y
+    if squeeze:
+        stats = {kk: v[0] for kk, v in stats.items()}
+    return y, stats
 
 
 def apply(params: dict, x: jax.Array, cfg: SparseInferConfig,

@@ -3,7 +3,8 @@
 ``interpret=None`` (default) resolves to ``True`` unless running on a real
 TPU backend — so the same call sites work in this CPU container (interpret
 mode, used by tests) and on hardware (compiled Mosaic kernels).  Shapes the
-kernels can't tile (e.g. d % 32 != 0) fall back to the jnp oracle.
+kernels can't tile (degenerate tilings now raise explicit ``ValueError``
+from ``choose_block_k`` / ``choose_blocks``) fall back to the jnp oracle.
 """
 from __future__ import annotations
 
@@ -31,7 +32,11 @@ def sign_pack(v: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
         return ref.sign_pack_ref(v)
     shape = v.shape
     flat = v.reshape(-1, shape[-1])
-    out = _sign_pack.sign_pack(flat, interpret=interp)
+    try:
+        block = _sign_pack.choose_blocks(*flat.shape)
+    except ValueError:   # degenerate tiling: explicit error -> oracle
+        return ref.sign_pack_ref(v)
+    out = _sign_pack.sign_pack(flat, interpret=interp, block=block)
     return out.reshape(shape[:-1] + (shape[-1] // 32,))
 
 
@@ -41,7 +46,14 @@ def predict_counts(packed_w: jax.Array, packed_x: jax.Array, *,
     interp = _resolve_interpret(interpret)
     lead = packed_x.shape[:-1]
     flat = packed_x.reshape(-1, packed_x.shape[-1])
-    out = _predict.predict_counts(packed_w, flat, interpret=interp)
+    try:
+        bk = _predict.choose_block_k(packed_w.shape[0], packed_w.shape[1],
+                                     flat.shape[0])
+    except ValueError:   # degenerate tiling: explicit error -> oracle
+        out = ref.predict_counts_ref(packed_w, flat)
+    else:
+        out = _predict.predict_counts(packed_w, flat, interpret=interp,
+                                      block_k=bk)
     return out.reshape(lead + (packed_w.shape[0],))
 
 
@@ -55,20 +67,75 @@ def predict_margins(packed_w: jax.Array, packed_x: jax.Array, d_valid: int,
     return n_neg - jnp.asarray(alpha, jnp.float32) * n_pos
 
 
+def predict_group_margins(packed_w: jax.Array, x: jax.Array, d_valid: int,
+                          alpha: float | jax.Array = 1.0, *,
+                          group_size: int = 8,
+                          interpret: Optional[bool] = None):
+    """Single-dispatch decode predictor (DESIGN.md §2): raw input (B, d) ->
+    per-token per-group margins (B, k/G) + per-slot predicted counts (B,).
+
+    Fuses sign-packing, XOR/popcount, the alpha margin and the group-min
+    into one Pallas kernel — no packed input or (B, k) count matrix ever
+    round-trips HBM.  Bitwise-identical to the ``core.predictor`` epilogue
+    composition it replaces.
+    """
+    interp = _resolve_interpret(interpret)
+    k, w = packed_w.shape
+    b = x.shape[0]
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    try:
+        bk = _predict.choose_block_k(k, w, b, group_size)
+    except ValueError:   # degenerate tiling: explicit error -> oracle
+        return ref.predict_group_margins_ref(packed_w, x, d_valid, a,
+                                             group_size)
+    pad = w * _predict.PACK - x.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    return _predict.predict_group_margins(
+        packed_w, xp, a, d_valid=d_valid, group_size=group_size,
+        interpret=interp, block_k=bk)
+
+
 def fused_sparse_mlp(x: jax.Array,
                      wg_t: jax.Array,
                      wu_t: Optional[jax.Array],
                      wd_t: jax.Array,
                      sel_indices: jax.Array,
                      sel_count: jax.Array,
+                     gm_tok: Optional[jax.Array] = None,
                      *,
                      group_size: int = 8,
                      activation: str = "relu",
                      fatrelu_threshold: float = 0.0,
-                     interpret: Optional[bool] = None) -> jax.Array:
-    """Capacity-gathered fused sparse gated MLP: (B, d) -> (B, d) f32."""
+                     collect_stats: bool = False,
+                     interpret: Optional[bool] = None):
+    """Capacity-gathered fused sparse gated MLP: (B, d) -> (B, d) f32.
+
+    With ``collect_stats`` (needs ``gm_tok`` per-token group margins) the
+    kernel also accumulates per-token telemetry in-kernel and returns
+    ``(y, telemetry)`` — see kernels.sparse_mlp_fused.TELEMETRY_COLS.
+    """
     interp = _resolve_interpret(interpret)
     return _fused.fused_sparse_mlp(
-        x, wg_t, wu_t, wd_t, sel_indices, sel_count,
+        x, wg_t, wu_t, wd_t, sel_indices, sel_count, gm_tok,
         group_size=group_size, activation=activation,
-        fatrelu_threshold=fatrelu_threshold, interpret=interp)
+        fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
+        interpret=interp)
+
+
+def count_pallas_dispatches(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` dispatches one invocation of ``fn`` lowers
+    to (recursing through nested jits/scans/conds).  Used by the dispatch-
+    count regression tests and the kernel microbench — the decode-time
+    sparse-MLP pipeline must stay at <= 2 (DESIGN.md §2)."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                n += walk(sub)
+        return n
+
+    return walk(closed.jaxpr)

@@ -1,14 +1,27 @@
-"""Pallas TPU kernel: XOR + popcount sparsity predictor (paper §IV-B2, Listing 1).
+"""Pallas TPU kernels: XOR + popcount sparsity predictor (paper §IV-B2).
 
-The CUDA version assigns a warp per neuron row and ``__popc``s packed words.
-TPU-native version: tile the packed sign matrix (k × d/32, int32) over the
-grid, broadcast the packed input signs, XOR + ``population_count`` on the VPU
-and reduce along the word axis.  Reads ``k·d/8`` bytes — 16× fewer than one
-bf16 weight matrix — making prediction a ~6% overhead on the dense MLP's
-traffic (paper Table I: 2.2e6 predictor ops vs 2.1e8 MLP MACs for 13B).
+Two entry points:
 
-Emits raw negative-product counts; the (alpha-scaled) margin/threshold is a
-trivial epilogue done by the caller (keeps the kernel reusable for stats).
+``predict_counts``
+    The paper's Listing-1 kernel: tile the packed sign matrix (k × d/32,
+    int32) over the grid, XOR against packed input signs and
+    ``population_count`` on the VPU.  Emits raw negative-product counts;
+    margins are an XLA epilogue.  Kept for the standalone predictor API and
+    the op-count studies.
+
+``predict_group_margins``
+    The single-dispatch decode predictor (DESIGN.md §2): fuses input
+    sign-packing, XOR/popcount, the alpha margin (paper eq. 2) and the
+    row-group min-aggregation into ONE kernel.  The packed input and the
+    (B, k) count matrix live only in VMEM — nothing round-trips HBM between
+    packing, prediction and selection.  Outputs are selection-ready per-token
+    per-group margins (B, k/G) plus per-slot predicted-group counts (B,),
+    so the whole sparse-MLP pipeline is two Pallas dispatches: this kernel,
+    then the fused MLP (kernels/sparse_mlp_fused.py).
+
+Reads ``k·d/8`` bytes of packed weight signs — 16× fewer than one bf16
+weight matrix — making prediction a ~6% overhead on the dense MLP's traffic
+(paper Table I: 2.2e6 predictor ops vs 2.1e8 MLP MACs for 13B).
 """
 from __future__ import annotations
 
@@ -17,6 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+PACK = 32
 
 
 def _predict_kernel(pw_ref, px_ref, out_ref):
@@ -27,12 +42,34 @@ def _predict_kernel(pw_ref, px_ref, out_ref):
     out_ref[...] = counts.astype(jnp.int32)
 
 
-def choose_block_k(k: int, w: int, b: int) -> int:
-    """Tile k so the (B, bk, w) int32 intermediate stays under ~4 MiB."""
-    budget = max(8, (4 * 1024 * 1024) // (4 * w * max(b, 1)))
+def choose_block_k(k: int, w: int, b: int, group_size: int = 1) -> int:
+    """Tile k so the (B, bk, w) int32 intermediate stays under ~4 MiB.
+
+    Raises ``ValueError`` on degenerate tilings instead of silently falling
+    back to worst-case 1-row tiles (satellite: tiling guards): the ``ops``
+    dispatch layer catches the error and routes to the jnp oracle.
+    """
+    if k <= 0 or w <= 0 or b <= 0:
+        raise ValueError(f"predictor tiling needs k,w,b > 0, got "
+                         f"k={k} w={w} b={b}")
+    if k % group_size:
+        raise ValueError(f"k={k} not divisible by group_size={group_size}")
+    budget = (4 * 1024 * 1024) // (4 * w * b)
+    if budget < min(k, 8):
+        raise ValueError(
+            f"degenerate predictor tile: batch×width b={b}, w={w} words "
+            f"leaves a k-tile budget of {budget} rows (< 8) — shrink the "
+            "batch or use the jnp reference path")
     bk = min(k, budget)
-    while k % bk:
-        bk -= 1
+    bk -= bk % group_size
+    while bk > 0 and k % bk:
+        bk -= group_size
+    if bk < min(k, 8):
+        raise ValueError(
+            f"no non-degenerate k-tile for k={k} (group={group_size}, "
+            f"budget={budget}): largest divisor found is {max(bk, 0)} — pad "
+            "k to a composite multiple of the group size or use the jnp "
+            "reference path")
     return bk
 
 
@@ -56,3 +93,93 @@ def predict_counts(packed_w: jax.Array, packed_x: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
         interpret=interpret,
     )(packed_w, packed_x)
+
+
+def _make_group_margins_kernel(d_valid: int, group_size: int):
+    """Fused sign-pack + XOR/popcount + alpha margin + group-min kernel.
+
+    The packing and margin arithmetic reproduce ``core.predictor`` bitwise
+    (same op sequence in the same dtypes), so the selection downstream is
+    bit-identical to the multi-dispatch path it replaces.
+    """
+    def kernel(x_ref, pw_ref, alpha_ref, gm_ref, cnt_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        # pack input sign bits in-register (cheap VPU work recomputed per
+        # k-tile; x stays VMEM-resident — its block index never changes)
+        x = x_ref[...]                                   # (B, dp)
+        b, dp = x.shape
+        bits = (x < 0).astype(jnp.uint32)
+        bits = bits.reshape(b, dp // PACK, PACK)
+        weights = jnp.uint32(1) << jnp.arange(PACK, dtype=jnp.uint32)
+        px = jnp.sum(bits * weights, axis=-1,
+                     dtype=jnp.uint32).astype(jnp.int32)  # (B, w)
+
+        pw = pw_ref[...]                                 # (bk, w)
+        xor = jnp.bitwise_xor(px[:, None, :], pw[None, :, :])
+        n_neg = jnp.sum(jax.lax.population_count(xor), axis=-1,
+                        dtype=jnp.int32).astype(jnp.float32)       # (B, bk)
+        a = alpha_ref[...]                               # (B, 1)
+        # paper eq. (2), as the exact op sequence core.predictor.margins
+        # lowers to — so the compiled kernel is BITWISE identical to the
+        # jitted multi-dispatch epilogue it replaces (XLA contracts the
+        # mul+sub into an FMA in both; only the un-jitted eager path rounds
+        # the product separately) and selections match the gather strategy.
+        m = n_neg - a * (jnp.float32(d_valid) - n_neg)
+        bk = m.shape[-1]
+        gm = m.reshape(b, bk // group_size, group_size).min(-1)
+        gm_ref[...] = gm                                 # (B, bk/G)
+        cnt_ref[...] += jnp.sum(gm <= 0, axis=-1,
+                                dtype=jnp.int32)[:, None]
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_valid", "group_size", "interpret", "block_k"))
+def predict_group_margins(packed_w: jax.Array,
+                          x: jax.Array,
+                          alpha: jax.Array,
+                          *,
+                          d_valid: int,
+                          group_size: int = 8,
+                          interpret: bool = True,
+                          block_k: int | None = None):
+    """Single-dispatch decode predictor.
+
+    packed_w: (k, w) int32 packed gate-weight signs; x: (B, w*32) raw input
+    (zero-padded past ``d_valid``); alpha: (B,) per-token conservativeness.
+    Returns ``(gm, cnt)``: per-token per-group margins (B, k/G) float32
+    (group = min over members, ready for batch-union + top-C selection) and
+    per-slot predicted-active group counts (B,) int32.
+    """
+    k, w = packed_w.shape
+    b, dp = x.shape
+    assert dp == w * PACK, (dp, w)
+    assert k % group_size == 0, (k, group_size)
+    bk = block_k or choose_block_k(k, w, b, group_size)
+    grid = (k // bk,)
+    a = jnp.reshape(alpha.astype(jnp.float32), (b, 1))
+    gm, cnt = pl.pallas_call(
+        _make_group_margins_kernel(d_valid, group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, dp), lambda i: (0, 0)),
+            pl.BlockSpec((bk, w), lambda i: (i, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, bk // group_size), lambda i: (0, i)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((b, k // group_size), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x, packed_w, a)
+    return gm, cnt[:, 0]

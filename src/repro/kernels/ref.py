@@ -18,6 +18,53 @@ def predict_counts_ref(packed_w: jax.Array, packed_x: jax.Array) -> jax.Array:
     return P.neg_counts(packed_w, packed_x)
 
 
+def predict_group_margins_ref(packed_w: jax.Array, x: jax.Array,
+                              d_valid: int, alpha: jax.Array,
+                              group_size: int = 8):
+    """Oracle for kernels.predict.predict_group_margins: the multi-dispatch
+    composition (pack -> margins -> group min) the fused kernel replaces."""
+    m = P.margins(packed_w, P.pack_signs(x), d_valid, alpha)     # (B, k)
+    b, k = m.shape
+    gm = m.reshape(b, k // group_size, group_size).min(-1)       # (B, k/G)
+    cnt = jnp.sum(gm <= 0, axis=-1, dtype=jnp.int32)             # (B,)
+    return gm, cnt
+
+
+def fused_mlp_telemetry_ref(x: jax.Array,
+                            wg_t: jax.Array,
+                            sel_indices: jax.Array,
+                            sel_count: jax.Array,
+                            gm_tok: jax.Array,
+                            *,
+                            group_size: int = 8,
+                            activation: str = "relu",
+                            fatrelu_threshold: float = 0.0) -> jax.Array:
+    """Oracle for the fused kernel's in-kernel telemetry (B, 3) int32:
+    (actual, false_neg_proxy, realized) row counts over the selected groups
+    (kernels.sparse_mlp_fused.TELEMETRY_COLS)."""
+    b, d = x.shape
+    k = wg_t.shape[0]
+    g = group_size
+    cap = sel_indices.shape[0]
+    act = get_activation(
+        "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
+        else activation, fatrelu_threshold)
+    valid = jnp.arange(cap) < sel_count                          # (C,)
+    rows = jnp.take(wg_t.reshape(k // g, g, d), sel_indices,
+                    axis=0).reshape(cap * g, d)
+    ga = act(jnp.einsum("bd,nd->bn", x.astype(jnp.float32),
+                        rows.astype(jnp.float32)))               # (B, C*g)
+    vrow = jnp.repeat(valid, g)[None, :]
+    live = (ga > 0) & vrow
+    keep = (jnp.take(gm_tok, sel_indices, axis=-1) <= 0)         # (B, C)
+    keep_row = jnp.repeat(keep, g, axis=-1)
+    actual = jnp.sum(live, axis=-1, dtype=jnp.int32)
+    fn = jnp.sum(live & ~keep_row, axis=-1, dtype=jnp.int32)
+    realized = jnp.sum((keep & valid[None, :]).astype(jnp.int32),
+                       axis=-1) * g
+    return jnp.stack([actual, fn, realized], axis=-1)
+
+
 def fused_sparse_mlp_ref(x: jax.Array,
                          wg_t: jax.Array,
                          wu_t: jax.Array | None,

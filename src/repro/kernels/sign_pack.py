@@ -30,15 +30,35 @@ def _sign_pack_kernel(v_ref, out_ref):
 
 
 def choose_blocks(rows: int, d: int) -> tuple[int, int]:
-    """VMEM-sized tiling: keep the f32-upcast block under ~2 MiB."""
+    """VMEM-sized tiling: keep the f32-upcast block under ~2 MiB.
+
+    Raises ``ValueError`` for degenerate tilings (d not packable, rows with
+    no usable divisor, lane budget exhausted) instead of silently degrading
+    to 1-row worst-case tiles; the ``ops`` dispatch layer catches the error
+    and falls back to the jnp oracle.
+    """
+    if rows <= 0 or d <= 0:
+        raise ValueError(f"sign_pack tiling needs rows,d > 0, got "
+                         f"rows={rows} d={d}")
+    if d % PACK:
+        raise ValueError(f"sign_pack tiles need d % {PACK} == 0, got d={d}")
     bd = d
     # lane dim must stay a multiple of 32*128 for aligned packed output
     while bd > 4096 and bd % (2 * PACK * 128) == 0:
         bd //= 2
     budget = 2 * 1024 * 1024 // (bd * 4)
+    if budget < 1:
+        raise ValueError(
+            f"degenerate sign_pack tile: d={d} leaves no row budget under "
+            "the 2 MiB VMEM cap — d needs a 32*128-aligned split")
     bm = max(8, min(rows, budget))
     while rows % bm:
         bm -= 1
+    if rows >= 8 and bm < 8:
+        raise ValueError(
+            f"degenerate row tiling for rows={rows}: largest divisor under "
+            f"the budget is {bm} (< 8 sublanes) — pad rows to a composite "
+            "size or use the jnp reference path")
     return bm, bd
 
 

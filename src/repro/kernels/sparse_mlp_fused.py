@@ -16,6 +16,18 @@ The paper's "+actual sparsity" falls out of ``h`` being exactly zero for
 false-positive rows: their down-proj contribution vanishes. Steps past
 ``count`` (capacity padding) are masked with ``pl.when``; their DMAs fetch
 group 0 harmlessly (capacity slack is a DSE knob, DESIGN.md §2).
+
+In-kernel telemetry (``collect_stats=True``, DESIGN.md §4): alongside the
+accumulator the kernel folds three per-token int32 counters over the grid —
+``TELEMETRY_COLS = (actual, false_neg, realized)`` — by also prefetching the
+token's own group margin for the step's group (a (B, 1) DMA driven by the
+same scalar-prefetched index).  ``actual`` counts computed rows whose gate
+fired (paper's realized gate activity), ``false_neg`` is the in-union
+false-negative proxy (gate fired but THIS token's margin said skip — rows it
+only got because a co-resident token kept them), ``realized`` counts the
+token's own predicted rows that survived the capacity clamp.  This populates
+``MLP_STAT_KEYS`` natively on the pallas path — per-slot, with no masked-path
+audit fallback.
 """
 from __future__ import annotations
 
@@ -28,73 +40,95 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.relufication import get_activation
 
+# columns of the telemetry output, in order (per-token int32 row counts)
+TELEMETRY_COLS = ("actual", "false_neg", "realized")
 
-def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool):
+
+def _telemetry_delta(ga, keep):
+    """Per-step telemetry delta (B, 3): gate activity ``ga`` (B, G) and the
+    token's own keep decision for this group ``keep`` (B, 1) bool."""
+    live = ga > 0
+    gsz = live.shape[-1]
+    return jnp.concatenate([
+        jnp.sum(live, axis=-1, dtype=jnp.int32, keepdims=True),
+        jnp.sum(live & jnp.logical_not(keep), axis=-1, dtype=jnp.int32,
+                keepdims=True),
+        keep.astype(jnp.int32) * gsz,
+    ], axis=-1)
+
+
+def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool,
+                 collect_stats: bool):
     act = get_activation(
         "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
         else activation, fatrelu_threshold)
 
-    if gated:
-        def kernel(sel_ref, cnt_ref, x_ref, wg_ref, wu_ref, wd_ref, y_ref):
-            i = pl.program_id(0)
-
-            @pl.when(i == 0)
-            def _init():
-                y_ref[...] = jnp.zeros_like(y_ref)
-
-            @pl.when(i < cnt_ref[0])
-            def _step():
-                x = x_ref[...]                                   # (B, d)
-                g = jax.lax.dot_general(
-                    x, wg_ref[...], (((1,), (1,)), ((), ())),
-                    preferred_element_type=jnp.float32)          # (B, G)
-                u = jax.lax.dot_general(
-                    x, wu_ref[...], (((1,), (1,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-                h = act(g) * u                                   # (B, G)
-                y_ref[...] += jax.lax.dot_general(
-                    h.astype(x.dtype), wd_ref[...], (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)          # (B, d)
-        return kernel
-
-    def kernel(sel_ref, cnt_ref, x_ref, wg_ref, wd_ref, y_ref):
+    def kernel(sel_ref, cnt_ref, *refs):
+        if gated:
+            x_ref, wg_ref, wu_ref, wd_ref = refs[:4]
+            rest = refs[4:]
+        else:
+            x_ref, wg_ref, wd_ref = refs[:3]
+            wu_ref = None
+            rest = refs[3:]
+        if collect_stats:
+            gm_ref, y_ref, tel_ref = rest
+        else:
+            (y_ref,) = rest
+            gm_ref = tel_ref = None
         i = pl.program_id(0)
 
         @pl.when(i == 0)
         def _init():
             y_ref[...] = jnp.zeros_like(y_ref)
+            if collect_stats:
+                tel_ref[...] = jnp.zeros_like(tel_ref)
 
         @pl.when(i < cnt_ref[0])
         def _step():
-            x = x_ref[...]
+            x = x_ref[...]                                   # (B, d)
             g = jax.lax.dot_general(
                 x, wg_ref[...], (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            h = act(g)
+                preferred_element_type=jnp.float32)          # (B, G)
+            ga = act(g)
+            if wu_ref is not None:
+                u = jax.lax.dot_general(
+                    x, wu_ref[...], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                h = ga * u                                   # (B, G)
+            else:
+                h = ga
             y_ref[...] += jax.lax.dot_general(
                 h.astype(x.dtype), wd_ref[...], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
+                preferred_element_type=jnp.float32)          # (B, d)
+            if collect_stats:
+                tel_ref[...] += _telemetry_delta(ga, gm_ref[...] <= 0)
     return kernel
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("group_size", "activation", "fatrelu_threshold",
-                     "interpret"))
+                     "collect_stats", "interpret"))
 def fused_sparse_mlp(x: jax.Array,
                      wg_t: jax.Array,
                      wu_t: jax.Array | None,
                      wd_t: jax.Array,
                      sel_indices: jax.Array,
                      sel_count: jax.Array,
+                     gm_tok: jax.Array | None = None,
                      *,
                      group_size: int = 8,
                      activation: str = "relu",
                      fatrelu_threshold: float = 0.0,
-                     interpret: bool = True) -> jax.Array:
+                     collect_stats: bool = False,
+                     interpret: bool = True):
     """x: (B, d); w*_t: (k, d) neuron-major; sel_indices: (C,) group ids.
 
     Returns y: (B, d) float32 (one fused HBM pass over selected groups).
+    With ``collect_stats`` also requires ``gm_tok`` (B, k/G) per-token group
+    margins and returns ``(y, telemetry)`` with telemetry (B, 3) int32
+    (``TELEMETRY_COLS`` row counts accumulated in-kernel).
     """
     b, d = x.shape
     k = wg_t.shape[0]
@@ -102,6 +136,9 @@ def fused_sparse_mlp(x: jax.Array,
     assert k % g == 0
     cap = sel_indices.shape[0]
     gated = wu_t is not None
+    if collect_stats:
+        assert gm_tok is not None and gm_tok.shape == (b, k // g), (
+            "collect_stats needs per-token group margins (B, k/G)")
 
     cnt = jnp.reshape(sel_count.astype(jnp.int32), (1,))
     w_spec = pl.BlockSpec((g, d), lambda i, sel, cnt: (sel[i], 0))
@@ -112,34 +149,81 @@ def fused_sparse_mlp(x: jax.Array,
         operands.append(wu_t)
     in_specs.append(w_spec)
     operands.append(wd_t)
+    out_specs = pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    if collect_stats:
+        # the step's own-margin column rides the same prefetched index
+        in_specs.append(pl.BlockSpec((b, 1), lambda i, sel, cnt: (0, sel[i])))
+        operands.append(gm_tok.astype(jnp.float32))
+        out_specs = [out_specs,
+                     pl.BlockSpec((b, len(TELEMETRY_COLS)),
+                                  lambda i, sel, cnt: (0, 0))]
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((b, len(TELEMETRY_COLS)),
+                                          jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(cap,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0)),
+        out_specs=out_specs,
     )
-    kernel = _make_kernel(activation, fatrelu_threshold, gated)
+    kernel = _make_kernel(activation, fatrelu_threshold, gated, collect_stats)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
     )(sel_indices.astype(jnp.int32), cnt, *operands)
 
 
 def kernel_hbm_bytes(b: int, d: int, k: int, cap_groups: int, group_size: int,
-                     gated: bool = True, weight_bytes: int = 2) -> dict:
-    """Analytic HBM traffic model for the fused kernel vs dense (roofline)."""
+                     gated: bool = True, weight_bytes: int = 2,
+                     collect_stats: bool = True) -> dict:
+    """Analytic HBM traffic model for the two-dispatch pipeline vs dense.
+
+    Models the single-dispatch predictor (packed weight signs + raw input
+    read; per-token group margins written once, re-read by the selection
+    epilogue and the MLP kernel's telemetry prefetch) and the fused MLP at
+    the given capacity bucket, including the telemetry outputs.  The
+    previous model undercounted predictor traffic (it ignored the raw-input
+    read and the margin round-trip) and overstated the reduction.
+    """
     n_mats = 3 if gated else 2
-    dense = n_mats * k * d * weight_bytes + b * d * weight_bytes * 2
+    w_words = -(-d // 32)
+    n_groups = max(1, k // group_size)
+    cap_groups = min(cap_groups, n_groups)
     sel_rows = cap_groups * group_size
-    fused = n_mats * sel_rows * d * weight_bytes + b * d * (weight_bytes + 4)
-    predictor = k * d // 8 + b * d // 8  # packed signs (int32 words)
+
+    dense = n_mats * k * d * weight_bytes + b * d * weight_bytes * 2
+
+    # dispatch 1 — fused predictor: packed W signs + raw x in; per-token
+    # group margins + per-slot counts out (packed x never touches HBM)
+    margins_bytes = b * n_groups * 4
+    predictor = (k * w_words * 4            # packed sign matrix read
+                 + b * d * weight_bytes     # raw input read (packed in VMEM)
+                 + margins_bytes            # (B, k/G) margins written
+                 + b * 4)                   # per-slot predicted counts
+    # XLA selection epilogue re-reads the margins (union + top-C)
+    selection = margins_bytes + cap_groups * 8
+
+    # dispatch 2 — fused MLP: selected row-groups + x in, y out; telemetry
+    # adds the per-step own-margin prefetch and the (B, 3) counters
+    fused = (n_mats * sel_rows * d * weight_bytes
+             + b * d * weight_bytes         # x read again by the MLP kernel
+             + b * d * 4)                   # f32 accumulator written
+    telemetry = (b * cap_groups * 4 + b * len(TELEMETRY_COLS) * 4
+                 if collect_stats else 0)
+
+    total = fused + predictor + selection + telemetry
     return {
         "dense_bytes": dense,
         "fused_bytes": fused,
         "predictor_bytes": predictor,
-        "total_sparse_bytes": fused + predictor,
-        "reduction": dense / (fused + predictor),
+        "selection_bytes": selection,
+        "telemetry_bytes": telemetry,
+        "total_sparse_bytes": total,
+        "reduction": dense / total,
+        "dispatches": 2,
+        "cap_groups": cap_groups,
     }

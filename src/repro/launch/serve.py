@@ -86,7 +86,17 @@ def main() -> None:
     ap.add_argument("--audit-period", type=int, default=8)
     ap.add_argument("--adapt-capacity", action="store_true",
                     help="re-size gather capacity at refill boundaries "
-                         "from the observed keep-rate (re-jit boundary)")
+                         "from the observed keep-rate (re-jit boundary); "
+                         "superseded by --capacity-buckets when set")
+    ap.add_argument("--capacity-buckets", default="",
+                    help="comma list of capacity fractions forming the "
+                         "pre-jitted decode-step ladder, e.g. "
+                         "0.125,0.25,0.5 — the controller switches buckets "
+                         "between decode steps from its union-demand hint "
+                         "with no retrace (gather/pallas; DESIGN.md §2)")
+    ap.add_argument("--warm-buckets", action="store_true",
+                    help="compile every capacity bucket before serving so "
+                         "the first switches never stall a request")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -97,6 +107,10 @@ def main() -> None:
     if args.alpha is not None:
         cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, alpha_base=args.alpha, alpha_early=args.alpha))
+    if args.capacity_buckets:
+        buckets = tuple(float(v) for v in args.capacity_buckets.split(","))
+        cfg = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, capacity_buckets=buckets))
     mesh = parse_mesh(args.mesh)
     mod = model_module(cfg)
 
@@ -121,7 +135,8 @@ def main() -> None:
                                            max_len=args.max_len,
                                            max_new_tokens=args.max_new,
                                            slot_refill=args.slot_refill,
-                                           controller=ccfg),
+                                           controller=ccfg,
+                                           warm_buckets=args.warm_buckets),
                      params, extra_inputs=extra)
         slas = parse_sla_mix(args.sla_mix, args.requests)
         reqs = [Request(uid=i,
@@ -145,6 +160,11 @@ def main() -> None:
                          # srv.cfg, not cfg: adapt-capacity may have moved it
                          "capacity_frac": round(
                              srv.cfg.sparse.capacity_frac, 4)}
+        if cfg.sparse.capacity_buckets:
+            rep["sparse"]["capacity_buckets"] = list(
+                cfg.sparse.capacity_ladder(cfg.d_ff))
+            rep["sparse"]["active_bucket"] = getattr(srv, "_active_cap",
+                                                     None)
         if srv.controller is not None:
             rep["controller"] = srv.controller.report()
         print(json.dumps(rep, indent=1))

@@ -176,7 +176,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     """Contract as ``models.lm.decode_step``: cache_len scalar or (B,)
     per-slot; alphas None | (L,) | (L, B) per-layer-per-slot (the scan
     slices leading rows, so each decoder FFN sees its layer's scalar or
-    per-token alpha); stats (L, B) per-token (DESIGN.md §5)."""
+    per-token alpha); stats (L, B) per-token ``MLP_STAT_KEYS`` (native
+    in-kernel telemetry on the pallas strategy — DESIGN.md §4/§5)."""
     x = LM._embed_in(params, cfg, token)
     if alphas is None:
         alphas = jnp.asarray(LM._alphas(cfg))

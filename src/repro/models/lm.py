@@ -690,7 +690,10 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     ``collect_stats`` the return gains a third element: per-layer MLP
     telemetry arrays keyed by ``repro.core.sparse_mlp.MLP_STAT_KEYS``,
     shaped (L, B) (L = alpha-consuming layers: n_layers for dense/moe,
-    invocation groups for hybrid, none for xlstm).
+    invocation groups for hybrid, none for xlstm).  On the pallas strategy
+    the telemetry is produced in-kernel per slot (realized density, actual
+    gate activity, the false-negative proxy — DESIGN.md §4), so the serve
+    controller needs no masked-path audit re-dispatch.
     """
     x = _embed_in(params, cfg, token)
     stats = None

@@ -187,6 +187,9 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 caches: dict, cache_len: jax.Array, *,
                 alphas=None, collect_stats: bool = False):
+    """Contract as ``models.lm.decode_step``: alphas None | (L,) | (L, B);
+    stats (L, B) per-token ``MLP_STAT_KEYS`` pytrees stacked under the scan
+    (native in-kernel telemetry on the pallas strategy, DESIGN.md §4)."""
     p, n_groups = _layout(cfg)
     x = LM._embed_in(params, cfg, token)
     if alphas is None:

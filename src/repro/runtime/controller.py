@@ -6,8 +6,10 @@ closes the loop the paper describes, online (full design: DESIGN.md §4):
 
 * every decode step the jitted model returns per-layer telemetry
   (``repro.core.sparse_mlp.MLP_STAT_KEYS``): predicted / realized / actual
-  density, capacity overflow, and — on audit steps — the exact
-  false-negative rate from the full-gate masked path;
+  density, capacity overflow, the batch-union selection demand, and a
+  false-negative signal — from the full-gate masked path on audit steps,
+  or natively every step from the pallas kernel's in-kernel proxy
+  (``native_fn=True``, which disables the audit cadence entirely);
 * between decode steps (host side, numpy — nothing here is traced) the
   controller EMA-filters the telemetry and applies a clamped integral update
   to each layer's alpha, pushing realized density toward the target while a
@@ -96,8 +98,11 @@ class ControllerState:
     alphas: np.ndarray        # live per-layer alpha
     density_ema: np.ndarray   # realized-density estimate
     overflow_ema: np.ndarray  # capacity-overflow fraction estimate
-    fn_ema: np.ndarray        # false-negative-rate estimate (audits)
+    fn_ema: np.ndarray        # false-negative-rate estimate (audits, or the
+                              # pallas kernel's native in-union proxy)
     predicted_ema: np.ndarray  # predictor keep-rate estimate
+    union_ema: Optional[np.ndarray] = None  # batch-union selection-demand
+                              # estimate (what capacity must cover)
     steps: int = 0            # decode steps observed
     audits: int = 0           # audit steps observed
 
@@ -120,9 +125,15 @@ class AlphaController:
 
     def __init__(self, cfg: ControllerConfig, schedule: AlphaSchedule,
                  num_layers: int,
-                 tiers: Optional[Sequence[SLATier]] = None):
+                 tiers: Optional[Sequence[SLATier]] = None,
+                 native_fn: bool = False):
+        """``native_fn``: the serving strategy's regular telemetry already
+        carries a false-negative signal (the pallas path's in-kernel proxy,
+        DESIGN.md §4) — fn_ema updates every step and the masked-path audit
+        cadence is disabled entirely."""
         self.cfg = cfg
         self.num_layers = num_layers
+        self.native_fn = bool(native_fn)
         self.tiers: Optional[tuple] = tuple(tiers) if tiers else None
         a0 = schedule.init_state(num_layers).astype(np.float32)
         if self.tiers:
@@ -140,6 +151,7 @@ class AlphaController:
             overflow_ema=np.zeros_like(a0),
             fn_ema=np.zeros_like(a0),
             predicted_ema=t.copy(),
+            union_ema=t.copy(),
         )
         self._trajectory: collections.deque = collections.deque(
             maxlen=TRAJECTORY_KEEP)
@@ -166,7 +178,11 @@ class AlphaController:
 
     def is_audit_step(self) -> bool:
         """True when the NEXT decode step should run the masked full-gate
-        audit path (exact paper semantics + measurable false negatives)."""
+        audit path (exact paper semantics + measurable false negatives).
+        Always False with ``native_fn``: the serving strategy's own
+        telemetry already carries the false-negative signal."""
+        if self.native_fn:
+            return False
         p = self.cfg.audit_period
         return p > 0 and (self.state.steps + 1) % p == 0
 
@@ -210,6 +226,21 @@ class AlphaController:
             s.predicted_ema = ema(s.predicted_ema,
                                   stats["predicted_density"])
             s.overflow_ema = ema(s.overflow_ema, stats["overflow_frac"])
+            # batch-union selection demand: strategies that see the union
+            # selection report it directly; older per-token-only telemetry
+            # falls back to realized + overflow (the per-slot demand bound)
+            union = stats.get("union_demand_frac")
+            if union is None:
+                union = (np.asarray(stats["realized_density"], np.float32)
+                         + np.asarray(stats["overflow_frac"], np.float32))
+            if s.union_ema is None:   # restored pre-ladder state: seed the
+                # estimate from the equivalent realized+overflow demand
+                s.union_ema = (s.density_ema + s.overflow_ema).astype(
+                    np.float32)
+            s.union_ema = ema(s.union_ema, union)
+            if self.native_fn:
+                # the pallas kernel's in-union FN proxy arrives every step
+                s.fn_ema = ema(s.fn_ema, stats["false_neg_rate"])
         s.steps += 1
 
         err = s.density_ema - self._target
@@ -233,15 +264,18 @@ class AlphaController:
     # ------------------------------------------------------------ outputs --
     def capacity_hint(self, k: int, slack: float = 1.3,
                       multiple: int = 128) -> int:
-        """Recommended capacity (in neurons) for the NEXT jit: the observed
-        union selection demand — realized density plus the overflow the
-        current clamp dropped (selection stats satisfy predicted = selected
-        + overflow, and both terms are union-level, unlike the per-token
-        ``predicted_ema`` which understates the batch-union need) — max
-        over tiers and layers so no layer is starved, plus slack,
-        tile-rounded via :func:`expected_capacity`.  Only meaningful with
-        ``adapt_capacity``; the caller owns the re-jit boundary."""
-        demand = self.state.density_ema + self.state.overflow_ema
+        """Recommended capacity (in neurons) for the next capacity choice:
+        the observed batch-union selection demand (``union_demand_frac``
+        EMA — what the shared top-C selection must cover; the per-token
+        ``predicted_ema`` understates it for B co-resident slots), max over
+        tiers and layers so no layer is starved, plus slack, tile-rounded
+        via :func:`expected_capacity`.  Consumed two ways: the pre-jitted
+        capacity-bucket ladder picks a bucket BETWEEN decode steps (no
+        retrace — ``runtime.server.Server._select_bucket``), and the legacy
+        ``adapt_capacity`` path re-jits at refill boundaries."""
+        demand = self.state.union_ema
+        if demand is None:  # restored pre-ladder state
+            demand = self.state.density_ema + self.state.overflow_ema
         keep = min(1.0, float(np.max(demand)))
         return expected_capacity(k, 1.0 - keep, slack, multiple)
 
@@ -255,10 +289,13 @@ class AlphaController:
         rep = {
             "steps": s.steps,
             "audits": s.audits,
+            "native_fn": self.native_fn,
             "target_density": self.cfg.target_density,
             "mean_realized_density": float(s.density_ema.mean()),
             "mean_false_neg": float(s.fn_ema.mean()),
             "mean_overflow": float(s.overflow_ema.mean()),
+            "mean_union_demand": (float(s.union_ema.mean())
+                                  if s.union_ema is not None else None),
             "converged_2pct": self.converged(0.02),
         }
         if self.tiers:

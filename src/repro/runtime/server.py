@@ -60,6 +60,10 @@ class ServeConfig:
     # the static-AlphaSchedule path below stays bit-identical when disabled.
     controller: ControllerConfig = dataclasses.field(
         default_factory=ControllerConfig)
+    # Trace every capacity bucket's decode step up front (one discarded
+    # decode call per bucket before the serve loop) so no request ever pays
+    # a mid-stream compile when the controller first switches buckets.
+    warm_buckets: bool = False
 
 
 @dataclasses.dataclass
@@ -143,39 +147,73 @@ class Server:
         # semantics for the emitted token).  With ``per_tier`` the state is
         # (T, L): one alpha vector and density target per SLA tier.
         self.controller: Optional[AlphaController] = None
+        if (cfg.sparse.capacity_buckets
+                and not (scfg.controller.enabled and cfg.sparse.enabled)):
+            # the ladder is driven by the controller's union-demand hint;
+            # without it decoding silently runs the static capacity_frac
+            warnings.warn(
+                "SparseInferConfig.capacity_buckets set but the controller "
+                "is disabled: the bucket ladder needs capacity_hint to pick "
+                "buckets — decoding uses the static capacity_frac "
+                "(DESIGN.md §2)", stacklevel=2)
         if scfg.controller.enabled and cfg.sparse.enabled:
             if cfg.family == "xlstm":
                 raise ValueError("xlstm has no SparseInfer MLP decode path; "
                                  "controller unsupported")
             tiers = scfg.sla_tiers if scfg.controller.per_tier else None
-            if tiers and cfg.sparse.strategy in ("gather", "pallas"):
-                # union strategies share ONE row selection per batch, so
-                # every tier observes the same realized density — the
+            if tiers and cfg.sparse.strategy == "gather":
+                # gather shares ONE row selection per batch AND reports the
+                # batch-level selection fraction as realized density, so
                 # per-tier density feedback degenerates (alphas saturate
-                # toward the clamps).  Predicted density and audit FN still
-                # separate per tier; only `masked` separates realized.
+                # toward the clamps).  `masked` separates realized exactly;
+                # `pallas` separates it natively via in-kernel per-slot
+                # telemetry (DESIGN.md §4).
                 warnings.warn(
-                    f"per_tier controller with the {cfg.sparse.strategy!r} "
-                    "union strategy: realized density is batch-shared, so "
-                    "per-tier density targets cannot converge — use "
-                    "strategy='masked' for per-tier density control "
-                    "(DESIGN.md §5)", stacklevel=2)
+                    "per_tier controller with the 'gather' union strategy: "
+                    "realized density is batch-shared, so per-tier density "
+                    "targets cannot converge — use strategy='masked' or "
+                    "'pallas' for per-tier density control (DESIGN.md §5)",
+                    stacklevel=2)
+            # pallas emits the false-negative proxy natively every step:
+            # no masked-path audit dispatches at all (DESIGN.md §4)
             self.controller = AlphaController(
                 scfg.controller, cfg.sparse.alpha_schedule(),
-                self._n_controlled_layers(), tiers=tiers)
+                self._n_controlled_layers(), tiers=tiers,
+                native_fn=cfg.sparse.strategy == "pallas")
             self._build_controller_fns()
 
     def _build_controller_fns(self) -> None:
         """(Re)build the stats-collecting decode jits against the CURRENT
-        self.cfg — called at init and again whenever maybe_adapt_capacity
-        changes the static capacity (which forces a re-jit anyway)."""
+        self.cfg: one per capacity bucket when the config carries a
+        ``capacity_buckets`` ladder (DESIGN.md §2), else a single fn.
+        Each bucket's fn is jitted once and cached — the controller then
+        switches buckets between decode steps with a dict lookup, never a
+        retrace.  ``_trace_counts`` counts (re)traces per bucket (the
+        no-retrace regression tests read it)."""
         cfg = self.cfg
+        self._trace_counts: collections.Counter = collections.Counter()
 
-        def _decode_ctrl(params, tok, caches, length, alphas):
-            logits, caches, stats = self.mod.decode_step(
-                params, cfg, tok, caches, length, alphas=alphas,
-                collect_stats=True)
-            return greedy_sample(logits), caches, stats
+        def make_ctrl(cfg_b, cap_key):
+            def _decode_ctrl(params, tok, caches, length, alphas):
+                self._trace_counts[cap_key] += 1   # trace-time side effect
+                logits, caches, stats = self.mod.decode_step(
+                    params, cfg_b, tok, caches, length, alphas=alphas,
+                    collect_stats=True)
+                return greedy_sample(logits), caches, stats
+            return jax.jit(_decode_ctrl)
+
+        self._bucket_fns: dict = {}
+        self._warmed_buckets = False
+        if (cfg.sparse.capacity_buckets
+                and cfg.sparse.strategy in ("gather", "pallas")):
+            for capg in cfg.sparse.capacity_ladder(cfg.d_ff):
+                cfg_b = cfg.replace(sparse=dataclasses.replace(
+                    cfg.sparse, capacity_override=capg))
+                self._bucket_fns[capg] = make_ctrl(cfg_b, capg)
+            self._active_cap = max(self._bucket_fns)  # start at the widest
+        else:
+            self._bucket_fns[0] = make_ctrl(cfg, 0)
+            self._active_cap = 0
 
         audit_cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, strategy="masked"))
@@ -186,19 +224,58 @@ class Server:
                 collect_stats=True)
             return greedy_sample(logits), caches, stats
 
-        self.decode_ctrl_fn = jax.jit(_decode_ctrl)
         self.decode_audit_fn = jax.jit(_decode_audit)
 
-    def maybe_adapt_capacity(self) -> bool:
-        """Apply the controller's capacity recommendation (DESIGN.md §4).
+    @property
+    def decode_ctrl_fn(self):
+        """The stats-collecting decode jit for the ACTIVE capacity bucket."""
+        return self._bucket_fns[self._active_cap]
 
-        Capacity is a static shape under jit, so it can only move where a
-        re-jit is acceptable — the scheduler calls this at refill
-        boundaries.  Returns True when the effective capacity changed (and
-        the controller decode fns were rebuilt)."""
+    def _select_bucket(self) -> int:
+        """Pick the smallest pre-jitted capacity bucket covering the
+        controller's union-demand hint (DESIGN.md §2/§4).  Pure host-side
+        arithmetic + dict lookup between decode steps — switching buckets
+        never retraces the jitted decode step."""
+        ctl = self.controller
+        if ctl is None or len(self._bucket_fns) <= 1 or ctl.state.steps == 0:
+            return self._active_cap
+        g = self.cfg.sparse.group_size
+        need = -(-ctl.capacity_hint(self.cfg.d_ff) // g)  # neurons -> groups
+        for capg in sorted(self._bucket_fns):
+            if capg >= need:
+                self._active_cap = capg
+                break
+        else:
+            self._active_cap = max(self._bucket_fns)
+        return self._active_cap
+
+    def warm_buckets(self, tok, caches, lengths, alphas) -> None:
+        """Trace+compile every capacity bucket's decode step up front with
+        the serve loop's real shapes (results discarded — caches are pure
+        values, nothing advances).  One-time cost so the controller's first
+        bucket switches never stall a live request; idempotent until the
+        fns are rebuilt."""
+        if self._warmed_buckets or len(self._bucket_fns) <= 1:
+            self._warmed_buckets = True
+            return
+        for fn in self._bucket_fns.values():
+            fn(self.params, jnp.asarray(tok), caches, jnp.asarray(lengths),
+               jnp.asarray(alphas))
+        self._warmed_buckets = True
+
+    def maybe_adapt_capacity(self) -> bool:
+        """Legacy capacity adaptation: re-jit toward the controller's hint
+        (DESIGN.md §4).  Capacity is a static shape under jit, so this can
+        only move where a re-jit is acceptable — the scheduler calls it at
+        refill boundaries.  Superseded by the pre-jitted bucket ladder
+        (``_select_bucket``) whenever ``capacity_buckets`` is configured:
+        then this is a no-op.  Returns True when the effective capacity
+        changed (and the controller decode fns were rebuilt)."""
         ctl, sc = self.controller, self.scfg.controller
         if ctl is None or not sc.adapt_capacity or ctl.state.steps == 0:
             return False
+        if len(self._bucket_fns) > 1 or 0 not in self._bucket_fns:
+            return False              # the bucket ladder owns capacity
         k = self.cfg.d_ff
         hint = ctl.capacity_hint(k)
         sp = dataclasses.replace(self.cfg.sparse,
@@ -317,11 +394,14 @@ class Server:
                 tok, caches = self.decode_fn(self.params, tok, caches, length)
             else:
                 audit = ctl.is_audit_step()
+                self._select_bucket()  # between-step capacity bucket switch
                 fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
                 if ctl.tiers:
                     alphas = self._slot_alpha_matrix(np.full(b, bal))
                 else:
                     alphas = self._pad_layers(ctl.alphas())
+                if self.scfg.warm_buckets and not self._warmed_buckets:
+                    self.warm_buckets(tok, caches, length, alphas)
                 tok, caches, stats = fn(self.params, tok, caches, length,
                                         jnp.asarray(alphas))
                 # stats come back (L, B); aggregate over the uniform batch
@@ -453,11 +533,18 @@ class Server:
 
         for i in range(B):
             admit(i)
+        if (ctl is not None and scfg.warm_buckets
+                and not self._warmed_buckets and active.any()):
+            self.warm_buckets(tok, caches, lengths,
+                              self._slot_alpha_matrix(tier_idx, active))
         alpha_mat: Optional[np.ndarray] = None  # cached off-controller matrix
         while active.any():
             jt, jl = jnp.asarray(tok), jnp.asarray(lengths)
             if ctl is not None:
                 audit = ctl.is_audit_step()
+                # between-step capacity-bucket switch: a host dict lookup
+                # into the pre-jitted ladder — never a retrace
+                self._select_bucket()
                 fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
                 # rebuilt per step: the controller adapts between steps
                 alphas = self._slot_alpha_matrix(tier_idx, active)

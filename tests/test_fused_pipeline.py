@@ -1,0 +1,394 @@
+"""Single-dispatch-pair pallas pipeline tests (DESIGN.md §2/§4).
+
+Covers the tentpole invariants: the decode-time sparse MLP lowers to at
+most TWO Pallas dispatches (counted in the jaxpr, interpret mode); its
+outputs match the ``gather`` strategy across capacity buckets, alphas
+(scalar and per-slot), gated/ungated and FATReLU; the in-kernel telemetry
+agrees with the masked full-gate path where their contracts coincide; and
+the serve path switches controller-driven capacity buckets between decode
+steps without ever retracing a jitted decode step.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ControllerConfig, ModelConfig
+from repro.core import predictor as P
+from repro.core import selection as S
+from repro.core.sparse_mlp import (MLP_STAT_KEYS, SparseInferConfig,
+                                   gather_mlp, init_gated_mlp, masked_mlp,
+                                   pallas_mlp, prepare_sparse_params)
+from repro.kernels import ops
+from repro.models import lm
+from repro.runtime.server import Request, Server, ServeConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+D, K = 128, 512
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = prepare_sparse_params(
+        init_gated_mlp(jax.random.PRNGKey(0), D, K, dtype=jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, D), jnp.float32)
+    return params, x
+
+
+class TestDispatchCount:
+    """<= 2 Pallas dispatches per sparse MLP (down from the 4-stage
+    sign_pack -> predict -> select -> fused pipeline)."""
+
+    def test_strategy_two_dispatches(self, setup):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.25, group_size=8)
+        n_plain = ops.count_pallas_dispatches(
+            lambda xx: pallas_mlp(params, xx, cfg, alpha=1.0,
+                                  interpret=True), x)
+        n_stats = ops.count_pallas_dispatches(
+            lambda xx: pallas_mlp(params, xx, cfg, alpha=1.0, interpret=True,
+                                  return_stats=True), x)
+        assert n_plain == 2, n_plain
+        assert n_stats == 2, n_stats   # telemetry rides the same dispatches
+
+    def test_decode_step_two_dispatches(self):
+        """Whole-model decode step: the layer scan traces the MLP once, so
+        the full jaxpr carries exactly 2 pallas_call dispatches."""
+        cfg = ModelConfig(
+            name="tiny-pallas", family="dense", n_layers=2, d_model=32,
+            n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, max_seq=32,
+            dtype="float32", param_dtype="float32", attn_chunk=8,
+            loss_chunk=64, remat=False, activation="relu",
+            sparse=SparseInferConfig(enabled=True, strategy="pallas",
+                                     activation="relu", group_size=8))
+        params = lm.prepare_sparse(lm.init_lm(jax.random.PRNGKey(0), cfg))
+        caches = lm.init_caches(cfg, 2, 16)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        n = ops.count_pallas_dispatches(
+            lambda t: lm.decode_step(params, cfg, t, caches, jnp.int32(4),
+                                     collect_stats=True)[2], tok)
+        assert n == 2, n
+
+
+class TestStrategyParity:
+    """Pipeline output parity vs the gather strategy: the fused predictor is
+    bitwise-identical to the jitted margin path, so both strategies select
+    the same rows; the MLP outputs then agree to accumulation-order
+    tolerance across every knob."""
+
+    @pytest.mark.parametrize("frac", [0.125, 0.25, 0.5, 1.0])
+    @pytest.mark.parametrize("g", [1, 8])
+    def test_capacity_buckets(self, setup, frac, g):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=frac, group_size=g)
+        yg = jax.jit(lambda p, xx: gather_mlp(p, xx, cfg, alpha=1.0))(
+            params, x)
+        yp = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(yp),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("alpha", [0.8, 1.0, 1.03])
+    def test_alpha_scalar_and_vector(self, setup, alpha):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.5, group_size=8)
+        av = jnp.full((x.shape[0],), alpha, jnp.float32)
+        yg = jax.jit(lambda p, xx: gather_mlp(p, xx, cfg, alpha=av))(
+            params, x)
+        ys = pallas_mlp(params, x, cfg, alpha=alpha, interpret=True)
+        yv = pallas_mlp(params, x, cfg, alpha=av, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(yv))
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(ys),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_ungated(self):
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(2), D, K, dtype=jnp.float32,
+                           gated=False))
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, D))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.5, group_size=8)
+        yg = gather_mlp(params, x, cfg, alpha=1.0)
+        yp, st = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True,
+                            return_stats=True)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(yp),
+                                   rtol=2e-5, atol=2e-5)
+        assert set(st) == set(MLP_STAT_KEYS)
+
+    def test_fatrelu(self, setup):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="fatrelu",
+                                fatrelu_threshold=0.05, capacity_frac=0.5,
+                                group_size=8)
+        yg = gather_mlp(params, x, cfg, alpha=1.0)
+        yp = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True)
+        np.testing.assert_allclose(np.asarray(yg), np.asarray(yp),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_stats_do_not_change_output(self, setup):
+        params, x = setup
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.25, group_size=8)
+        y0 = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True)
+        y1, _ = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True,
+                           return_stats=True)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+class TestTelemetryParity:
+    """In-kernel telemetry vs the masked full-gate path, where their
+    contracts coincide: G=1 (neuron granularity), no capacity clamp."""
+
+    def _both(self, alpha=1.0, frac=1.0):
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(4), D, K, dtype=jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(5), (3, D))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=frac, group_size=1)
+        _, st_m = masked_mlp(params, x, cfg, alpha=alpha, return_stats=True)
+        _, st_p = pallas_mlp(params, x, cfg, alpha=alpha, interpret=True,
+                             return_stats=True)
+        return params, x, cfg, st_m, st_p
+
+    def test_predicted_and_realized_match_masked(self):
+        _, _, _, st_m, st_p = self._both()
+        np.testing.assert_array_equal(np.asarray(st_p["predicted_density"]),
+                                      np.asarray(st_m["predicted_density"]))
+        # no clamp: every token's predicted row is computed on both paths
+        np.testing.assert_array_equal(np.asarray(st_p["realized_density"]),
+                                      np.asarray(st_m["realized_density"]))
+        np.testing.assert_array_equal(np.asarray(st_p["overflow_frac"]), 0.0)
+        np.testing.assert_array_equal(np.asarray(st_m["overflow_frac"]), 0.0)
+
+    def test_union_demand_matches_masked(self):
+        _, _, _, st_m, st_p = self._both()
+        np.testing.assert_allclose(np.asarray(st_p["union_demand_frac"]),
+                                   np.asarray(st_m["union_demand_frac"]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_actual_and_fn_vs_full_gate_reference(self):
+        """The kernel sees only union-computed rows: its actual density is
+        the masked path's actual minus the truly-skipped active rows, and
+        its FN count is the masked FN restricted to computed rows."""
+        params, x, cfg, st_m, st_p = self._both()
+        m = P.margins(params["sign_wg"], P.pack_signs(x), D, 1.0)
+        g1 = jax.nn.relu(x @ params["wg_t"].T)
+        active = np.asarray(g1 > 0)
+        union = np.asarray(jnp.any(m <= 0, axis=0))        # computed rows
+        skip_tok = np.asarray(m > 0)
+        act_exp = (active & union[None, :]).mean(-1)
+        fn_exp = (active & union[None, :] & skip_tok).mean(-1)
+        np.testing.assert_allclose(np.asarray(st_p["actual_density"]),
+                                   act_exp, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_p["false_neg_rate"]),
+                                   fn_exp, rtol=1e-6, atol=1e-6)
+        # sanity vs masked: kernel proxy never exceeds the exact audit FN
+        assert (np.asarray(st_p["false_neg_rate"])
+                <= np.asarray(st_m["false_neg_rate"]) + 1e-7).all()
+
+    def test_per_slot_realized_density_separates(self):
+        """The PR-2 follow-on: the union path reports PER-SLOT realized
+        density — a conservative and an aggressive slot sharing one batch
+        selection must report different realized densities."""
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(6), D, K, dtype=jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, D))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=1.0, group_size=1)
+        alphas = jnp.asarray([1.5, 0.6], jnp.float32)
+        _, st = pallas_mlp(params, x, cfg, alpha=alphas, interpret=True,
+                           return_stats=True)
+        r = np.asarray(st["realized_density"])
+        p = np.asarray(st["predicted_density"])
+        assert p[0] > p[1]           # higher alpha keeps more
+        assert r[0] > r[1]           # ...and realized separates per slot
+        np.testing.assert_array_equal(r, p)  # no clamp: realized==predicted
+
+    def test_per_slot_overflow_under_tight_capacity(self):
+        """With a binding clamp, per-slot overflow = the slot's own
+        predicted groups that were dropped (predicted - realized)."""
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(8), D, K, dtype=jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(9), (3, D))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                capacity_frac=0.25, group_size=1)
+        _, st = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True,
+                           return_stats=True)
+        p = np.asarray(st["predicted_density"])
+        r = np.asarray(st["realized_density"])
+        o = np.asarray(st["overflow_frac"])
+        np.testing.assert_allclose(o, np.maximum(p - r, 0.0), atol=1e-6)
+        assert (r <= p + 1e-6).all()
+        assert o.sum() > 0           # the clamp binds at this capacity
+
+
+class TestDeadSlotUnion:
+    def test_dead_slot_leaves_pallas_union(self):
+        """Pallas analogue of the gather dead-slot regression: a drained
+        slot (DEAD_SLOT_ALPHA) must not perturb the live slot's selection."""
+        from repro.runtime.server import DEAD_SLOT_ALPHA
+        params = prepare_sparse_params(
+            init_gated_mlp(jax.random.PRNGKey(10), 64, 128,
+                           dtype=jnp.float32))
+        x = jax.random.normal(jax.random.PRNGKey(11), (2, 64))
+        cfg = SparseInferConfig(enabled=True, activation="relu",
+                                group_size=1, capacity_frac=0.1)
+        y_single = pallas_mlp(params, x[:1], cfg, alpha=1.0, interpret=True)
+        y_mixed = pallas_mlp(params, x, cfg,
+                             alpha=jnp.asarray([1.0, DEAD_SLOT_ALPHA]),
+                             interpret=True)
+        np.testing.assert_allclose(np.asarray(y_single[0]),
+                                   np.asarray(y_mixed[0]),
+                                   rtol=1e-6, atol=1e-6)
+        y_polluted = pallas_mlp(params, x, cfg, alpha=1.0, interpret=True)
+        assert not np.allclose(np.asarray(y_single[0]),
+                               np.asarray(y_polluted[0]))
+
+
+CFG_SRV = ModelConfig(
+    name="tiny-ladder", family="dense", n_layers=2, d_model=32,
+    n_heads=2, n_kv_heads=2, d_ff=512, vocab=128, max_seq=64,
+    dtype="float32", param_dtype="float32", attn_chunk=8, loss_chunk=64,
+    remat=False, activation="relu",
+    sparse=SparseInferConfig(enabled=True, strategy="pallas",
+                             activation="relu", group_size=1,
+                             alpha_base=0.3, alpha_early=0.3,
+                             capacity_buckets=(0.25, 0.5, 1.0)))
+
+
+class TestCapacityBucketLadder:
+    def test_ladder_values_aligned_and_deduped(self):
+        sp = SparseInferConfig(group_size=1, capacity_buckets=(0.25, 0.5,
+                                                               1.0))
+        assert sp.capacity_ladder(512) == (128, 256, 512)
+        tiny = SparseInferConfig(group_size=1, capacity_buckets=(0.01, 0.02))
+        assert tiny.capacity_ladder(512) == (128,)   # aligned + deduped
+        static = SparseInferConfig(group_size=8, capacity_frac=0.25)
+        assert static.capacity_ladder(4096) == (static.capacity(4096),)
+
+    def test_capacity_override_wins(self):
+        sp = SparseInferConfig(group_size=1, capacity_frac=0.9,
+                               capacity_override=128)
+        assert sp.capacity(512) == 128
+
+    def test_server_switches_buckets_without_retrace(self):
+        """End-to-end ladder: every bucket is traced exactly once (warmup),
+        the controller's union-demand hint drives the serve loop down to
+        the smallest bucket, and NO decode step ever retraces.  Native
+        pallas telemetry means zero masked-path audit steps."""
+        ccfg = ControllerConfig(enabled=True, gain=0.0, fn_gain=0.0,
+                                audit_period=4)
+        srv = Server(lm, CFG_SRV,
+                     ServeConfig(batch=2, max_len=64, controller=ccfg,
+                                 warm_buckets=True),
+                     lm.init_lm(jax.random.PRNGKey(0), CFG_SRV))
+        assert set(srv._bucket_fns) == {128, 256, 512}
+        assert srv._active_cap == 512            # starts at the widest
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i, prompt=rng.integers(0, 128, size=6),
+                        max_new=5) for i in range(4)]
+        done = srv.serve(reqs)
+        assert all(len(r.out) == 5 for r in done)
+        ctl = srv.controller
+        assert ctl.native_fn and ctl.state.audits == 0 and ctl.state.steps > 0
+        # alpha 0.3 at d=32 predicts almost nothing -> union demand ~0 ->
+        # the hint lands on the smallest bucket
+        assert srv._active_cap == 128, srv._trace_counts
+        # the invariant: one trace per bucket (the warmup), none after
+        assert set(srv._trace_counts) == {128, 256, 512}
+        assert all(c == 1 for c in srv._trace_counts.values()), \
+            dict(srv._trace_counts)
+
+    def test_buckets_without_controller_warn(self):
+        """capacity_buckets needs the controller's hint; configuring the
+        ladder with the controller off must warn, not silently run static
+        capacity."""
+        with pytest.warns(UserWarning, match="capacity_buckets"):
+            Server(lm, CFG_SRV, ServeConfig(batch=2, max_len=64),
+                   lm.init_lm(jax.random.PRNGKey(0), CFG_SRV))
+
+    def test_generate_warms_ladder(self):
+        """generate() (the chunked scheduler's inner loop) also pre-compiles
+        the ladder under warm_buckets: every bucket traced exactly once."""
+        ccfg = ControllerConfig(enabled=True, gain=0.0, fn_gain=0.0)
+        srv = Server(lm, CFG_SRV,
+                     ServeConfig(batch=2, max_len=64, controller=ccfg,
+                                 warm_buckets=True),
+                     lm.init_lm(jax.random.PRNGKey(0), CFG_SRV))
+        prompts = np.random.default_rng(1).integers(0, 128, size=(2, 6))
+        out = srv.generate(prompts, 4)
+        assert out.shape == (2, 4)
+        assert set(srv._trace_counts) == {128, 256, 512}
+        assert all(c == 1 for c in srv._trace_counts.values()), \
+            dict(srv._trace_counts)
+
+    def test_legacy_adapt_capacity_noop_with_ladder(self):
+        ccfg = ControllerConfig(enabled=True, adapt_capacity=True, gain=0.0)
+        srv = Server(lm, CFG_SRV, ServeConfig(batch=2, max_len=64,
+                                              controller=ccfg),
+                     lm.init_lm(jax.random.PRNGKey(0), CFG_SRV))
+        srv.controller.state.steps = 5
+        assert srv.maybe_adapt_capacity() is False
+
+
+class TestNativeFalseNegatives:
+    def test_native_fn_updates_every_step(self):
+        """With native telemetry the fn EMA moves on regular steps and the
+        audit cadence is off."""
+        from repro.runtime.controller import AlphaController
+        cc = ControllerConfig(enabled=True, audit_period=4, ema=1.0)
+        ctl = AlphaController(cc, P.AlphaSchedule(), 2, native_fn=True)
+        stats = {
+            "predicted_density": np.full(2, 0.3, np.float32),
+            "realized_density": np.full(2, 0.25, np.float32),
+            "actual_density": np.full(2, 0.2, np.float32),
+            "false_neg_rate": np.full(2, 0.05, np.float32),
+            "overflow_frac": np.full(2, 0.05, np.float32),
+            "union_demand_frac": np.full(2, 0.4, np.float32),
+        }
+        for _ in range(4):
+            assert not ctl.is_audit_step()   # audits disabled outright
+            ctl.observe(stats)
+        np.testing.assert_allclose(ctl.state.fn_ema, 0.05)
+        np.testing.assert_allclose(ctl.state.union_ema, 0.4)
+        assert ctl.report()["native_fn"] is True
+
+    def test_union_fallback_without_key(self):
+        """Legacy 5-key telemetry (no union_demand_frac) falls back to
+        realized + overflow for the capacity hint."""
+        from repro.runtime.controller import AlphaController
+        cc = ControllerConfig(enabled=True, ema=1.0)
+        ctl = AlphaController(cc, P.AlphaSchedule(), 2)
+        ctl.observe({
+            "predicted_density": np.full(2, 0.1, np.float32),
+            "realized_density": np.full(2, 0.2, np.float32),
+            "actual_density": np.full(2, 0.1, np.float32),
+            "false_neg_rate": np.zeros(2, np.float32),
+            "overflow_frac": np.full(2, 0.3, np.float32),
+        })
+        np.testing.assert_allclose(ctl.state.union_ema, 0.5)
+
+    def test_restored_state_without_union_ema(self):
+        """A pre-ladder ControllerState (union_ema=None, e.g. a restored
+        checkpoint) must observe cleanly: the estimate is seeded from
+        realized + overflow on first update."""
+        from repro.runtime.controller import AlphaController, ControllerState
+        cc = ControllerConfig(enabled=True, ema=1.0)
+        ctl = AlphaController(cc, P.AlphaSchedule(), 2)
+        z = np.zeros(2, np.float32)
+        ctl.state = ControllerState(
+            alphas=np.ones(2, np.float32), density_ema=z + 0.3,
+            overflow_ema=z.copy(), fn_ema=z.copy(),
+            predicted_ema=z + 0.3)          # union_ema defaults to None
+        assert ctl.capacity_hint(4096) > 0  # None-guard: fallback demand
+        ctl.observe({
+            "predicted_density": z + 0.2, "realized_density": z + 0.2,
+            "actual_density": z + 0.2, "false_neg_rate": z.copy(),
+            "overflow_frac": z + 0.1, "union_demand_frac": z + 0.4,
+        })
+        np.testing.assert_allclose(ctl.state.union_ema, 0.4)

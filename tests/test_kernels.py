@@ -64,6 +64,141 @@ class TestPredictCounts:
         np.testing.assert_allclose(np.asarray(m_kernel), np.asarray(m_core))
 
 
+class TestTilingGuards:
+    """Degenerate tilings raise explicit errors instead of silently running
+    worst-case tiles; the ops layer routes those shapes to the jnp oracle."""
+
+    def test_choose_block_k_typical_shapes(self):
+        from repro.kernels.predict import choose_block_k
+        assert choose_block_k(1024, 8, 4) == 1024          # fits the budget
+        assert choose_block_k(13824, 160, 1) == 4608       # divisor under it
+        assert choose_block_k(512, 16, 2, group_size=8) == 512
+        bk = choose_block_k(4096, 128, 16)                 # budget-bound
+        assert 8 <= bk <= 4096 and 4096 % bk == 0
+
+    def test_choose_block_k_group_aligned(self):
+        from repro.kernels.predict import choose_block_k
+        bk = choose_block_k(4096, 128, 16, group_size=8)
+        assert bk % 8 == 0 and 4096 % bk == 0
+
+    @pytest.mark.parametrize("k,w,b", [(0, 4, 1), (64, 0, 1), (64, 4, 0)])
+    def test_choose_block_k_rejects_empty(self, k, w, b):
+        from repro.kernels.predict import choose_block_k
+        with pytest.raises(ValueError):
+            choose_block_k(k, w, b)
+
+    def test_choose_block_k_rejects_huge_batch(self):
+        """A (B, bk, w) tile that can't fit even 8 rows must error, not
+        silently degrade to one-row tiles."""
+        from repro.kernels.predict import choose_block_k
+        with pytest.raises(ValueError, match="degenerate"):
+            choose_block_k(4096, 4096, 64)
+
+    def test_choose_block_k_rejects_indivisible_group(self):
+        from repro.kernels.predict import choose_block_k
+        with pytest.raises(ValueError, match="divisible"):
+            choose_block_k(100, 4, 1, group_size=8)
+
+    def test_choose_blocks_typical_shapes(self):
+        from repro.kernels.sign_pack import choose_blocks
+        assert choose_blocks(64, 2048) == (64, 2048)
+        bm, bd = choose_blocks(13824 // 32, 5120 // 4)
+        assert (13824 // 32) % bm == 0 and (5120 // 4) % bd == 0
+
+    def test_choose_blocks_rejects_unpackable_d(self):
+        from repro.kernels.sign_pack import choose_blocks
+        with pytest.raises(ValueError, match="32"):
+            choose_blocks(8, 100)
+
+    def test_choose_blocks_rejects_prime_rows_over_budget(self):
+        """rows with no divisor >= 8 under the VMEM row budget (2·1021 at
+        d=1024 -> budget 512) must error, not tile 2 rows at a time."""
+        from repro.kernels.sign_pack import choose_blocks
+        with pytest.raises(ValueError, match="degenerate"):
+            choose_blocks(2 * 1021, 1024)
+
+    def test_ops_fall_back_on_degenerate_shapes(self):
+        """The dispatch layer absorbs the guard errors: results still match
+        the oracle for shapes the kernels refuse to tile."""
+        from repro.kernels import ref
+        v = jax.random.normal(KEY, (2 * 1021, 1024))  # rows guard -> oracle
+        np.testing.assert_array_equal(
+            np.asarray(ops.sign_pack(v, interpret=True)),
+            np.asarray(ref.sign_pack_ref(v)))
+        # k = 2·1021 (1021 prime) over-budget at w=128, b=16: no divisor
+        # tile >= 8 exists under the VMEM budget -> guard fires -> oracle
+        k, d, b = 2 * 1021, 4096, 16
+        from repro.kernels.predict import choose_block_k
+        with pytest.raises(ValueError, match="degenerate|no non-degenerate"):
+            choose_block_k(k, d // 32, b)
+        w = jax.random.normal(KEY, (k, d)) * 0.1
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, d))
+        pw = P.pack_signs(w)
+        gm, cnt = ops.predict_group_margins(pw, x, d, 1.0, group_size=1,
+                                            interpret=True)
+        gm_ref, cnt_ref = ref.predict_group_margins_ref(
+            pw, x, d, jnp.full((b,), 1.0), 1)
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gm_ref),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+
+
+class TestPredictGroupMargins:
+    """Single-dispatch predictor kernel vs the multi-dispatch composition."""
+
+    @pytest.mark.parametrize("k,d,b,g", [(256, 128, 1, 8), (512, 256, 4, 8),
+                                         (1024, 96, 2, 4), (128, 64, 4, 1)])
+    @pytest.mark.parametrize("alpha", [1.0, 1.02])
+    def test_matches_jitted_composition(self, k, d, b, g, alpha):
+        """Bitwise vs the JITTED pack->margins->group-min pipeline (both
+        sides compile the same op sequence; the eager path differs by FMA
+        contraction only)."""
+        from repro.kernels import ref
+        kw, kx = jax.random.split(jax.random.PRNGKey(k + d))
+        w = jax.random.normal(kw, (k, d))
+        x = jax.random.normal(kx, (b, d))
+        pw = P.pack_signs(w)
+        gm, cnt = ops.predict_group_margins(pw, x, d, alpha, group_size=g,
+                                            interpret=True)
+        gm_ref, cnt_ref = jax.jit(
+            ref.predict_group_margins_ref, static_argnums=(2, 4))(
+                pw, x, d, jnp.full((b,), alpha), g)
+        np.testing.assert_array_equal(np.asarray(gm), np.asarray(gm_ref))
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+
+    def test_unpacked_tail_padding(self):
+        """d not a multiple of 32: the wrapper pads with zeros (positive
+        sign bits), matching core.predictor.pack_signs semantics."""
+        from repro.kernels import ref
+        d = 96 + 8
+        w = jax.random.normal(KEY, (64, d))
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, d))
+        pw = P.pack_signs(w)
+        gm, cnt = ops.predict_group_margins(pw, x, d, 1.0, group_size=1,
+                                            interpret=True)
+        gm_ref, cnt_ref = ref.predict_group_margins_ref(
+            pw, x, d, jnp.full((2,), 1.0), 1)
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gm_ref),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+
+    def test_per_token_alpha_column(self):
+        """Each batch row's margins follow ITS alpha (per-slot SLA alphas)."""
+        w = jax.random.normal(KEY, (64, 128))
+        x = jnp.tile(jax.random.normal(jax.random.PRNGKey(5), (1, 128)),
+                     (2, 1))
+        pw = P.pack_signs(w)
+        gm, _ = ops.predict_group_margins(
+            pw, x, 128, jnp.asarray([1.0, 2.0]), group_size=1,
+            interpret=True)
+        m0 = P.margins(pw, P.pack_signs(x[:1]), 128, 1.0)
+        m1 = P.margins(pw, P.pack_signs(x[1:]), 128, 2.0)
+        np.testing.assert_allclose(np.asarray(gm[0]), np.asarray(m0[0]),
+                                   rtol=1e-6, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gm[1]), np.asarray(m1[0]),
+                                   rtol=1e-6, atol=1e-5)
+
+
 class TestFusedSparseMLP:
     def _setup(self, k, d, b, g, dtype, seed=0):
         ks = jax.random.split(jax.random.PRNGKey(seed), 4)
@@ -115,6 +250,35 @@ class TestFusedSparseMLP:
                                    jnp.int32(0), group_size=8, interpret=True)
         np.testing.assert_array_equal(np.asarray(out), 0.0)
 
+    @pytest.mark.parametrize("k,d,b,g", [(256, 128, 2, 8), (512, 256, 4, 8),
+                                         (256, 128, 3, 1)])
+    def test_in_kernel_telemetry_matches_ref(self, k, d, b, g):
+        """The (B, 3) counters accumulated alongside the accumulator must
+        equal the jnp oracle: actual gate activity, in-union false-negative
+        proxy, per-token realized rows (TELEMETRY_COLS)."""
+        x, wg, wu, wd, sel = self._setup(k, d, b, g, jnp.float32)
+        gm_tok, _ = ops.predict_group_margins(
+            P.pack_signs(wg), x, d, 1.0, group_size=g, interpret=True)
+        y, tel = ops.fused_sparse_mlp(x, wg, wu, wd, sel.indices, sel.count,
+                                      gm_tok, group_size=g,
+                                      collect_stats=True, interpret=True)
+        y_plain = ops.fused_sparse_mlp(x, wg, wu, wd, sel.indices, sel.count,
+                                       group_size=g, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_plain))
+        want = ref.fused_mlp_telemetry_ref(x, wg, sel.indices, sel.count,
+                                           gm_tok, group_size=g)
+        assert tel.shape == (b, 3) and tel.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(tel), np.asarray(want))
+
+    def test_telemetry_zero_count(self):
+        x, wg, wu, wd, sel = self._setup(256, 128, 2, 8, jnp.float32)
+        gm_tok, _ = ops.predict_group_margins(
+            P.pack_signs(wg), x, 128, 1.0, group_size=8, interpret=True)
+        _, tel = ops.fused_sparse_mlp(x, wg, wu, wd, sel.indices,
+                                      jnp.int32(0), gm_tok, group_size=8,
+                                      collect_stats=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(tel), 0)
+
     def test_byte_model_reduction(self):
         """Analytic HBM model: sparse path must beat dense by >4x at 90%."""
         from repro.kernels.sparse_mlp_fused import kernel_hbm_bytes
@@ -122,3 +286,22 @@ class TestFusedSparseMLP:
         stats = kernel_hbm_bytes(1, 5120, k, cap_groups=int(k / 8 * 0.125),
                                  group_size=8)
         assert stats["reduction"] > 4.0
+
+    def test_byte_model_itemized(self):
+        """The traffic model accounts for every pipeline term: predictor
+        input read + margins, selection re-read, telemetry outputs — and
+        scales with the capacity bucket."""
+        from repro.kernels.sparse_mlp_fused import kernel_hbm_bytes
+        lo = kernel_hbm_bytes(4, 1024, 4096, cap_groups=64, group_size=8)
+        hi = kernel_hbm_bytes(4, 1024, 4096, cap_groups=256, group_size=8)
+        assert lo["dispatches"] == 2
+        assert lo["total_sparse_bytes"] < hi["total_sparse_bytes"]
+        assert lo["total_sparse_bytes"] == (
+            lo["fused_bytes"] + lo["predictor_bytes"]
+            + lo["selection_bytes"] + lo["telemetry_bytes"])
+        # predictor must charge the raw-input read (the old model did not)
+        assert lo["predictor_bytes"] > 4096 * (1024 // 32) * 4
+        no_tel = kernel_hbm_bytes(4, 1024, 4096, cap_groups=64, group_size=8,
+                                  collect_stats=False)
+        assert no_tel["telemetry_bytes"] == 0
+        assert no_tel["total_sparse_bytes"] < lo["total_sparse_bytes"]
