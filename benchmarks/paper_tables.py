@@ -310,6 +310,69 @@ def controller_serving_study(max_new: int = 24, batch: int = 2) -> list[str]:
     return rows
 
 
+# ------------------- mesh controller study (DESIGN.md §8, ROADMAP item) ----
+
+def mesh_controller_study(max_new: int = 16, n_shards: int = 4) -> list[str]:
+    """Controller study on the tensor-parallel serve path: a 4-way
+    'model'-axis mesh run (forced host-platform devices — benchmarks/run.py
+    sets the XLA flag before jax initializes; falls back to the bitwise-
+    identical single-device emulation when the devices are unavailable),
+    emitting the mesh-aggregated controller state plus the PER-SHARD
+    realized-density skew the DistributedController tracks (max-min over
+    the model axis / mean, per layer) — the signal that one shard's C/ms
+    clamp binds while others idle (cure: co-activation permutation,
+    DESIGN.md §2/§8)."""
+    from repro.configs.base import ControllerConfig
+    from repro.configs.registry import reduced_config
+    from repro.launch.mesh import make_mesh
+    from repro.launch.specs import model_module
+    from repro.runtime.server import Request, Server, ServeConfig
+
+    cfg = reduced_config("prosparse-llama2-7b").replace(
+        d_model=128, d_ff=256, n_layers=4, dtype="float32",
+        param_dtype="float32")
+    cfg = cfg.replace(sparse=dataclasses.replace(
+        cfg.sparse, strategy="gather", capacity_frac=0.5, group_size=8))
+    mod = model_module(cfg)
+    params = relufy_gate_bias(mod.init_lm(jax.random.PRNGKey(0), cfg), 0.05)
+    ccfg = ControllerConfig(enabled=True, target_density=0.2, gain=0.5,
+                            ema=0.3, audit_period=6, fn_budget=1.0)
+    scfg = ServeConfig(batch=2, max_len=96, controller=ccfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=max_new) for i in range(4)]
+
+    on_mesh = jax.device_count() >= n_shards
+    if on_mesh:
+        mesh = make_mesh((1, n_shards), ("data", "model"))
+        srv = Server(mod, cfg, scfg, params, mesh=mesh)
+    else:
+        cfg_e = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, tp_shards=n_shards))
+        srv = Server(mod, cfg_e, scfg, params)
+    t0 = time.perf_counter()
+    done = srv.serve(list(reqs))
+    dt = time.perf_counter() - t0
+    rep = srv.controller.report()
+    skew = rep["shard_skew"]
+    mode = "shard_map" if on_mesh else "emulated"
+    rows = [
+        f"mesh.controller,mode={mode},shards={n_shards}_devices="
+        f"{jax.device_count()}",
+        f"mesh.controller.tok_per_s,"
+        f"{sum(len(r.out) for r in done) / dt:.1f},"
+        f"density={rep['mean_realized_density']:.3f}_target=0.2",
+        "mesh.controller.per_shard_density,"
+        + "|".join(f"{v:.3f}" for v in skew["mean_shard_density"]) + ",",
+        "mesh.controller.per_layer_skew,"
+        + "|".join(f"{v:.3f}" for v in skew["per_layer_skew"])
+        + f",max={skew['max_skew']:.3f}",
+        f"mesh.controller.union_demand,{rep['mean_union_demand']:.3f},"
+        "feeds_capacity_hint",
+    ]
+    return rows
+
+
 # -------------------- slot-refill scheduler + SLA tiers (DESIGN.md §5) -----
 
 def slot_refill_study(n_requests: int = 8, batch: int = 2) -> list[str]:

@@ -6,6 +6,7 @@ Prints ``name,value,derived`` CSV rows. See benchmarks/paper_tables.py for
 the per-table implementations and DESIGN.md §7 for the experiment index.
 """
 import argparse
+import os
 import sys
 
 
@@ -14,6 +15,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer iterations / layers")
     args = ap.parse_args()
+
+    # the mesh controller study (DESIGN.md §8) needs a multi-device host
+    # platform; the flag must land before jax initializes (first T import)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
 
     from benchmarks import paper_tables as T
 
@@ -34,6 +42,9 @@ def main() -> None:
         ("Slot-refill scheduler + SLA tiers (DESIGN.md 5)",
          T.slot_refill_study,
          {"n_requests": 4 if args.quick else 8}),
+        ("Mesh controller study + per-shard skew (DESIGN.md 8)",
+         T.mesh_controller_study,
+         {"max_new": 8 if args.quick else 16}),
     ]
     failures = 0
     for title, fn, kw in sections:

@@ -24,10 +24,12 @@ from repro.core.selection import (
     expected_capacity,
     group_margins,
     mask_from_selection,
+    take_row_groups,
     union_margin,
 )
 from repro.core.sparse_mlp import (
     MLP_STAT_KEYS,
+    SHARD_STAT_KEY,
     SparseInferConfig,
     apply,
     dense_mlp,

@@ -92,6 +92,24 @@ def union_margin(margin: jax.Array) -> jax.Array:
     return margin.min(axis=tuple(range(margin.ndim - 1)))
 
 
+def take_row_groups(w_grouped: jax.Array, indices: jax.Array) -> jax.Array:
+    """Gather selected row-groups of a grouped weight matrix.
+
+    w_grouped: (n_groups, G, d); indices: (C,) group ids (padded entries
+    must already point at a valid group — ``capacity_select`` re-points
+    them at 0).  Returns (C, G, d).  This is THE gather both the XLA
+    gather strategy and the sharded decode path use — one definition so
+    their semantics cannot drift (the sharded bitwise-parity contract
+    depends on it).
+    """
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=(1, 2), collapsed_slice_dims=(0,), start_index_map=(0,))
+    return jax.lax.gather(
+        w_grouped, indices[:, None], dnums,
+        slice_sizes=(1,) + w_grouped.shape[1:],
+        mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+
+
 def mask_from_selection(sel: Selection, k: int) -> jax.Array:
     """Boolean keep-mask (k,) equivalent to a Selection (for testing/masked path)."""
     mask = jnp.zeros((k,), jnp.bool_)

@@ -51,6 +51,17 @@ class SparseInferConfig:
     # Exact group-count override used by the per-bucket configs the server
     # builds (0 = derive from capacity_frac).  Not meant for user configs.
     capacity_override: int = 0
+    # Tensor-parallel shard count over the FFN hidden dim k (DESIGN.md §8).
+    # 0 = unsharded.  When > 0, the sparse decode strategies run the
+    # SHARD-LOCAL formulation: each shard owns a contiguous k/tp_shards row
+    # slice, runs its own batch-union + top-(C/tp_shards) selection, and the
+    # partial down-projections / telemetry counts are combined across shards.
+    # This field defines the *semantics*; execution placement is orthogonal:
+    # under an active mesh with a 'model' axis of this size the computation
+    # runs under shard_map (runtime/distributed.py), otherwise the same math
+    # is emulated on one device — bitwise-identical either way, which is the
+    # invariant the sharded parity tests pin.
+    tp_shards: int = 0
 
     def alpha_schedule(self) -> P.AlphaSchedule:
         return P.AlphaSchedule(self.alpha_base, self.alpha_early,
@@ -81,6 +92,22 @@ class SparseInferConfig:
             cap = int(-(-cap // mult) * mult)
             caps.add(min(cap, n_groups))
         return tuple(sorted(caps))
+
+    def shard_capacity(self, k: int) -> int:
+        """Per-shard selection capacity (groups) under ``tp_shards``.
+
+        The global bucket capacity must split evenly so every shard's
+        compiled grid has the same static shape (one executable per bucket,
+        DESIGN.md §8)."""
+        cap = self.capacity(k)
+        ms = max(1, self.tp_shards)
+        if cap % ms or (k // self.group_size) % ms:
+            raise ValueError(
+                f"capacity {cap} groups / k={k} not divisible by "
+                f"tp_shards={ms} (group_size={self.group_size}) — pick "
+                "bucket fractions whose MXU-rounded group counts divide the "
+                "shard count, or adjust group_size (DESIGN.md §8)")
+        return cap // ms
 
 
 def init_gated_mlp(key: jax.Array, d: int, k: int, dtype=jnp.bfloat16,
@@ -135,8 +162,22 @@ MLP_STAT_KEYS = (
 )
 
 
-def zero_mlp_stats(shape: tuple = ()) -> dict:
-    return {k: jnp.zeros(shape, jnp.float32) for k in MLP_STAT_KEYS}
+# Optional extra telemetry key emitted by the sharded (``tp_shards > 0``)
+# strategies: per-shard realized density, shaped token dims + (tp_shards,).
+# Not part of the MLP_STAT_KEYS contract — the serve path's
+# DistributedController pops it for skew diagnosis before the per-tier /
+# batch aggregation sees the dict (DESIGN.md §8).
+SHARD_STAT_KEY = "shard_realized_density"
+
+
+def zero_mlp_stats(shape: tuple = (), tp_shards: int = 0) -> dict:
+    """Zero telemetry pytree.  ``tp_shards`` > 0 adds the per-shard key so
+    layers without a sparse MLP (MoE blocks) stack against sharded layers'
+    stats under scan without a pytree-structure mismatch."""
+    out = {k: jnp.zeros(shape, jnp.float32) for k in MLP_STAT_KEYS}
+    if tp_shards:
+        out[SHARD_STAT_KEY] = jnp.zeros(shape + (tp_shards,), jnp.float32)
+    return out
 
 
 def _stats(shape: tuple = (), **kw) -> dict:
@@ -254,20 +295,11 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
                           R.shard(sel.valid, None, "model", None),
                           sel.count)
 
-    def take_rows_one(w_grouped, idx):
-        dnums = jax.lax.GatherDimensionNumbers(
-            offset_dims=(1, 2), collapsed_slice_dims=(0,),
-            start_index_map=(0,))
-        return jax.lax.gather(
-            w_grouped, idx[:, None], dnums,
-            slice_sizes=(1, g, d),
-            mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
-
     def take_rows(w_t):
         w_grouped = w_t.reshape(ms, (k // g) // ms, g, d)
         w_grouped = R.shard(w_grouped, "model", None, None, None)
         # vmap over shards (operand+indices aligned) then over groups
-        out = jax.vmap(jax.vmap(take_rows_one, in_axes=(0, 0)),
+        out = jax.vmap(jax.vmap(S.take_row_groups, in_axes=(0, 0)),
                        in_axes=(None, 0))(w_grouped, sel.indices)
         # constrain BEFORE merging (Cl, g): the gather output must stay
         # ms-sharded or the reshape constraint forces an all-gather
@@ -296,22 +328,31 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if squeeze:
         y = y[0]
     if return_stats:
-        # Per-token stats (contract: token dims of the input).  Selection /
-        # capacity quantities only exist per batch-union group: they are
-        # summed over the ms shards and broadcast over the group's tokens.
-        # Counts are in row-group units (a group survives if ANY member
-        # does, so group-granularity predicted over-counts the per-neuron
-        # rate); per-token predicted comes from the pre-union margins at the
-        # same group granularity.
+        # Per-token stats (contract: token dims of the input).  Counts are
+        # in row-group units (a group survives if ANY member does, so
+        # group-granularity predicted over-counts the per-neuron rate).
+        # Realized density is TRUE PER SLOT (same contract as the pallas
+        # kernel's in-kernel counter): the token's own predicted groups that
+        # made it into the batch-union selection — NOT the batch-level
+        # selection fraction the pre-PR-4 path broadcast, which collapsed
+        # per-tier density feedback through this strategy.  Only the union
+        # demand remains a batch/union quantity (broadcast over tokens).
         grp_keep = jnp.any(m_tok.reshape(ngrp, b, k // g, g) <= 0, axis=-1)
+        sel_mask = jax.vmap(jax.vmap(
+            lambda idx, val: jnp.zeros(((k // g) // ms,), jnp.bool_)
+            .at[idx].max(val)))(sel.indices, sel.valid)    # (G, ms, k/g/ms)
+        sel_mask = sel_mask.reshape(ngrp, k // g)
+        pred_frac = jnp.mean(grp_keep, axis=-1)                       # (G,B)
+        real_frac = jnp.sum(grp_keep & sel_mask[:, None], axis=-1,
+                            dtype=jnp.float32) * g / k                # (G,B)
         sel_frac = sel.count.astype(jnp.float32).sum(-1) * g / k      # (G,)
         over_frac = sstats.overflow.astype(jnp.float32).sum(-1) * g / k
         stats = _stats(
             (ngrp, b),
-            predicted_density=jnp.mean(grp_keep, axis=-1),
-            realized_density=sel_frac[:, None],
+            predicted_density=pred_frac,
+            realized_density=real_frac,
             actual_density=jnp.sum(g1 > 0, axis=(-2, -1)) / k,
-            overflow_frac=over_frac[:, None],
+            overflow_frac=jnp.maximum(pred_frac - real_frac, 0.0),
             union_demand_frac=(sel_frac + over_frac)[:, None],
         )
         if not grouped_in:
@@ -402,6 +443,14 @@ def apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
             " — run relufication first (repro.core.relufication.relufy)")
     if alpha is None:
         alpha = cfg.alpha_schedule().alpha_for_layer(layer_idx, num_layers)
+    if cfg.tp_shards and strategy in ("masked", "gather", "pallas"):
+        # Tensor-parallel shard-local formulation (DESIGN.md §8): under an
+        # active mesh this runs shard_map over the 'model' axis; without one
+        # the identical math is emulated on a single device.  Local import:
+        # runtime imports core, not vice versa.
+        from repro.runtime import distributed as DD
+        return DD.sharded_apply(params, x, cfg, alpha, strategy=strategy,
+                                **kw)
     if strategy == "dense":
         return dense_mlp(params, x, cfg, **kw)
     if strategy == "masked":

@@ -122,6 +122,28 @@ def fused_sparse_mlp(x: jax.Array,
         interpret=interp)
 
 
+def choose_blocks(k: int, w: int, b: int, *, group_size: int = 8,
+                  n_shards: int = 1) -> int:
+    """Shard-local predictor grid sizing (DESIGN.md §8).
+
+    Under ``tp_shards`` tensor parallelism each shard's fused-predictor
+    kernel tiles its LOCAL ``k / n_shards`` rows, so tiling feasibility must
+    be judged at the local dims — a k that tiles fine unsharded can leave a
+    degenerate per-shard grid.  Returns the local ``block_k``; raises
+    ``ValueError`` (same contract as ``choose_block_k``) when the split is
+    invalid or the local grid is degenerate — the serve path calls this at
+    construction to warn that the sharded pallas predictor would fall back
+    to the jnp oracle.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if k % (n_shards * group_size):
+        raise ValueError(
+            f"k={k} not divisible by n_shards={n_shards} × "
+            f"group_size={group_size}")
+    return _predict.choose_block_k(k // n_shards, w, b, group_size)
+
+
 def count_pallas_dispatches(fn, *args, **kwargs) -> int:
     """Number of ``pallas_call`` dispatches one invocation of ``fn`` lowers
     to (recursing through nested jits/scans/conds).  Used by the dispatch-

@@ -59,7 +59,23 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--mesh", default="")
+    ap.add_argument("--mesh", default="",
+                    help="legacy GSPMD weights-TP mesh (sharding "
+                         "constraints only); for the shard_map sparse "
+                         "decode subsystem use --mesh-shape")
+    # tensor-parallel sparse decode (DESIGN.md §8): the server runs the
+    # whole sparse decode step under shard_map over the mesh's 'model'
+    # axis (shard-local selection, psum telemetry epilogue, sharded KV)
+    ap.add_argument("--mesh-shape", default="",
+                    help="serve mesh for the sharded sparse decode "
+                         "subsystem, e.g. 1x4 (data x model) or 4 "
+                         "(model-only); tokens and controller telemetry "
+                         "are bitwise-identical to the single-device path")
+    ap.add_argument("--controller-ckpt", default="",
+                    help="directory for controller-state checkpoints: the "
+                         "server restores the latest snapshot at startup "
+                         "(alpha/EMA state survives restarts) and writes "
+                         "one after each serve drain (DESIGN.md §8)")
     ap.add_argument("--strategy", default=None,
                     choices=[None, "dense", "masked", "gather", "pallas"])
     ap.add_argument("--alpha", type=float, default=None)
@@ -112,6 +128,14 @@ def main() -> None:
         cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, capacity_buckets=buckets))
     mesh = parse_mesh(args.mesh)
+    serve_mesh = None
+    if args.mesh_shape:
+        if args.mesh:
+            raise SystemExit("--mesh and --mesh-shape are exclusive: the "
+                             "shard_map subsystem owns the mesh it runs on")
+        dims = tuple(int(v) for v in args.mesh_shape.split("x"))
+        axes = ("model",) if len(dims) == 1 else ("data", "model")
+        serve_mesh = make_mesh(dims, axes)
     mod = model_module(cfg)
 
     def run():
@@ -136,8 +160,10 @@ def main() -> None:
                                            max_new_tokens=args.max_new,
                                            slot_refill=args.slot_refill,
                                            controller=ccfg,
-                                           warm_buckets=args.warm_buckets),
-                     params, extra_inputs=extra)
+                                           warm_buckets=args.warm_buckets,
+                                           controller_ckpt=args
+                                           .controller_ckpt),
+                     params, extra_inputs=extra, mesh=serve_mesh)
         slas = parse_sla_mix(args.sla_mix, args.requests)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, cfg.vocab,

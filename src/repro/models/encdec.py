@@ -177,7 +177,10 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     per-slot; alphas None | (L,) | (L, B) per-layer-per-slot (the scan
     slices leading rows, so each decoder FFN sees its layer's scalar or
     per-token alpha); stats (L, B) per-token ``MLP_STAT_KEYS`` (native
-    in-kernel telemetry on the pallas strategy — DESIGN.md §4/§5)."""
+    in-kernel telemetry on the pallas strategy — DESIGN.md §4/§5).  Under
+    ``cfg.sparse.tp_shards`` the decoder FFNs run the shard-local TP path
+    (shard_map on an active mesh) and stats carry the (L, B, ms) per-shard
+    rider — DESIGN.md §8."""
     x = LM._embed_in(params, cfg, token)
     if alphas is None:
         alphas = jnp.asarray(LM._alphas(cfg))

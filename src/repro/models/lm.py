@@ -219,7 +219,9 @@ def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
     if "moe" in blk:
         h, _ = moe_apply(blk["moe"], h, moe_cfg(cfg))
         if collect_stats:
-            stats = SM.zero_mlp_stats((x.shape[0],))
+            # tp_shards keeps the pytree structure aligned with sharded
+            # sparse layers' stats (they carry the per-shard rider key)
+            stats = SM.zero_mlp_stats((x.shape[0],), cfg.sparse.tp_shards)
     elif collect_stats:
         h, stats = mlp_apply(blk["mlp"], h, _mlp_sparse_cfg(cfg), decode=True,
                              alpha=alpha, return_stats=True)
@@ -694,6 +696,14 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     the telemetry is produced in-kernel per slot (realized density, actual
     gate activity, the false-negative proxy — DESIGN.md §4), so the serve
     controller needs no masked-path audit re-dispatch.
+
+    Tensor-parallel serving (DESIGN.md §8): with ``cfg.sparse.tp_shards``
+    set the sparse MLPs run the shard-local formulation — under an active
+    mesh with a matching 'model' axis the whole sparse decode step executes
+    under shard_map (weights row-sharded, per-shard union selection, one
+    psum telemetry epilogue), and the stats gain a per-shard rider under
+    ``SHARD_STAT_KEY`` shaped (L, B, tp_shards).  Results are bitwise
+    identical to the single-device emulation of the same config.
     """
     x = _embed_in(params, cfg, token)
     stats = None

@@ -189,7 +189,10 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 alphas=None, collect_stats: bool = False):
     """Contract as ``models.lm.decode_step``: alphas None | (L,) | (L, B);
     stats (L, B) per-token ``MLP_STAT_KEYS`` pytrees stacked under the scan
-    (native in-kernel telemetry on the pallas strategy, DESIGN.md §4)."""
+    (native in-kernel telemetry on the pallas strategy, DESIGN.md §4).
+    Under ``cfg.sparse.tp_shards`` the FFNs run the shard-local TP path
+    (shard_map on an active mesh) and stats carry the (L, B, ms) per-shard
+    rider — DESIGN.md §8."""
     p, n_groups = _layout(cfg)
     x = LM._embed_in(params, cfg, token)
     if alphas is None:

@@ -320,3 +320,191 @@ class AlphaController:
     @property
     def trajectory(self) -> list[dict]:
         return list(self._trajectory)
+
+    # -------------------------------------------------------- persistence --
+    # Controller state must survive server restarts (elastic events,
+    # deploys): checkpointed through checkpoint.manager.CheckpointManager —
+    # same atomic-rename crash safety as the training state (DESIGN.md §8).
+
+    def state_dict(self) -> tuple[dict, dict]:
+        """(array tree, scalar meta) for ``CheckpointManager.save``.
+
+        The meta carries the shape-defining config so ``load_state_dict``
+        can reject a checkpoint from a different controller topology with a
+        clear error instead of silently mixing tier rows."""
+        s = self.state
+        tree = {
+            "alphas": s.alphas,
+            "density_ema": s.density_ema,
+            "overflow_ema": s.overflow_ema,
+            "fn_ema": s.fn_ema,
+            "predicted_ema": s.predicted_ema,
+            "union_ema": (s.union_ema if s.union_ema is not None
+                          else s.density_ema + s.overflow_ema),
+        }
+        meta = {
+            "steps": int(s.steps),
+            "audits": int(s.audits),
+            "num_layers": int(self.num_layers),
+            "native_fn": bool(self.native_fn),
+            "tiers": [t.name for t in self.tiers] if self.tiers else [],
+        }
+        return tree, meta
+
+    def load_state_dict(self, tree: dict, meta: dict) -> None:
+        """Restore a ``state_dict`` snapshot (server restart resume)."""
+        tiers = [t.name for t in self.tiers] if self.tiers else []
+        if list(meta.get("tiers", [])) != tiers:
+            raise ValueError(
+                f"controller checkpoint tier mismatch: saved "
+                f"{meta.get('tiers')} vs configured {tiers}")
+        if int(meta.get("num_layers", self.num_layers)) != self.num_layers:
+            raise ValueError(
+                f"controller checkpoint layer-count mismatch: saved "
+                f"{meta.get('num_layers')} vs configured {self.num_layers}")
+        if bool(meta.get("native_fn", self.native_fn)) != self.native_fn:
+            # fn_ema scales differ between modes: the pallas in-union proxy
+            # folds every step, the masked audit only at the audit cadence —
+            # restoring across the boundary would leave a wrong-scale FN
+            # estimate steering the conservatism guardrail
+            raise ValueError(
+                f"controller checkpoint native_fn mismatch: saved "
+                f"{meta.get('native_fn')} vs configured {self.native_fn} "
+                "(serving strategy changed across the restart)")
+        s = self.state
+        for name in ("alphas", "density_ema", "overflow_ema", "fn_ema",
+                     "predicted_ema", "union_ema"):
+            arr = np.asarray(tree[name], np.float32)
+            if arr.shape != s.alphas.shape:
+                raise ValueError(
+                    f"controller checkpoint shape mismatch at {name}: "
+                    f"{arr.shape} vs {s.alphas.shape}")
+            setattr(s, name, arr)
+        s.steps = int(meta.get("steps", 0))
+        s.audits = int(meta.get("audits", 0))
+
+
+class DistributedController:
+    """Mesh-serving wrapper around :class:`AlphaController` (DESIGN.md §8).
+
+    The sharded decode path psums the per-token ``MLP_STAT_KEYS`` telemetry
+    into exactly the (L, B) shapes the inner controller already consumes —
+    this wrapper adds the part only a mesh run has: the per-shard realized
+    densities riding along under ``core.sparse_mlp.SHARD_STAT_KEY``
+    ((L, B, ms) per step).  It pops that key BEFORE the per-tier / batch
+    aggregation sees the dict (whose (L, B) shape checks would reject it),
+    keeps a per-(layer, shard) density EMA, and reports shard skew — the
+    signal that a hot neuron block is concentrating selection demand on one
+    shard so that shard's C/ms clamp binds while others idle (the cure is
+    the offline co-activation permutation, DESIGN.md §2).
+
+    Everything else — update law, tiers, audit cadence, capacity hints,
+    persistence — delegates to the wrapped controller, so the server drives
+    both through one interface.
+    """
+
+    def __init__(self, inner: AlphaController, n_shards: int):
+        self.inner = inner
+        self.n_shards = int(n_shards)
+        self.shard_density_ema = np.zeros(
+            (inner.num_layers, self.n_shards), np.float32)
+        self._shard_steps = 0
+
+    # delegated interface (the exact surface runtime.server drives)
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def consume_shard_stats(self, stats: dict,
+                            active: Optional[np.ndarray] = None,
+                            fold: bool = True) -> dict:
+        """Pop the per-shard telemetry from a decode step's stats dict,
+        fold it into the shard EMAs, and return the (L, B)-only remainder
+        for the inner controller's aggregation path.  ``fold=False`` only
+        strips the key (audit steps: the masked path's realized densities
+        live on a different scale than the serving strategy's — mixing them
+        into the skew EMAs would mirror the density-EMA poisoning the inner
+        controller's audit gating avoids)."""
+        from repro.core.sparse_mlp import SHARD_STAT_KEY
+        if SHARD_STAT_KEY not in stats:
+            return stats
+        stats = dict(stats)
+        per_shard = np.asarray(stats.pop(SHARD_STAT_KEY), np.float32)
+        if not fold:
+            return stats
+        if per_shard.ndim != 3 or per_shard.shape[-1] != self.n_shards:
+            raise ValueError(
+                f"per-shard telemetry shape {per_shard.shape} != "
+                f"(L, B, {self.n_shards})")
+        if active is not None:
+            sel = np.asarray(active, bool)
+            if not sel.any():
+                return stats
+            per_shard = per_shard[:, sel]
+        obs = per_shard.mean(axis=1)                          # (L, ms)
+        beta = np.float32(self.inner.cfg.ema)
+        if self._shard_steps == 0:
+            self.shard_density_ema = obs
+        else:
+            self.shard_density_ema = ((1 - beta) * self.shard_density_ema
+                                      + beta * obs)
+        self._shard_steps += 1
+        return stats
+
+    def shard_skew(self) -> dict:
+        """Per-layer shard imbalance of realized density: (max - min) /
+        mean over the ``model`` axis (0 = perfectly balanced)."""
+        e = self.shard_density_ema
+        spread = e.max(-1) - e.min(-1)
+        mean = np.maximum(e.mean(-1), 1e-9)
+        return {
+            "per_layer_skew": [round(float(v), 4) for v in spread / mean],
+            "max_skew": float((spread / mean).max()),
+            "mean_shard_density": [round(float(v), 4)
+                                   for v in e.mean(0)],
+        }
+
+    def report(self) -> dict:
+        rep = self.inner.report()
+        rep["n_shards"] = self.n_shards
+        rep["shard_skew"] = self.shard_skew()
+        return rep
+
+    def state_dict(self) -> tuple[dict, dict]:
+        tree, meta = self.inner.state_dict()
+        tree = dict(tree, shard_density_ema=self.shard_density_ema)
+        meta = dict(meta, n_shards=self.n_shards,
+                    shard_steps=self._shard_steps)
+        return tree, meta
+
+    def load_state_dict(self, tree: dict, meta: dict) -> None:
+        saved = int(meta.get("n_shards", self.n_shards))
+        if saved != self.n_shards:
+            raise ValueError(
+                f"controller checkpoint shard-count mismatch: saved "
+                f"{saved} vs configured {self.n_shards}")
+        tree = dict(tree)
+        shard_ema = tree.pop("shard_density_ema", None)
+        self.inner.load_state_dict(tree, meta)
+        if shard_ema is not None:
+            self.shard_density_ema = np.asarray(shard_ema, np.float32)
+        self._shard_steps = int(meta.get("shard_steps", 0))
+
+
+def save_controller(ctl, manager, step: Optional[int] = None) -> int:
+    """Checkpoint a controller (plain or distributed) through a
+    ``checkpoint.manager.CheckpointManager`` (atomic rename, GC)."""
+    tree, meta = ctl.state_dict()
+    step = int(meta["steps"]) if step is None else int(step)
+    manager.save(step, tree, extra=meta, blocking=True)
+    return step
+
+
+def restore_controller(ctl, manager, step: Optional[int] = None) -> bool:
+    """Restore the latest (or given) checkpoint into ``ctl``.  Returns
+    False when the directory has no checkpoint yet (fresh start)."""
+    if step is None and manager.latest_step() is None:
+        return False
+    tree_like, _ = ctl.state_dict()
+    tree, meta = manager.restore(tree_like, step=step)
+    ctl.load_state_dict(tree, meta)
+    return True

@@ -1,0 +1,338 @@
+"""Tensor-parallel sparse decode: shard_map execution of the SparseInfer
+MLP over the mesh's ``model`` axis (DESIGN.md §8).
+
+Semantics are defined by ``SparseInferConfig.tp_shards`` (ms): the FFN
+hidden dim ``k`` is split into ms contiguous row slices.  Each shard
+
+  * holds its slice of the sign-packed predictor weights and the three
+    neuron-major matrices — margins need NO communication (sign bits pack
+    along ``d``, the reduction axis, which stays whole);
+  * computes its (B, k/G/ms) group-margin slice, its own batch-union and
+    its own top-(C/ms) capacity selection (the shard-local selection the
+    GSPMD gather path already used — weight-row gathers never cross
+    shards);
+  * produces a partial down-projection and its telemetry in NEURON-COUNT
+    units.
+
+The epilogue is ONE psum of the (B, n_keys) count matrix (integer-valued
+float32 — exact under any reduction order) plus one all_gather that carries
+the output partials and the per-shard realized counts together; the output
+combine is the all_gather followed by a fixed-order sum over the shard
+axis rather than a psum, so the result is BITWISE identical to the
+single-device emulation of the same math (``emulated_apply``) — execution
+placement must not change results, which is the invariant
+tests/test_distributed.py pins across strategies and capacity buckets.
+
+Telemetry leaves normalized by the GLOBAL k land in the exact per-token
+shapes ``MLP_STAT_KEYS`` promises, so the controller consumes mesh runs
+unchanged; the extra per-shard realized densities ride along under
+``SHARD_STAT_KEY`` for the DistributedController's skew diagnosis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P_
+
+from repro.core import predictor as P
+from repro.core import selection as S
+from repro.core import sparse_mlp as SM
+from repro.sharding import rules as R
+from repro.sharding import sparse as SS
+
+# psum'd count columns, in order (all (B,) float32 neuron counts;
+# overflow_frac is derived as predicted - realized in the epilogue)
+COUNT_COLS = ("predicted", "realized", "actual", "false_neg", "union")
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-portable shard_map (same shim as sharding/pipeline.py)."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.5
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+# ------------------------------------------------------- shard-local math --
+
+def _take_groups(w_t, sel: S.Selection, g: int):
+    """Gather the selected row-groups of one local (k_l, d) matrix —
+    ``core.selection.take_row_groups``, the same gather the XLA gather
+    strategy uses."""
+    k_l, d = w_t.shape
+    out = S.take_row_groups(w_t.reshape(k_l // g, g, d), sel.indices)
+    return out.reshape(sel.indices.shape[0] * g, d)
+
+
+def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
+               strategy: str, cap_l: int, collect: bool,
+               interpret: Optional[bool]):
+    """One shard's partial MLP.
+
+    Returns ``(y_partial (B, d) float32, counts | None)`` where counts maps
+    ``COUNT_COLS`` to (B,) float32 NEURON counts over the shard's k/ms rows
+    (group-granularity rows for the union strategies, matching the
+    single-device telemetry contract of each strategy).
+    """
+    act = SM._act(cfg)
+    b, d = x.shape
+    k_l = params_l["wg_t"].shape[0]
+    g = cfg.group_size
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    gated = "wu_t" in params_l and params_l["wu_t"] is not None
+
+    if strategy == "pallas":
+        from repro.kernels import ops as kops
+        gm_tok, pred_cnt = kops.predict_group_margins(
+            sign_l, x, d, a, group_size=g, interpret=interpret)
+        gm = S.union_margin(gm_tok)
+        sel, sstats = S.capacity_select_with_stats(gm, cap_l)
+        out = kops.fused_sparse_mlp(
+            x, params_l["wg_t"], params_l.get("wu_t"), params_l["wd_t"],
+            sel.indices, sel.count, gm_tok if collect else None,
+            group_size=g, activation=cfg.activation,
+            fatrelu_threshold=cfg.fatrelu_threshold,
+            collect_stats=collect, interpret=interpret)
+        if not collect:
+            return out, None
+        y, tel = out
+        tel = tel.astype(jnp.float32)           # (B, 3): actual, fn, real
+        gf = jnp.float32(g)
+        counts = {
+            "predicted": pred_cnt.astype(jnp.float32) * gf,
+            "realized": tel[:, 2],
+            "actual": tel[:, 0],
+            "false_neg": tel[:, 1],
+            "union": jnp.broadcast_to(
+                sstats.predicted.astype(jnp.float32) * gf, (b,)),
+        }
+        return y, counts
+
+    m_tok = P.margins(sign_l, P.pack_signs(x), d, a)          # (B, k_l)
+
+    if strategy == "masked":
+        keep = m_tok <= 0
+        g1 = act(x @ params_l["wg_t"].T.astype(x.dtype))
+        h1 = g1 * keep.astype(x.dtype)
+        if gated:
+            h1 = h1 * (x @ params_l["wu_t"].T.astype(x.dtype))
+        y = (h1 @ params_l["wd_t"].astype(x.dtype)).astype(jnp.float32)
+        if not collect:
+            return y, None
+        active = g1 > 0
+        kept = jnp.sum(keep, axis=-1, dtype=jnp.float32)
+        counts = {
+            "predicted": kept,
+            "realized": kept,                   # no clamp on this path
+            "actual": jnp.sum(active, axis=-1, dtype=jnp.float32),
+            "false_neg": jnp.sum(active & (m_tok > 0), axis=-1,
+                                 dtype=jnp.float32),
+            "union": jnp.broadcast_to(jnp.sum(
+                jnp.any(keep, axis=0), dtype=jnp.float32), (b,)),
+        }
+        return y, counts
+
+    assert strategy == "gather", strategy
+    gm_tok = S.group_margins(m_tok, g)                        # (B, k_l/G)
+    gm = S.union_margin(gm_tok)
+    sel, sstats = S.capacity_select_with_stats(gm, cap_l)
+    wg = _take_groups(params_l["wg_t"], sel, g).astype(x.dtype)
+    wd = _take_groups(params_l["wd_t"], sel, g).astype(x.dtype)
+    vmask = jnp.repeat(sel.valid, g).astype(x.dtype)          # (cap_l*G,)
+    g1 = act(x @ wg.T) * vmask[None]
+    h1 = g1
+    if gated:
+        wu = _take_groups(params_l["wu_t"], sel, g).astype(x.dtype)
+        h1 = h1 * (x @ wu.T)
+    if cfg.use_actual_sparsity:
+        h1 = jnp.where(h1 != 0, h1, jnp.zeros_like(h1))
+    y = (h1 @ wd).astype(jnp.float32)
+    if not collect:
+        return y, None
+    grp_keep = gm_tok <= 0                                    # (B, k_l/G)
+    sel_mask = jnp.zeros((k_l // g,), jnp.bool_).at[sel.indices].max(
+        sel.valid)
+    gf = jnp.float32(g)
+    counts = {
+        "predicted": jnp.sum(grp_keep, axis=-1, dtype=jnp.float32) * gf,
+        "realized": jnp.sum(grp_keep & sel_mask[None], axis=-1,
+                            dtype=jnp.float32) * gf,
+        "actual": jnp.sum(g1 > 0, axis=-1, dtype=jnp.float32),
+        "false_neg": jnp.zeros((b,), jnp.float32),
+        "union": jnp.broadcast_to(
+            (sel.count + sstats.overflow).astype(jnp.float32) * gf, (b,)),
+    }
+    return y, counts
+
+
+# ----------------------------------------------------- combine + epilogue --
+
+def _pack_partial(y, counts):
+    """(B, d) partial + realized column -> (B, d+1) so ONE all_gather moves
+    both the output partials and the per-shard skew signal."""
+    return jnp.concatenate([y, counts["realized"][:, None]], axis=-1)
+
+
+def _combine_gathered(gathered, collect: bool, k_l: int):
+    """Fixed-order shard combine, shared verbatim by the shard_map body and
+    the emulation: sum over the leading (ms) axis — NOT a psum — so both
+    execution placements reduce in the same order (bitwise parity)."""
+    if not collect:
+        return gathered.sum(axis=0)
+    y = gathered[..., :-1].sum(axis=0)
+    shard_real = gathered[..., -1].T / jnp.float32(k_l)       # (B, ms)
+    return y, shard_real
+
+
+def _finalize_stats(totals: dict, shard_real, k: int) -> dict:
+    """Summed neuron counts -> the MLP_STAT_KEYS per-token contract."""
+    kf = jnp.float32(k)
+    p = totals["predicted"] / kf
+    r = totals["realized"] / kf
+    stats = SM._stats(
+        p.shape,
+        predicted_density=p,
+        realized_density=r,
+        actual_density=totals["actual"] / kf,
+        false_neg_rate=totals["false_neg"] / kf,
+        overflow_frac=jnp.maximum(p - r, 0.0),
+        union_demand_frac=totals["union"] / kf,
+    )
+    stats[SM.SHARD_STAT_KEY] = shard_real
+    return stats
+
+
+def _slice_params(params: dict, sign_wg, s: int, ms: int) -> tuple:
+    k = params["wg_t"].shape[0]
+    k_l = k // ms
+    sl = slice(s * k_l, (s + 1) * k_l)
+    local = {name: params[name][sl] for name in ("wg_t", "wd_t")}
+    if params.get("wu_t") is not None:
+        local["wu_t"] = params["wu_t"][sl]
+    return sign_wg[sl], local
+
+
+# ------------------------------------------------------------ public API --
+
+def emulated_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
+                   alpha, *, strategy: str, return_stats: bool = False,
+                   interpret: Optional[bool] = None):
+    """The tp_shards semantics on ONE device: a static loop over shard
+    slices through the same ``_local_mlp`` + the same combine the shard_map
+    path uses.  This is the parity reference — and the execution path when
+    no mesh is active (so a tp_shards config runs anywhere)."""
+    ms = cfg.tp_shards
+    k = params["wg_t"].shape[0]
+    cap_l = cfg.shard_capacity(k)
+    sign_wg = params.get("sign_wg")
+    if sign_wg is None:
+        sign_wg = P.pack_signs(params["wg_t"])
+    parts = []
+    counts = []
+    for s in range(ms):
+        sign_l, params_l = _slice_params(params, sign_wg, s, ms)
+        y_s, c_s = _local_mlp(sign_l, params_l, x, cfg, alpha, strategy,
+                              cap_l, return_stats, interpret)
+        parts.append(_pack_partial(y_s, c_s) if return_stats else y_s)
+        if return_stats:
+            counts.append(c_s)
+    gathered = jnp.stack(parts, axis=0)                       # (ms, B, d[+1])
+    if not return_stats:
+        return _combine_gathered(gathered, False, k // ms)
+    y, shard_real = _combine_gathered(gathered, True, k // ms)
+    cmat = jnp.stack(
+        [jnp.stack([c[col] for col in COUNT_COLS], axis=-1)
+         for c in counts], axis=0)                            # (ms, B, n)
+    totals_mat = cmat.sum(axis=0)                             # (B, n)
+    totals = {col: totals_mat[..., i] for i, col in enumerate(COUNT_COLS)}
+    return y, _finalize_stats(totals, shard_real, k)
+
+
+def shard_map_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
+                    alpha, *, mesh, strategy: str,
+                    return_stats: bool = False,
+                    interpret: Optional[bool] = None):
+    """The same math under shard_map over the mesh's 'model' axis: weights
+    and margins partitioned per shard, one psum for the count telemetry,
+    one all_gather for the output partials + per-shard realized counts."""
+    ms = cfg.tp_shards
+    k = params["wg_t"].shape[0]
+    cap_l = cfg.shard_capacity(k)
+    sign_wg = params.get("sign_wg")
+    if sign_wg is None:
+        sign_wg = P.pack_signs(params["wg_t"])
+    b = x.shape[0]
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    gated = params.get("wu_t") is not None
+    wu = params["wu_t"] if gated else params["wg_t"][:0]      # 0-row stub
+
+    row = SS.mlp_param_spec("wg_t", (k, 1))   # P('model', None) row sharding
+    in_specs = (row, row, row, row, P_(None, None), P_(None))
+    if return_stats:
+        out_specs = (P_(None, None), P_(None, None), P_(None, None))
+    else:
+        out_specs = P_(None, None)
+
+    def body(sign_l, wg_l, wu_l, wd_l, x_l, a_l):
+        params_l = {"wg_t": wg_l, "wd_t": wd_l}
+        if gated:
+            params_l["wu_t"] = wu_l
+        y_s, c_s = _local_mlp(sign_l, params_l, x_l, cfg, a_l, strategy,
+                              cap_l, return_stats, interpret)
+        if not return_stats:
+            gathered = jax.lax.all_gather(y_s, "model", axis=0)
+            return _combine_gathered(gathered, False, k // ms)
+        cmat = jnp.stack([c_s[col] for col in COUNT_COLS], axis=-1)
+        totals_mat = jax.lax.psum(cmat, "model")     # exact: integer counts
+        gathered = jax.lax.all_gather(_pack_partial(y_s, c_s), "model",
+                                      axis=0)
+        y, shard_real = _combine_gathered(gathered, True, k // ms)
+        return y, totals_mat, shard_real
+
+    fn = _shard_map(body, mesh, in_specs, out_specs)
+    with R.shard_local():   # the body works on per-shard values: no nested
+        out = fn(sign_wg, params["wg_t"], wu, params["wd_t"], x, a)
+    if not return_stats:
+        return out
+    y, totals_mat, shard_real = out
+    totals = {col: totals_mat[..., i] for i, col in enumerate(COUNT_COLS)}
+    return y, _finalize_stats(totals, shard_real, k)
+
+
+def sharded_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
+                  alpha, *, strategy: str, return_stats: bool = False,
+                  interpret: Optional[bool] = None):
+    """Dispatch for ``tp_shards > 0`` (called from ``core.sparse_mlp.apply``):
+    shard_map when the ambient mesh's 'model' axis matches the configured
+    shard count, bitwise-identical single-device emulation otherwise."""
+    squeeze = x.ndim == 1
+    xb = x[None] if squeeze else x
+    if xb.ndim != 2:
+        raise ValueError(
+            f"tp_shards decode expects (B, d) tokens, got {x.shape} — the "
+            "dp-grouped (G, B, d) gather layout composes with GSPMD data "
+            "sharding, not with the shard_map TP path (DESIGN.md §8)")
+    mesh = R.current_mesh()
+    ms_mesh = SS.mesh_shard_count(mesh)
+    if mesh is not None and ms_mesh > 1 and ms_mesh != cfg.tp_shards:
+        raise ValueError(
+            f"tp_shards={cfg.tp_shards} but the active mesh's 'model' axis "
+            f"has {ms_mesh} devices — the shard count is part of the decode "
+            "semantics and must match the mesh it runs on (DESIGN.md §8)")
+    if ms_mesh == cfg.tp_shards and mesh is not None:
+        out = shard_map_apply(params, xb, cfg, alpha, mesh=mesh,
+                              strategy=strategy, return_stats=return_stats,
+                              interpret=interpret)
+    else:
+        out = emulated_apply(params, xb, cfg, alpha, strategy=strategy,
+                             return_stats=return_stats, interpret=interpret)
+    if not squeeze:
+        return out
+    if return_stats:
+        y, stats = out
+        return y[0], {kk: v[0] for kk, v in stats.items()}
+    return out[0]

@@ -19,6 +19,7 @@ pick its own point on the paper's accuracy/sparsity curve.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import math
 import time
@@ -32,7 +33,9 @@ import numpy as np
 from repro.configs.base import (DEFAULT_SLA_TIERS, ControllerConfig,
                                 ModelConfig, SLATier)
 from repro.models.common import greedy_sample
-from repro.runtime.controller import AlphaController, aggregate_tier_stats
+from repro.runtime.controller import (AlphaController, DistributedController,
+                                      aggregate_tier_stats, restore_controller,
+                                      save_controller)
 
 # Alpha column for a dead (drained) slot: margin = N_neg - alpha*N_pos with a
 # huge negative alpha is positive for every neuron (N_neg + N_pos = d_valid
@@ -64,6 +67,13 @@ class ServeConfig:
     # decode call per bucket before the serve loop) so no request ever pays
     # a mid-stream compile when the controller first switches buckets.
     warm_buckets: bool = False
+    # Controller persistence (DESIGN.md §8): directory for the adaptive
+    # controller's state checkpoints (checkpoint.manager atomic-rename
+    # layout).  On construction the server restores the latest snapshot if
+    # one exists — alphas/EMAs survive restarts and elastic events; a
+    # snapshot is written after every serve() drain (and on demand via
+    # ``Server.save_controller``).  Empty = no persistence.
+    controller_ckpt: str = ""
 
 
 @dataclasses.dataclass
@@ -106,12 +116,55 @@ class Server:
     alphas (DESIGN.md §5)."""
 
     def __init__(self, model_mod, cfg: ModelConfig, scfg: ServeConfig,
-                 params: dict, extra_inputs: Optional[dict] = None):
+                 params: dict, extra_inputs: Optional[dict] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        """``mesh``: tensor-parallel serving mode (DESIGN.md §8).  The
+        sparse decode runs under shard_map over the mesh's 'model' axis
+        (``cfg.sparse.tp_shards`` is set to the axis size — shard-local
+        selection semantics, bitwise-identical to the single-device
+        emulation of the same config); params are placed row-sharded, KV
+        caches get their ``shard_kv_cache`` layout, and all jitted steps
+        trace inside the mesh context."""
         self.mod = model_mod
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding import sparse as SSP
+            ms = SSP.mesh_shard_count(mesh)
+            if ms <= 1:
+                raise ValueError(
+                    "mesh serving needs a 'model' axis with > 1 devices "
+                    f"(got mesh axes {mesh.axis_names}, shape "
+                    f"{mesh.devices.shape})")
+            if not cfg.sparse.enabled or cfg.sparse.strategy not in (
+                    "masked", "gather", "pallas"):
+                raise ValueError(
+                    "mesh serving shards the SparseInfer decode strategies; "
+                    f"got enabled={cfg.sparse.enabled} "
+                    f"strategy={cfg.sparse.strategy!r} (DESIGN.md §8)")
+            SSP.validate_shardable(cfg.sparse, cfg.d_ff, ms)
+            if cfg.sparse.strategy == "pallas":
+                from repro.core.predictor import packed_width
+                from repro.kernels import ops as kops
+                try:
+                    kops.choose_blocks(cfg.d_ff, packed_width(cfg.d_model),
+                                       scfg.batch,
+                                       group_size=cfg.sparse.group_size,
+                                       n_shards=ms)
+                except ValueError as e:
+                    warnings.warn(
+                        f"sharded pallas predictor grid is degenerate at "
+                        f"the local dims ({e}); each shard will run the "
+                        "jnp oracle fallback", stacklevel=2)
+            cfg = cfg.replace(sparse=dataclasses.replace(
+                cfg.sparse, tp_shards=ms))
         self.cfg = cfg
         self.scfg = scfg
         self.params = (model_mod.prepare_sparse(params)
                        if cfg.sparse.enabled else params)
+        if mesh is not None:
+            from repro.sharding import sparse as SSP
+            with mesh:
+                self.params = SSP.place_serve_params(self.params, mesh)
         self.extra = extra_inputs or {}
         self._tier_index = {t.name: i for i, t in enumerate(scfg.sla_tiers)}
         self._tier_offsets = np.asarray(
@@ -161,26 +214,32 @@ class Server:
                 raise ValueError("xlstm has no SparseInfer MLP decode path; "
                                  "controller unsupported")
             tiers = scfg.sla_tiers if scfg.controller.per_tier else None
-            if tiers and cfg.sparse.strategy == "gather":
-                # gather shares ONE row selection per batch AND reports the
-                # batch-level selection fraction as realized density, so
-                # per-tier density feedback degenerates (alphas saturate
-                # toward the clamps).  `masked` separates realized exactly;
-                # `pallas` separates it natively via in-kernel per-slot
-                # telemetry (DESIGN.md §4).
-                warnings.warn(
-                    "per_tier controller with the 'gather' union strategy: "
-                    "realized density is batch-shared, so per-tier density "
-                    "targets cannot converge — use strategy='masked' or "
-                    "'pallas' for per-tier density control (DESIGN.md §5)",
-                    stacklevel=2)
+            # NOTE: gather no longer blocks per-tier control — since PR 4 it
+            # reports TRUE per-slot realized density (the token's predicted
+            # groups that made the union selection), same contract as the
+            # pallas kernel's in-kernel counter (DESIGN.md §4/§5).
             # pallas emits the false-negative proxy natively every step:
             # no masked-path audit dispatches at all (DESIGN.md §4)
             self.controller = AlphaController(
                 scfg.controller, cfg.sparse.alpha_schedule(),
                 self._n_controlled_layers(), tiers=tiers,
                 native_fn=cfg.sparse.strategy == "pallas")
+            if cfg.sparse.tp_shards:
+                # sharded strategies (mesh or emulated) ride per-shard
+                # realized densities along the telemetry: wrap for skew
+                # diagnosis + the key strip before aggregation
+                self.controller = DistributedController(
+                    self.controller, cfg.sparse.tp_shards)
             self._build_controller_fns()
+        # ---- controller persistence (DESIGN.md §8) -----------------------
+        self._ckpt_mgr = None
+        if scfg.controller_ckpt and self.controller is not None:
+            from repro.checkpoint.manager import CheckpointManager
+            self._ckpt_mgr = CheckpointManager(scfg.controller_ckpt)
+            if restore_controller(self.controller, self._ckpt_mgr):
+                # restored union/density EMAs immediately steer the bucket
+                # ladder: the first _select_bucket call uses them
+                self._select_bucket()
 
     def _build_controller_fns(self) -> None:
         """(Re)build the stats-collecting decode jits against the CURRENT
@@ -212,6 +271,15 @@ class Server:
                 self._bucket_fns[capg] = make_ctrl(cfg_b, capg)
             self._active_cap = max(self._bucket_fns)  # start at the widest
         else:
+            if cfg.sparse.capacity_buckets:
+                # mirror of the controller-disabled warning in __init__:
+                # the ladder only exists for the capacity-selected union
+                # strategies — masked/dense decode must not silently drop it
+                warnings.warn(
+                    "SparseInferConfig.capacity_buckets set but strategy="
+                    f"{cfg.sparse.strategy!r} has no capacity selection — "
+                    "the ladder applies to gather/pallas only; decoding "
+                    "runs without buckets (DESIGN.md §2)", stacklevel=2)
             self._bucket_fns[0] = make_ctrl(cfg, 0)
             self._active_cap = 0
 
@@ -225,6 +293,19 @@ class Server:
             return greedy_sample(logits), caches, stats
 
         self.decode_audit_fn = jax.jit(_decode_audit)
+
+    def _mesh_ctx(self):
+        """Mesh context for every trace/execute in mesh mode (sharding
+        constraints and the shard_map dispatch both read the ambient mesh);
+        a no-op single-device."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def save_controller(self, step: Optional[int] = None) -> Optional[int]:
+        """Checkpoint the controller state (no-op without
+        ``ServeConfig.controller_ckpt``).  Returns the step written."""
+        if self._ckpt_mgr is None or self.controller is None:
+            return None
+        return save_controller(self.controller, self._ckpt_mgr, step)
 
     @property
     def decode_ctrl_fn(self):
@@ -249,7 +330,7 @@ class Server:
             self._active_cap = max(self._bucket_fns)
         return self._active_cap
 
-    def warm_buckets(self, tok, caches, lengths, alphas) -> None:
+    def _warm_bucket_ladder(self, tok, caches, lengths, alphas) -> None:
         """Trace+compile every capacity bucket's decode step up front with
         the serve loop's real shapes (results discarded — caches are pure
         values, nothing advances).  One-time cost so the controller's first
@@ -283,6 +364,14 @@ class Server:
         new_cfg = self.cfg.replace(sparse=sp)
         if new_cfg.sparse.capacity(k) == self.cfg.sparse.capacity(k):
             return False
+        if new_cfg.sparse.tp_shards:
+            # the hint-derived capacity must still split evenly across the
+            # TP shards (DESIGN.md §8); a non-shardable value would raise at
+            # the re-jit trace mid-serve — keep the current capacity instead
+            try:
+                new_cfg.sparse.shard_capacity(k)
+            except ValueError:
+                return False
         self.cfg = new_cfg
         self._build_controller_fns()
         return True
@@ -344,6 +433,10 @@ class Server:
         (``active`` None means every slot is live — generate())."""
         ctl = self.controller
         stats = {k: np.asarray(v) for k, v in stats.items()}
+        if isinstance(ctl, DistributedController):
+            # strip (and, off-audit, fold into the skew EMAs) the per-shard
+            # rider before the (L, B) aggregation paths see the dict
+            stats = ctl.consume_shard_stats(stats, active, fold=not audit)
         if ctl.tiers:
             agg, counts = aggregate_tier_stats(stats, tier_idx, ctl.n_tiers,
                                                active)
@@ -372,6 +465,10 @@ class Server:
         loop; also the reference path for scheduler parity tests).  All
         slots share the 'balanced' alpha; a tiered controller contributes
         its balanced-tier vector."""
+        with self._mesh_ctx():
+            return self._generate(prompts, max_new)
+
+    def _generate(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
         b, plen = prompts.shape
         extra = tuple(self.extra.values())
         logits, caches = self.prefill_fn(self.params, jnp.asarray(prompts),
@@ -401,7 +498,8 @@ class Server:
                 else:
                     alphas = self._pad_layers(ctl.alphas())
                 if self.scfg.warm_buckets and not self._warmed_buckets:
-                    self.warm_buckets(tok, caches, length, alphas)
+                    self._warm_bucket_ladder(tok, caches, length,
+                                            alphas)
                 tok, caches, stats = fn(self.params, tok, caches, length,
                                         jnp.asarray(alphas))
                 # stats come back (L, B); aggregate over the uniform batch
@@ -427,7 +525,10 @@ class Server:
                     f"request {r.uid}: prompt {len(r.prompt)} + max_new "
                     f"{r.max_new} exceeds max_len {self.scfg.max_len}")
         if self.scfg.slot_refill:
-            return self._serve_slot_refill(requests)
+            with self._mesh_ctx():
+                done = self._serve_slot_refill(requests)
+            self.save_controller()  # persistence point (DESIGN.md §8)
+            return done
         # chunk composition is deterministic, so padded-chunk overflow
         # (chunk-max prompt + chunk-max budget) is also checkable up front
         for c0 in range(0, len(requests), self.scfg.batch):
@@ -438,7 +539,10 @@ class Server:
                 raise ValueError(
                     f"chunk {c0 // self.scfg.batch}: padded prompt + chunk "
                     f"max_new = {need} exceeds max_len {self.scfg.max_len}")
-        return self._serve_chunked(requests)
+        with self._mesh_ctx():
+            done = self._serve_chunked(requests)
+        self.save_controller()
+        return done
 
     def _serve_chunked(self, requests: list[Request]) -> list[Request]:
         """Legacy scheduler: fixed chunks of scfg.batch run to completion
@@ -535,7 +639,7 @@ class Server:
             admit(i)
         if (ctl is not None and scfg.warm_buckets
                 and not self._warmed_buckets and active.any()):
-            self.warm_buckets(tok, caches, lengths,
+            self._warm_bucket_ladder(tok, caches, lengths,
                               self._slot_alpha_matrix(tier_idx, active))
         alpha_mat: Optional[np.ndarray] = None  # cached off-controller matrix
         while active.any():

@@ -13,6 +13,7 @@ Modes:
 """
 from __future__ import annotations
 
+import contextlib
 import re
 from typing import Optional, Sequence
 
@@ -20,8 +21,32 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+# True while tracing a shard_map body (runtime/distributed.py): every helper
+# here must then see NO mesh — the body works on per-shard values, and a
+# nested with_sharding_constraint (or the gather strategy's GSPMD
+# local-selection reshape) against the ambient mesh would re-partition data
+# that is already a shard.
+_SHARD_LOCAL = False
+
+
+@contextlib.contextmanager
+def shard_local():
+    """Make every mesh-sensitive helper behave as if no mesh were active.
+
+    Wrap the *invocation* of a shard_map-wrapped callable (tracing of the
+    body happens inside that call), not the body itself."""
+    global _SHARD_LOCAL
+    prev = _SHARD_LOCAL
+    _SHARD_LOCAL = True
+    try:
+        yield
+    finally:
+        _SHARD_LOCAL = prev
+
 
 def current_mesh() -> Optional[jax.sharding.Mesh]:
+    if _SHARD_LOCAL:
+        return None
     from jax._src import mesh as mesh_lib
     m = mesh_lib.thread_resources.env.physical_mesh
     return None if m is None or m.empty else m

@@ -1,0 +1,90 @@
+"""Sharding rules for the tensor-parallel sparse decode path (DESIGN.md §8).
+
+SparseInfer's predictor is embarrassingly shardable along the FFN hidden
+dimension: sign bits are packed along ``d`` (the reduction axis), so a shard
+owning rows ``[s*k/ms, (s+1)*k/ms)`` of the neuron-major weights computes its
+margin slice, its group margins, its batch-union and its top-(C/ms)
+selection with NO communication — only the down-projection partials and the
+telemetry counters cross the ``model`` axis (runtime/distributed.py).
+
+This module is the *placement* half of that design: partition specs and
+device_put helpers for the sparse-MLP params, margin slices and the serve
+path's full param tree, plus the divisibility validation the server runs
+before committing to a mesh.  The *execution* half (shard_map bodies,
+collective epilogues) lives in ``repro.runtime.distributed``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules as R
+
+# Neuron-major sparse-MLP leaves, all row-sharded over 'model' (the k axis
+# is dim 0 after the layer-stacking dims).
+SPARSE_MLP_KEYS = ("wg_t", "wu_t", "wd_t", "sign_wg")
+
+
+def mesh_shard_count(mesh: Optional[jax.sharding.Mesh] = None) -> int:
+    """Size of the tensor-parallel axis (1 without a mesh / 'model')."""
+    mesh = mesh or R.current_mesh()
+    if mesh is None or R.tp_axis(mesh) is None:
+        return 1
+    return R.axis_size(mesh, "model")
+
+
+def validate_shardable(sparse, k: int, ms: int) -> None:
+    """Fail fast before any tracing if the config cannot shard ``ms`` ways.
+
+    Checks the row-group tiling and EVERY capacity-ladder bucket: the server
+    jits one decode executable per bucket, and each needs the same static
+    per-shard grid on every device."""
+    if ms <= 1:
+        return
+    g = sparse.group_size
+    if k % (ms * g):
+        raise ValueError(
+            f"d_ff={k} not divisible by tp_shards={ms} × group_size={g} "
+            "(DESIGN.md §8)")
+    import dataclasses
+    for capg in sparse.capacity_ladder(k):
+        # shard_capacity raises with the offending bucket in the message
+        dataclasses.replace(sparse, tp_shards=ms,
+                            capacity_override=capg).shard_capacity(k)
+
+
+# --------------------------------------------------------- param specs ----
+
+def mlp_param_spec(name: str, shape: tuple) -> P:
+    """Row-shard a sparse-MLP leaf over 'model'; leading stack dims (scan
+    over layer groups) stay unsharded.  Replicated for non-MLP leaves.
+
+    This is the shard_map in_spec the distributed MLP partitions its
+    weights with (``runtime/distributed.py:shard_map_apply``); it matches
+    the ``rules._PARAM_RULES`` serve-mode placement (``('tp', 'fsdp')`` on
+    the same leaves), so the eager ``place_serve_params`` transfer makes
+    the shard_map dispatch a no-op resharding."""
+    if name not in SPARSE_MLP_KEYS or len(shape) < 2:
+        return P()
+    pad = len(shape) - 2
+    return P(*((None,) * pad), "model", None)
+
+
+def serve_param_shardings(params, mesh=None):
+    """NamedShardings for the whole serve-path param tree (TP over 'model',
+    replicated over data axes — ``rules`` mode='serve')."""
+    mesh = mesh or R.current_mesh()
+    specs = R.param_specs(params, mode="serve", mesh=mesh)
+    return R.named_shardings(specs, mesh)
+
+
+def place_serve_params(params, mesh=None):
+    """device_put the param tree onto the mesh with the serve specs — the
+    one eager transfer the Server's mesh mode performs at construction."""
+    mesh = mesh or R.current_mesh()
+    if mesh is None:
+        return params
+    return jax.tree.map(jax.device_put, params,
+                        serve_param_shardings(params, mesh))

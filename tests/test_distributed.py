@@ -1,0 +1,448 @@
+"""Tensor-parallel sparse decode tests (DESIGN.md §8).
+
+The invariant everything here pins: ``SparseInferConfig.tp_shards`` defines
+the decode SEMANTICS (shard-local union + top-C/ms selection, summed
+partials / telemetry counts); the mesh is an execution detail.  Running the
+same config under shard_map on the 4-device host platform (conftest forces
+``--xla_force_host_platform_device_count=4``) must be BITWISE identical to
+the single-device emulation — tokens, every ``MLP_STAT_KEYS`` leaf, and the
+per-shard rider — across strategies and capacity buckets.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ControllerConfig, ModelConfig
+from repro.core import predictor as P
+from repro.core import sparse_mlp as SM
+from repro.core.sparse_mlp import (MLP_STAT_KEYS, SHARD_STAT_KEY,
+                                   SparseInferConfig, init_gated_mlp,
+                                   prepare_sparse_params)
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.runtime import distributed as DD
+from repro.runtime.controller import (AlphaController, DistributedController,
+                                      restore_controller, save_controller)
+from repro.runtime.server import Request, Server, ServeConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+MS = 4
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < MS,
+    reason=f"needs {MS} host-platform devices (conftest XLA_FLAGS)")
+
+D, K = 64, 256
+STRATEGIES = ("masked", "gather", "pallas")
+
+
+def _mesh():
+    return make_mesh((1, MS), ("data", "model"))
+
+
+def _params(key=0, dtype=jnp.float32):
+    return prepare_sparse_params(
+        init_gated_mlp(jax.random.PRNGKey(key), D, K, dtype=dtype))
+
+
+def _cfg(strategy, **kw):
+    base = dict(enabled=True, activation="relu", group_size=8,
+                capacity_frac=0.5, tp_shards=MS)
+    base.update(kw)
+    return SparseInferConfig(strategy=strategy, **base)
+
+
+def _assert_tree_equal(a, b, msg=""):
+    assert set(a) == set(b), (set(a), set(b))
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{msg}:{k}")
+
+
+class TestShardCapacity:
+    def test_per_shard_capacity_divides(self):
+        sp = _cfg("gather", capacity_frac=0.5)     # cap 16 groups of 32
+        assert sp.shard_capacity(K) == sp.capacity(K) // MS
+
+    def test_indivisible_capacity_rejected(self):
+        sp = _cfg("gather", group_size=1, capacity_override=130)
+        with pytest.raises(ValueError, match="tp_shards"):
+            sp.shard_capacity(K)
+
+    def test_indivisible_k_rejected(self):
+        from repro.sharding import sparse as SS
+        with pytest.raises(ValueError, match="divisible"):
+            SS.validate_shardable(_cfg("gather"), K + 8, MS)
+
+    def test_every_ladder_bucket_validated(self):
+        from repro.sharding import sparse as SS
+        sp = _cfg("gather", group_size=1, capacity_buckets=(0.1, 0.5))
+        SS.validate_shardable(sp, 512, MS)         # 128/256: both divide
+
+    def test_ops_choose_blocks_shard_local(self):
+        from repro.kernels import ops as kops
+        bk = kops.choose_blocks(K, P.packed_width(D), 3, group_size=8,
+                                n_shards=MS)
+        assert bk <= K // MS and (K // MS) % bk == 0
+        with pytest.raises(ValueError, match="divisible"):
+            kops.choose_blocks(K, P.packed_width(D), 3, group_size=8,
+                               n_shards=3)
+
+
+@needs_mesh
+class TestShardedMlpParity:
+    """shard_map execution == single-device emulation, bitwise, for every
+    strategy, both alpha layouts, and multiple capacity buckets."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("frac", [0.25, 0.5, 1.0])
+    def test_bitwise_vs_emulated(self, strategy, frac):
+        params = _params()
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, D))
+        cfg = _cfg(strategy, capacity_frac=frac)
+        y_ref, st_ref = SM.apply(params, x, cfg, alpha=1.0,
+                                 return_stats=True)
+        with _mesh():
+            y_sh, st_sh = jax.jit(
+                lambda p, xx: SM.apply(p, xx, cfg, alpha=1.0,
+                                       return_stats=True))(params, x)
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_sh))
+        _assert_tree_equal(st_ref, st_sh, strategy)
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_bitwise_per_token_alphas(self, strategy):
+        params = _params(2)
+        x = jax.random.normal(jax.random.PRNGKey(3), (3, D))
+        cfg = _cfg(strategy)
+        alphas = jnp.asarray([0.6, 1.0, 1.4], jnp.float32)
+        y_ref, st_ref = SM.apply(params, x, cfg, alpha=alphas,
+                                 return_stats=True)
+        with _mesh():
+            y_sh, st_sh = jax.jit(
+                lambda p, xx, a: SM.apply(p, xx, cfg, alpha=a,
+                                          return_stats=True))(
+                params, x, alphas)
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_sh))
+        _assert_tree_equal(st_ref, st_sh, strategy)
+
+    def test_no_stats_path_bitwise(self):
+        params = _params()
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, D))
+        cfg = _cfg("gather")
+        y_ref = SM.apply(params, x, cfg, alpha=1.0)
+        with _mesh():
+            y_sh = jax.jit(lambda p, xx: SM.apply(p, xx, cfg,
+                                                  alpha=1.0))(params, x)
+        np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_sh))
+
+    def test_mesh_size_mismatch_rejected(self):
+        params = _params()
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, D))
+        cfg = _cfg("gather", tp_shards=2)          # mesh model axis is 4
+        with _mesh(), pytest.raises(ValueError, match="model"):
+            SM.apply(params, x, cfg, alpha=1.0)
+
+
+class TestShardedSemantics:
+    """Single-device emulation properties (no mesh needed)."""
+
+    @pytest.mark.parametrize("strategy", ["gather", "pallas"])
+    def test_matches_unsharded_when_capacity_slack(self, strategy):
+        """With per-row selection and no binding clamp the shard-local
+        union selection keeps exactly the predicted set — same rows as the
+        global selection, so sharding only reorders the down-proj sum."""
+        params = _params(6)
+        params["wg_t"] = params["wg_t"] - 0.1     # sparse regime
+        params = prepare_sparse_params(
+            {k: v for k, v in params.items() if k != "sign_wg"})
+        x = jax.random.normal(jax.random.PRNGKey(7), (3, D))
+        cfg = _cfg(strategy, group_size=1, capacity_frac=1.0)
+        cfg0 = dataclasses.replace(cfg, tp_shards=0)
+        y, st = SM.apply(params, x, cfg, alpha=1.0, return_stats=True)
+        y0, st0 = SM.apply(params, x, cfg0, alpha=1.0, return_stats=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   atol=1e-4, rtol=1e-4)
+        for k in ("predicted_density", "realized_density",
+                  "union_demand_frac"):
+            np.testing.assert_allclose(np.asarray(st[k]), np.asarray(st0[k]),
+                                       atol=1e-6, err_msg=k)
+
+    def test_sharded_masked_stats_match_unsharded(self):
+        """Masked telemetry is count-exact: sharding must not change any
+        stat (the counts are partitioned, then summed exactly)."""
+        params = _params(8)
+        x = jax.random.normal(jax.random.PRNGKey(9), (3, D))
+        y, st = SM.apply(params, x, _cfg("masked"), alpha=1.0,
+                         return_stats=True)
+        y0, st0 = SM.apply(params, x, _cfg("masked", tp_shards=0),
+                           alpha=1.0, return_stats=True)
+        for k in MLP_STAT_KEYS:
+            np.testing.assert_allclose(np.asarray(st[k]), np.asarray(st0[k]),
+                                       atol=1e-6, err_msg=k)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_shard_rider_shape_and_consistency(self):
+        """The per-shard realized densities must sum (×k_l/k) to the global
+        realized density."""
+        params = _params(10)
+        x = jax.random.normal(jax.random.PRNGKey(11), (5, D))
+        _, st = SM.apply(params, x, _cfg("gather"), alpha=1.0,
+                         return_stats=True)
+        rider = np.asarray(st[SHARD_STAT_KEY])
+        assert rider.shape == (5, MS)
+        np.testing.assert_allclose(rider.sum(-1) / MS,
+                                   np.asarray(st["realized_density"]),
+                                   atol=1e-6)
+
+    def test_dead_slot_contributes_nothing(self):
+        from repro.runtime.server import DEAD_SLOT_ALPHA
+        params = _params(12)
+        x = jax.random.normal(jax.random.PRNGKey(13), (2, D))
+        cfg = _cfg("gather")
+        alphas = jnp.asarray([1.0, DEAD_SLOT_ALPHA], jnp.float32)
+        _, st = SM.apply(params, x, cfg, alpha=alphas, return_stats=True)
+        assert np.asarray(st["predicted_density"])[1] == 0.0
+        assert np.asarray(st["realized_density"])[1] == 0.0
+        np.testing.assert_array_equal(np.asarray(st[SHARD_STAT_KEY])[1], 0.0)
+
+    def test_dense_fallback_emits_rider(self):
+        """The big-batch dense fallback bypasses the sharded dispatch but
+        must still emit the per-shard rider, or its stats would not stack
+        against MoE layers' zero-stats under scan (deepseek layout)."""
+        from repro.layers.mlp import mlp_apply
+        params = _params(16)
+        cfg = _cfg("gather")
+        x = jax.random.normal(jax.random.PRNGKey(17),
+                              (cfg.sparse_max_batch + 4, D))
+        _, st = mlp_apply(params, x, cfg, decode=True, alpha=1.0,
+                          return_stats=True)
+        assert st[SHARD_STAT_KEY].shape == (cfg.sparse_max_batch + 4, MS)
+        np.testing.assert_array_equal(np.asarray(st[SHARD_STAT_KEY]), 0.0)
+
+    def test_grouped_input_rejected(self):
+        params = _params(14)
+        x = jax.random.normal(jax.random.PRNGKey(15), (2, 3, D))
+        with pytest.raises(ValueError, match="tp_shards"):
+            DD.sharded_apply(params, x, _cfg("gather"), 1.0,
+                             strategy="gather")
+
+
+CFG_LM = ModelConfig(
+    name="tiny-tp", family="dense", n_layers=2, d_model=64, n_heads=2,
+    n_kv_heads=2, d_ff=K, vocab=128, max_seq=64, dtype="float32",
+    param_dtype="float32", attn_chunk=8, loss_chunk=64, remat=False,
+    activation="relu",
+    sparse=SparseInferConfig(enabled=True, strategy="gather",
+                             activation="relu", group_size=8,
+                             capacity_frac=0.5))
+
+
+@needs_mesh
+class TestShardedDecodeStep:
+    """The whole decode step — attention + sharded KV + sparse MLP — on the
+    mesh vs the single-device emulation of the same tp_shards config."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_decode_step_tokens_and_stats_bitwise(self, strategy):
+        """Greedy tokens and ALL telemetry leaves are bitwise-equal; raw
+        logits agree to float noise (the sequence-sharded KV cache
+        partitions the attention reduction, so GSPMD's combine order may
+        differ from the single-device sum — the sign-bit predictor and the
+        argmax are insensitive to it, which is what serving consumes)."""
+        from repro.models.common import greedy_sample
+        cfg = CFG_LM.replace(sparse=dataclasses.replace(
+            CFG_LM.sparse, strategy=strategy, tp_shards=MS))
+        params = lm.prepare_sparse(lm.init_lm(jax.random.PRNGKey(0), cfg))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                  cfg.vocab)
+
+        def step(params, cfg):
+            _, caches = lm.prefill(params, cfg, toks, max_len=32)
+            return lm.decode_step(params, cfg, toks[:, -1:], caches,
+                                  jnp.int32(8), collect_stats=True)
+
+        logits_ref, _, st_ref = step(params, cfg)
+        with _mesh():
+            params_sh = jax.tree.map(jnp.asarray, params)
+            logits_sh, caches_sh, st_sh = jax.jit(
+                lambda p: step(p, cfg))(params_sh)
+        np.testing.assert_array_equal(
+            np.asarray(greedy_sample(logits_ref)),
+            np.asarray(greedy_sample(logits_sh)))
+        np.testing.assert_allclose(np.asarray(logits_ref),
+                                   np.asarray(logits_sh),
+                                   rtol=2e-3, atol=2e-4)
+        assert np.asarray(st_sh[SHARD_STAT_KEY]).shape == (cfg.n_layers, 2,
+                                                           MS)
+        _assert_tree_equal(st_ref, st_sh, strategy)
+
+    def test_kv_cache_sharded_over_model(self):
+        """init_caches under the mesh places the decode KV caches with the
+        shard_kv_cache layout (sequence over 'model')."""
+        cfg = CFG_LM.replace(sparse=dataclasses.replace(
+            CFG_LM.sparse, tp_shards=MS))
+        with _mesh():
+            caches = lm.init_caches(cfg, batch=2, max_len=32)
+            spec = caches["blocks"]["k"].sharding.spec
+        assert "model" in tuple(spec), spec
+
+
+def _serve_cfg(strategy, buckets=()):
+    return CFG_LM.replace(sparse=dataclasses.replace(
+        CFG_LM.sparse, strategy=strategy, group_size=1,
+        capacity_buckets=buckets))
+
+
+def _reqs(n=3, max_new=5, vocab=128):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i, prompt=rng.integers(0, vocab, size=6),
+                    max_new=max_new) for i in range(n)]
+
+
+@needs_mesh
+class TestMeshServer:
+    """Server(mesh=...) end to end: bitwise tokens + controller telemetry
+    vs the single-device tp_shards path, one executable per bucket."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_serve_tokens_and_controller_bitwise(self, strategy):
+        cfg = _serve_cfg(strategy)
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        ccfg = ControllerConfig(enabled=True, target_density=0.25,
+                                audit_period=4)
+        scfg = ServeConfig(batch=2, max_len=64, controller=ccfg)
+        cfg_e = cfg.replace(sparse=dataclasses.replace(cfg.sparse,
+                                                       tp_shards=MS))
+        srv_e = Server(lm, cfg_e, scfg, params)
+        done_e = srv_e.serve(_reqs())
+        srv_m = Server(lm, cfg, scfg, params, mesh=_mesh())
+        done_m = srv_m.serve(_reqs())
+        for a, b in zip(done_e, done_m):
+            np.testing.assert_array_equal(a.out, b.out)
+        for name in ("alphas", "density_ema", "fn_ema", "union_ema",
+                     "predicted_ema"):
+            np.testing.assert_array_equal(
+                getattr(srv_e.controller.state, name),
+                getattr(srv_m.controller.state, name), err_msg=name)
+        np.testing.assert_array_equal(srv_e.controller.shard_density_ema,
+                                      srv_m.controller.shard_density_ema)
+
+    def test_bucket_ladder_no_retrace_on_mesh(self):
+        """One jitted executable per capacity bucket under the mesh: every
+        bucket traced exactly once (the warmup), none after — switching
+        buckets between decode steps never retraces (PR 3 invariant,
+        preserved by the shard_map subsystem)."""
+        cfg = _serve_cfg("pallas", buckets=(0.25, 0.5, 1.0))
+        cfg = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, alpha_base=0.3, alpha_early=0.3))
+        ccfg = ControllerConfig(enabled=True, gain=0.0, fn_gain=0.0)
+        srv = Server(lm, cfg,
+                     ServeConfig(batch=2, max_len=64, controller=ccfg,
+                                 warm_buckets=True),
+                     lm.init_lm(jax.random.PRNGKey(0), cfg), mesh=_mesh())
+        assert set(srv._bucket_fns) == {128, 256}   # MXU-aligned + deduped
+        done = srv.serve(_reqs())
+        assert all(len(r.out) == 5 for r in done)
+        # alpha 0.3 predicts almost nothing -> smallest bucket
+        assert srv._active_cap == 128, dict(srv._trace_counts)
+        assert all(c == 1 for c in srv._trace_counts.values()), \
+            dict(srv._trace_counts)
+
+    def test_mesh_requires_sparse_strategy(self):
+        cfg = CFG_LM.replace(sparse=dataclasses.replace(
+            CFG_LM.sparse, enabled=False))
+        with pytest.raises(ValueError, match="mesh serving"):
+            Server(lm, cfg, ServeConfig(batch=2, max_len=64),
+                   lm.init_lm(jax.random.PRNGKey(0), cfg), mesh=_mesh())
+
+    def test_skew_report(self):
+        cfg = _serve_cfg("gather")
+        ccfg = ControllerConfig(enabled=True, target_density=0.25)
+        srv = Server(lm, cfg, ServeConfig(batch=2, max_len=64,
+                                          controller=ccfg),
+                     lm.init_lm(jax.random.PRNGKey(0), cfg), mesh=_mesh())
+        srv.serve(_reqs())
+        rep = srv.controller.report()
+        assert rep["n_shards"] == MS
+        skew = rep["shard_skew"]
+        assert len(skew["per_layer_skew"]) == cfg.n_layers
+        assert skew["max_skew"] >= 0.0
+        assert len(skew["mean_shard_density"]) == MS
+
+
+class TestControllerPersistence:
+    """Satellite: controller state survives server restarts (ROADMAP item).
+    Works identically with and without a mesh — state is host numpy."""
+
+    def test_server_restart_resumes_state(self, tmp_path):
+        cfg = CFG_LM.replace(sparse=dataclasses.replace(
+            CFG_LM.sparse, strategy="masked", group_size=1))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        ccfg = ControllerConfig(enabled=True, target_density=0.2,
+                                audit_period=3)
+        scfg = ServeConfig(batch=2, max_len=64, controller=ccfg,
+                           controller_ckpt=str(tmp_path))
+        srv1 = Server(lm, cfg, scfg, params)
+        srv1.serve(_reqs())
+        steps1 = srv1.controller.state.steps
+        assert steps1 > 0
+        srv2 = Server(lm, cfg, scfg, params)     # "restart"
+        assert srv2.controller.state.steps == steps1
+        np.testing.assert_array_equal(srv2.controller.alphas(),
+                                      srv1.controller.alphas())
+        np.testing.assert_array_equal(srv2.controller.state.density_ema,
+                                      srv1.controller.state.density_ema)
+        np.testing.assert_array_equal(srv2.controller.state.fn_ema,
+                                      srv1.controller.state.fn_ema)
+        # ...and serving continues from the restored state
+        srv2.serve(_reqs())
+        assert srv2.controller.state.steps > steps1
+
+    def test_distributed_controller_roundtrip(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.predictor import AlphaSchedule
+        cc = ControllerConfig(enabled=True, ema=1.0)
+        ctl = DistributedController(
+            AlphaController(cc, AlphaSchedule(), 3), MS)
+        stats = {k: np.full((3, 2), 0.4, np.float32) for k in MLP_STAT_KEYS}
+        stats[SHARD_STAT_KEY] = np.tile(
+            np.linspace(0.1, 0.4, MS, dtype=np.float32), (3, 2, 1))
+        rest = ctl.consume_shard_stats(stats)
+        assert SHARD_STAT_KEY not in rest
+        ctl.observe({k: v.mean(-1) for k, v in rest.items()})
+        mgr = CheckpointManager(str(tmp_path))
+        save_controller(ctl, mgr)
+        ctl2 = DistributedController(
+            AlphaController(cc, AlphaSchedule(), 3), MS)
+        assert restore_controller(ctl2, mgr)
+        np.testing.assert_array_equal(ctl2.shard_density_ema,
+                                      ctl.shard_density_ema)
+        np.testing.assert_array_equal(ctl2.alphas(), ctl.alphas())
+        assert ctl2.state.steps == ctl.state.steps
+        # skew of the linspace profile is positive and ordered
+        assert ctl2.shard_skew()["max_skew"] > 0
+
+    def test_restore_empty_dir_is_fresh_start(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.predictor import AlphaSchedule
+        ctl = AlphaController(ControllerConfig(enabled=True),
+                              AlphaSchedule(), 2)
+        assert not restore_controller(ctl, CheckpointManager(str(tmp_path)))
+
+    def test_topology_mismatch_rejected(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.predictor import AlphaSchedule
+        cc = ControllerConfig(enabled=True)
+        ctl = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
+                                    MS)
+        mgr = CheckpointManager(str(tmp_path))
+        save_controller(ctl, mgr)
+        ctl2 = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
+                                     2)
+        with pytest.raises(ValueError):
+            restore_controller(ctl2, mgr)
