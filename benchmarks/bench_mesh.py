@@ -1,0 +1,43 @@
+"""2D-mesh bench artifact: run the (data × model) controller study with
+per-shard capacity buckets and write BENCH_mesh2d.json for the nightly CI
+artifact (DESIGN.md §8).
+
+    PYTHONPATH=src python -m benchmarks.bench_mesh --out BENCH_mesh2d.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_mesh2d.json")
+    ap.add_argument("--grid", default="2x4",
+                    help="data x model study grid (emulated when the host "
+                         "platform has fewer devices)")
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    ds, ms = (int(v) for v in args.grid.split("x"))
+    # the flag must land before jax initializes (first paper_tables import)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={ds * ms}"
+        ).strip()
+
+    from benchmarks import paper_tables as T
+
+    rows, payload = T.mesh2d_controller_study(
+        max_new=args.max_new, shape=(ds, ms), return_json=True)
+    for row in rows:
+        print(row)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -373,6 +373,106 @@ def mesh_controller_study(max_new: int = 16, n_shards: int = 4) -> list[str]:
     return rows
 
 
+def mesh2d_controller_study(max_new: int = 12, shape: tuple = (2, 4),
+                            return_json: bool = False):
+    """2D (data × model) mesh controller study with PER-SHARD adaptive
+    capacity buckets (DESIGN.md §8).
+
+    Serves a queue on a ``shape`` = (data, model) mesh (falls back to the
+    bitwise-identical emulation of the same (ds, ms) semantics when the
+    host platform has too few devices) with a two-rung capacity ladder and
+    ``per_shard_buckets`` on, then emits:
+
+    * per-shard BUCKET OCCUPANCY rows — each model shard's active local
+      bucket, its union-demand EMA, and demand/bucket occupancy (the gauge
+      that says whether a skewed shard actually widened itself);
+    * per-shard density-skew rows (max−min)/mean over the model axis;
+    * the executable-ladder accounting (tuples jitted vs the
+      ``bucket_tuple_cap`` bound).
+
+    ``return_json=True`` additionally returns a dict for the nightly
+    BENCH_mesh2d.json artifact (benchmarks/bench_mesh.py).
+    """
+    from repro.configs.base import ControllerConfig
+    from repro.configs.registry import reduced_config
+    from repro.launch.mesh import make_mesh
+    from repro.launch.specs import model_module
+    from repro.runtime.server import Request, Server, ServeConfig
+
+    ds, ms = shape
+    cfg = reduced_config("prosparse-llama2-7b").replace(
+        d_model=128, d_ff=512, n_layers=4, dtype="float32",
+        param_dtype="float32")
+    cfg = cfg.replace(sparse=dataclasses.replace(
+        cfg.sparse, strategy="gather", capacity_frac=0.5, group_size=8,
+        capacity_buckets=(0.25, 1.0), tp_shards=ms, dp_shards=ds))
+    mod = model_module(cfg)
+    params = relufy_gate_bias(mod.init_lm(jax.random.PRNGKey(0), cfg), 0.05)
+    ccfg = ControllerConfig(enabled=True, target_density=0.2, gain=0.5,
+                            ema=0.3, audit_period=6, fn_budget=1.0,
+                            per_shard_buckets=True, bucket_tuple_cap=16)
+    scfg = ServeConfig(batch=2 * ds, max_len=96, controller=ccfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=max_new) for i in range(2 * ds + 2)]
+
+    on_mesh = jax.device_count() >= ds * ms
+    if on_mesh:
+        srv = Server(mod, cfg, scfg, params,
+                     mesh=make_mesh(shape, ("data", "model")))
+    else:
+        srv = Server(mod, cfg, scfg, params)
+    t0 = time.perf_counter()
+    done = srv.serve(list(reqs))
+    dt = time.perf_counter() - t0
+    rep = srv.controller.report()
+    skew = rep["shard_skew"]
+    active = srv._active_cap          # per-shard local-bucket tuple
+    union = skew["mean_shard_union_demand"]
+    g = cfg.sparse.group_size
+    k_local = cfg.d_ff // ms
+    mode = "shard_map" if on_mesh else "emulated"
+    rows = [
+        f"mesh2d.controller,mode={mode},grid={ds}x{ms}_devices="
+        f"{jax.device_count()}",
+        f"mesh2d.controller.tok_per_s,"
+        f"{sum(len(r.out) for r in done) / dt:.1f},"
+        f"density={rep['mean_realized_density']:.3f}_target=0.2",
+        f"mesh2d.ladder,tuples={len(srv._bucket_fns)},"
+        f"cap={ccfg.bucket_tuple_cap}_per_shard="
+        f"{srv._per_shard_buckets}",
+    ]
+    occupancy = []
+    for s, capg in enumerate(active):
+        demand_groups = union[s] * k_local / g
+        occ = demand_groups / max(capg, 1)
+        occupancy.append(round(occ, 4))
+        rows.append(
+            f"mesh2d.shard{s}.bucket,{capg}g_of_{k_local // g},"
+            f"union={union[s]:.3f}_occupancy={occ:.3f}")
+    rows += [
+        "mesh2d.per_shard_density,"
+        + "|".join(f"{v:.3f}" for v in skew["mean_shard_density"]) + ",",
+        "mesh2d.per_layer_skew,"
+        + "|".join(f"{v:.3f}" for v in skew["per_layer_skew"])
+        + f",max={skew['max_skew']:.3f}",
+    ]
+    if not return_json:
+        return rows
+    payload = {
+        "mode": mode, "grid": [ds, ms], "devices": jax.device_count(),
+        "tok_per_s": sum(len(r.out) for r in done) / dt,
+        "mean_realized_density": rep["mean_realized_density"],
+        "active_bucket_tuple": list(active),
+        "bucket_occupancy": occupancy,
+        "executables": len(srv._bucket_fns),
+        "per_shard_buckets": srv._per_shard_buckets,
+        "shard_skew": skew,
+        "trace_counts": {str(k): v for k, v in srv._trace_counts.items()},
+    }
+    return rows, payload
+
+
 # -------------------- slot-refill scheduler + SLA tiers (DESIGN.md §5) -----
 
 def slot_refill_study(n_requests: int = 8, batch: int = 2) -> list[str]:

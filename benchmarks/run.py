@@ -16,12 +16,13 @@ def main() -> None:
                     help="fewer iterations / layers")
     args = ap.parse_args()
 
-    # the mesh controller study (DESIGN.md §8) needs a multi-device host
-    # platform; the flag must land before jax initializes (first T import)
+    # the mesh controller studies (DESIGN.md §8) need a multi-device host
+    # platform (8 covers the 2x4 data x model grid); the flag must land
+    # before jax initializes (first T import)
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
-            flags + " --xla_force_host_platform_device_count=4").strip()
+            flags + " --xla_force_host_platform_device_count=8").strip()
 
     from benchmarks import paper_tables as T
 
@@ -45,6 +46,9 @@ def main() -> None:
         ("Mesh controller study + per-shard skew (DESIGN.md 8)",
          T.mesh_controller_study,
          {"max_new": 8 if args.quick else 16}),
+        ("2D data x model mesh + per-shard capacity buckets (DESIGN.md 8)",
+         T.mesh2d_controller_study,
+         {"max_new": 6 if args.quick else 12}),
     ]
     failures = 0
     for title, fn, kw in sections:

@@ -70,6 +70,22 @@ class ControllerConfig:
                                    # ServeConfig.sla_tiers entry: state is
                                    # (T, L), telemetry aggregates per tier
                                    # (slot-refill scheduler, DESIGN.md §5)
+    # --- per-shard adaptive capacity buckets (DESIGN.md §8) ---------------
+    per_shard_buckets: bool = True  # under a sharded serve with a capacity
+                                    # ladder, let each model shard pick its
+                                    # OWN ladder bucket from the controller's
+                                    # per-shard union-demand EMAs (a skewed
+                                    # shard widens only its local bucket);
+                                    # False = one global bucket, every shard
+                                    # at C/ms (the pre-2D behavior)
+    bucket_tuple_cap: int = 16      # bound on the per-shard bucket-tuple
+                                    # ladder: len(ladder)**tp_shards distinct
+                                    # pre-jittable executables; above the cap
+                                    # the server falls back to uniform
+                                    # tuples (with a warning) so the
+                                    # executable count stays len(ladder)
+    shard_slack: float = 1.3        # per-shard bucket hint headroom over the
+                                    # observed shard-local union demand
 
 
 @dataclasses.dataclass(frozen=True)

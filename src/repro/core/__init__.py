@@ -29,7 +29,9 @@ from repro.core.selection import (
 )
 from repro.core.sparse_mlp import (
     MLP_STAT_KEYS,
+    SHARD_RIDER_KEYS,
     SHARD_STAT_KEY,
+    SHARD_UNION_KEY,
     SparseInferConfig,
     apply,
     dense_mlp,

@@ -71,6 +71,35 @@ def capacity_select_with_stats(
     return sel, SelectionStats(predicted, sel.count, overflow, occupancy)
 
 
+def clamp_selection(sel: Selection, stats: "SelectionStats",
+                    capacity) -> tuple[Selection, "SelectionStats"]:
+    """Clamp a Selection (and its stats) to a smaller EFFECTIVE capacity.
+
+    ``capacity`` may be a python int or a traced scalar (the per-shard
+    bucket tuples bake it as a constant indexed by the shard's mesh
+    position — one SPMD executable, per-shard semantics, DESIGN.md §8).
+
+    ``capacity_select`` orders survivors margin-ascending with the valid
+    entries as a contiguous prefix, so keeping only the first ``capacity``
+    entries is BITWISE-equal (indices, valid mask, count, and every derived
+    telemetry count) to having selected with that capacity directly — the
+    property the mesh parity suite pins.  The static shape stays at the
+    wide ``len(sel.indices)``; clamped-off entries are re-pointed at group
+    0 with their contribution masked, exactly like capacity padding.
+    """
+    cap_max = sel.indices.shape[0]
+    cap = jnp.asarray(capacity, jnp.int32)
+    keep = jnp.arange(cap_max, dtype=jnp.int32) < cap
+    valid = sel.valid & keep
+    count = jnp.minimum(sel.count, cap)
+    idx = jnp.where(valid, sel.indices, 0)
+    overflow = stats.predicted - count
+    occupancy = count.astype(jnp.float32) / jnp.maximum(
+        cap.astype(jnp.float32), 1.0)
+    return (Selection(idx.astype(jnp.int32), valid, count),
+            SelectionStats(stats.predicted, count, overflow, occupancy))
+
+
 def group_margins(margin: jax.Array, group_size: int) -> jax.Array:
     """Aggregate per-neuron margins to row-group granularity ``G``.
 

@@ -62,6 +62,26 @@ class SparseInferConfig:
     # is emulated on one device — bitwise-identical either way, which is the
     # invariant the sharded parity tests pin.
     tp_shards: int = 0
+    # Data-parallel shard count over the batch-slot dim (DESIGN.md §8).
+    # 0 = unsharded (one batch union over the whole batch).  When > 0, the
+    # B batch slots split into dp_shards contiguous blocks of B/dp_shards;
+    # each block runs its OWN batch-union + capacity selection per model
+    # shard, so a data shard's selection never depends on another data
+    # shard's tokens (no cross-data communication beyond the output/
+    # telemetry reassembly).  Like tp_shards this defines semantics only:
+    # under a mesh whose 'data' axis divides it the blocks run shard_map-
+    # partitioned, otherwise the identical math is emulated — bitwise
+    # identical across placements.
+    dp_shards: int = 0
+    # Per-model-shard LOCAL selection capacities in groups (DESIGN.md §8):
+    # len == tp_shards; shard s's union selection is clamped to
+    # shard_bucket_caps[s] groups of its k/tp_shards rows.  The compiled
+    # selection width is max(shard_bucket_caps) (one SPMD executable per
+    # bucket TUPLE); narrower shards mask their tail via a count clamp that
+    # is bitwise-equal to selecting at the narrow width directly
+    # (core.selection.clamp_selection).  Empty = uniform shard_capacity.
+    # Set by the server's per-shard bucket ladder; not a user knob.
+    shard_bucket_caps: tuple = ()
 
     def alpha_schedule(self) -> P.AlphaSchedule:
         return P.AlphaSchedule(self.alpha_base, self.alpha_early,
@@ -98,9 +118,25 @@ class SparseInferConfig:
 
         The global bucket capacity must split evenly so every shard's
         compiled grid has the same static shape (one executable per bucket,
-        DESIGN.md §8)."""
-        cap = self.capacity(k)
+        DESIGN.md §8).  With ``shard_bucket_caps`` (per-shard bucket tuple)
+        this returns the compiled selection WIDTH, max over the tuple —
+        per-shard effective capacities are applied as a count clamp by the
+        sharded execution paths."""
         ms = max(1, self.tp_shards)
+        if self.shard_bucket_caps:
+            caps = tuple(int(c) for c in self.shard_bucket_caps)
+            if len(caps) != ms:
+                raise ValueError(
+                    f"shard_bucket_caps has {len(caps)} entries but "
+                    f"tp_shards={ms} (DESIGN.md §8)")
+            n_local = (k // self.group_size) // ms
+            if any(c < 1 or c > n_local for c in caps):
+                raise ValueError(
+                    f"shard_bucket_caps {caps} out of range [1, {n_local}] "
+                    f"local groups for k={k}, tp_shards={ms}, "
+                    f"group_size={self.group_size}")
+            return max(caps)
+        cap = self.capacity(k)
         if cap % ms or (k // self.group_size) % ms:
             raise ValueError(
                 f"capacity {cap} groups / k={k} not divisible by "
@@ -162,21 +198,27 @@ MLP_STAT_KEYS = (
 )
 
 
-# Optional extra telemetry key emitted by the sharded (``tp_shards > 0``)
-# strategies: per-shard realized density, shaped token dims + (tp_shards,).
-# Not part of the MLP_STAT_KEYS contract — the serve path's
-# DistributedController pops it for skew diagnosis before the per-tier /
-# batch aggregation sees the dict (DESIGN.md §8).
+# Optional extra telemetry keys emitted by the sharded (``tp_shards > 0``)
+# strategies, shaped token dims + (tp_shards,).  Not part of the
+# MLP_STAT_KEYS contract — the serve path's DistributedController pops them
+# for skew diagnosis / per-shard bucket hints before the per-tier / batch
+# aggregation sees the dict (DESIGN.md §8).
 SHARD_STAT_KEY = "shard_realized_density"
+# per-shard union selection demand (selected + clamp-dropped groups of the
+# shard's OWN rows, as a fraction of its local k) — what the per-shard
+# bucket ladder must cover
+SHARD_UNION_KEY = "shard_union_frac"
+SHARD_RIDER_KEYS = (SHARD_STAT_KEY, SHARD_UNION_KEY)
 
 
 def zero_mlp_stats(shape: tuple = (), tp_shards: int = 0) -> dict:
-    """Zero telemetry pytree.  ``tp_shards`` > 0 adds the per-shard key so
+    """Zero telemetry pytree.  ``tp_shards`` > 0 adds the per-shard keys so
     layers without a sparse MLP (MoE blocks) stack against sharded layers'
     stats under scan without a pytree-structure mismatch."""
     out = {k: jnp.zeros(shape, jnp.float32) for k in MLP_STAT_KEYS}
     if tp_shards:
-        out[SHARD_STAT_KEY] = jnp.zeros(shape + (tp_shards,), jnp.float32)
+        for k in SHARD_RIDER_KEYS:
+            out[k] = jnp.zeros(shape + (tp_shards,), jnp.float32)
     return out
 
 
@@ -443,11 +485,12 @@ def apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
             " — run relufication first (repro.core.relufication.relufy)")
     if alpha is None:
         alpha = cfg.alpha_schedule().alpha_for_layer(layer_idx, num_layers)
-    if cfg.tp_shards and strategy in ("masked", "gather", "pallas"):
-        # Tensor-parallel shard-local formulation (DESIGN.md §8): under an
-        # active mesh this runs shard_map over the 'model' axis; without one
-        # the identical math is emulated on a single device.  Local import:
-        # runtime imports core, not vice versa.
+    if ((cfg.tp_shards or cfg.dp_shards)
+            and strategy in ("masked", "gather", "pallas")):
+        # Shard-local 2D (data × model) formulation (DESIGN.md §8): under an
+        # active mesh this runs shard_map over the ('data', 'model') axes;
+        # without one the identical math is emulated on a single device.
+        # Local import: runtime imports core, not vice versa.
         from repro.runtime import distributed as DD
         return DD.sharded_apply(params, x, cfg, alpha, strategy=strategy,
                                 **kw)

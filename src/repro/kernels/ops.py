@@ -8,7 +8,7 @@ from ``choose_block_k`` / ``choose_blocks``) fall back to the jnp oracle.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -107,33 +107,46 @@ def fused_sparse_mlp(x: jax.Array,
                      activation: str = "relu",
                      fatrelu_threshold: float = 0.0,
                      collect_stats: bool = False,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None,
+                     groups_per_step: int = 0):
     """Capacity-gathered fused sparse gated MLP: (B, d) -> (B, d) f32.
 
     With ``collect_stats`` (needs ``gm_tok`` per-token group margins) the
     kernel also accumulates per-token telemetry in-kernel and returns
     ``(y, telemetry)`` — see kernels.sparse_mlp_fused.TELEMETRY_COLS.
+    ``groups_per_step`` 0 = auto per-bucket tile height
+    (``mlp_groups_per_step``); results are bitwise-independent of it.
     """
     interp = _resolve_interpret(interpret)
     return _fused.fused_sparse_mlp(
         x, wg_t, wu_t, wd_t, sel_indices, sel_count, gm_tok,
         group_size=group_size, activation=activation,
         fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
-        interpret=interp)
+        interpret=interp, groups_per_step=groups_per_step)
+
+
+class BlockPlan(NamedTuple):
+    """Per-(shard, bucket) kernel tiling plan (DESIGN.md §2/§8)."""
+
+    block_k: int     # fused-predictor k-tile over the shard's LOCAL rows
+    mlp_groups: int  # fused-MLP selected-groups per grid step (tile height
+                     # gps·G×d — wide buckets get taller tiles)
 
 
 def choose_blocks(k: int, w: int, b: int, *, group_size: int = 8,
-                  n_shards: int = 1) -> int:
-    """Shard-local predictor grid sizing (DESIGN.md §8).
+                  n_shards: int = 1, capacity_groups: int = 0) -> BlockPlan:
+    """Shard-local, per-bucket kernel grid sizing (DESIGN.md §8).
 
     Under ``tp_shards`` tensor parallelism each shard's fused-predictor
     kernel tiles its LOCAL ``k / n_shards`` rows, so tiling feasibility must
     be judged at the local dims — a k that tiles fine unsharded can leave a
-    degenerate per-shard grid.  Returns the local ``block_k``; raises
+    degenerate per-shard grid.  ``capacity_groups`` is the bucket's LOCAL
+    selection width, from which the fused-MLP tile height is chosen (0 =
+    single-group tiles).  Returns a :class:`BlockPlan`; raises
     ``ValueError`` (same contract as ``choose_block_k``) when the split is
-    invalid or the local grid is degenerate — the serve path calls this at
-    construction to warn that the sharded pallas predictor would fall back
-    to the jnp oracle.
+    invalid or the local predictor grid is degenerate — the serve path
+    calls this per (bucket, shard) at construction to warn that the
+    sharded pallas predictor would fall back to the jnp oracle.
     """
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -141,7 +154,10 @@ def choose_blocks(k: int, w: int, b: int, *, group_size: int = 8,
         raise ValueError(
             f"k={k} not divisible by n_shards={n_shards} × "
             f"group_size={group_size}")
-    return _predict.choose_block_k(k // n_shards, w, b, group_size)
+    bk = _predict.choose_block_k(k // n_shards, w, b, group_size)
+    mlp = (_fused.mlp_groups_per_step(capacity_groups, group_size)
+           if capacity_groups else 1)
+    return BlockPlan(bk, mlp)
 
 
 def count_pallas_dispatches(fn, *args, **kwargs) -> int:

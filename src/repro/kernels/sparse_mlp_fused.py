@@ -58,24 +58,21 @@ def _telemetry_delta(ga, keep):
 
 
 def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool,
-                 collect_stats: bool):
+                 collect_stats: bool, groups_per_step: int = 1):
     act = get_activation(
         "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
         else activation, fatrelu_threshold)
+    per = (3 if gated else 2) + (1 if collect_stats else 0)
 
     def kernel(sel_ref, cnt_ref, *refs):
-        if gated:
-            x_ref, wg_ref, wu_ref, wd_ref = refs[:4]
-            rest = refs[4:]
-        else:
-            x_ref, wg_ref, wd_ref = refs[:3]
-            wu_ref = None
-            rest = refs[3:]
+        x_ref = refs[0]
+        tiles = refs[1:1 + groups_per_step * per]
+        rest = refs[1 + groups_per_step * per:]
         if collect_stats:
-            gm_ref, y_ref, tel_ref = rest
+            y_ref, tel_ref = rest
         else:
             (y_ref,) = rest
-            gm_ref = tel_ref = None
+            tel_ref = None
         i = pl.program_id(0)
 
         @pl.when(i == 0)
@@ -84,32 +81,57 @@ def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool,
             if collect_stats:
                 tel_ref[...] = jnp.zeros_like(tel_ref)
 
-        @pl.when(i < cnt_ref[0])
-        def _step():
-            x = x_ref[...]                                   # (B, d)
-            g = jax.lax.dot_general(
-                x, wg_ref[...], (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)          # (B, G)
-            ga = act(g)
-            if wu_ref is not None:
-                u = jax.lax.dot_general(
-                    x, wu_ref[...], (((1,), (1,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-                h = ga * u                                   # (B, G)
-            else:
-                h = ga
-            y_ref[...] += jax.lax.dot_general(
-                h.astype(x.dtype), wd_ref[...], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)          # (B, d)
-            if collect_stats:
-                tel_ref[...] += _telemetry_delta(ga, gm_ref[...] <= 0)
+        # sequential sub-steps over the tile's groups_per_step selected
+        # groups: the accumulation order is identical to the one-group-per-
+        # step grid, so per-bucket tiling never changes results (bitwise)
+        for j in range(groups_per_step):
+            base = j * per
+            wg_ref = tiles[base]
+            wu_ref = tiles[base + 1] if gated else None
+            wd_ref = tiles[base + (2 if gated else 1)]
+            gm_ref = tiles[base + per - 1] if collect_stats else None
+
+            @pl.when(i * groups_per_step + j < cnt_ref[0])
+            def _step(wg_ref=wg_ref, wu_ref=wu_ref, wd_ref=wd_ref,
+                      gm_ref=gm_ref):
+                x = x_ref[...]                               # (B, d)
+                g = jax.lax.dot_general(
+                    x, wg_ref[...], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)      # (B, G)
+                ga = act(g)
+                if wu_ref is not None:
+                    u = jax.lax.dot_general(
+                        x, wu_ref[...], (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    h = ga * u                               # (B, G)
+                else:
+                    h = ga
+                y_ref[...] += jax.lax.dot_general(
+                    h.astype(x.dtype), wd_ref[...], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)      # (B, d)
+                if collect_stats:
+                    tel_ref[...] += _telemetry_delta(ga, gm_ref[...] <= 0)
     return kernel
+
+
+def mlp_groups_per_step(cap_groups: int, group_size: int) -> int:
+    """Per-bucket weight-tile height for the fused MLP (DESIGN.md §2/§8):
+    how many SELECTED groups one grid step fetches and computes.  Wide
+    buckets amortize grid/DMA overhead over a (gps·G, d) effective tile;
+    narrow buckets keep the single-group tile (a big tile over a short
+    selection would mask most sub-steps).  Must divide the bucket's
+    capacity so the grid is exact."""
+    for gps in (4, 2, 1):
+        if (cap_groups % gps == 0 and cap_groups >= 4 * gps
+                and gps * group_size <= 64):
+            return gps
+    return 1
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("group_size", "activation", "fatrelu_threshold",
-                     "collect_stats", "interpret"))
+                     "collect_stats", "interpret", "groups_per_step"))
 def fused_sparse_mlp(x: jax.Array,
                      wg_t: jax.Array,
                      wu_t: jax.Array | None,
@@ -122,13 +144,20 @@ def fused_sparse_mlp(x: jax.Array,
                      activation: str = "relu",
                      fatrelu_threshold: float = 0.0,
                      collect_stats: bool = False,
-                     interpret: bool = True):
+                     interpret: bool = True,
+                     groups_per_step: int = 0):
     """x: (B, d); w*_t: (k, d) neuron-major; sel_indices: (C,) group ids.
 
     Returns y: (B, d) float32 (one fused HBM pass over selected groups).
     With ``collect_stats`` also requires ``gm_tok`` (B, k/G) per-token group
     margins and returns ``(y, telemetry)`` with telemetry (B, 3) int32
     (``TELEMETRY_COLS`` row counts accumulated in-kernel).
+
+    ``groups_per_step`` (0 = auto via :func:`mlp_groups_per_step`) is the
+    per-bucket weight-tile height: each grid step scalar-prefetches that
+    many selected groups of every matrix, so wide capacity buckets get a
+    taller effective tile.  Results are bitwise-independent of the choice
+    (the sub-steps accumulate in selection order).
     """
     b, d = x.shape
     k = wg_t.shape[0]
@@ -139,22 +168,34 @@ def fused_sparse_mlp(x: jax.Array,
     if collect_stats:
         assert gm_tok is not None and gm_tok.shape == (b, k // g), (
             "collect_stats needs per-token group margins (B, k/G)")
+    gps = groups_per_step or mlp_groups_per_step(cap, g)
+    if cap % gps:
+        raise ValueError(
+            f"groups_per_step={gps} must divide the selection capacity "
+            f"{cap} (per-bucket tiling, DESIGN.md §2)")
 
     cnt = jnp.reshape(sel_count.astype(jnp.int32), (1,))
-    w_spec = pl.BlockSpec((g, d), lambda i, sel, cnt: (sel[i], 0))
-    in_specs = [pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0)), w_spec]
-    operands = [x, wg_t]
-    if gated:
+    in_specs = [pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0))]
+    operands = [x]
+    for j in range(gps):
+        w_spec = pl.BlockSpec(
+            (g, d), lambda i, sel, cnt, j=j: (sel[i * gps + j], 0))
         in_specs.append(w_spec)
-        operands.append(wu_t)
-    in_specs.append(w_spec)
-    operands.append(wd_t)
+        operands.append(wg_t)
+        if gated:
+            in_specs.append(w_spec)
+            operands.append(wu_t)
+        in_specs.append(w_spec)
+        operands.append(wd_t)
+        if collect_stats:
+            # the sub-step's own-margin column rides the same prefetched
+            # index
+            in_specs.append(pl.BlockSpec(
+                (b, 1), lambda i, sel, cnt, j=j: (0, sel[i * gps + j])))
+            operands.append(gm_tok.astype(jnp.float32))
     out_specs = pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0))
     out_shape = jax.ShapeDtypeStruct((b, d), jnp.float32)
     if collect_stats:
-        # the step's own-margin column rides the same prefetched index
-        in_specs.append(pl.BlockSpec((b, 1), lambda i, sel, cnt: (0, sel[i])))
-        operands.append(gm_tok.astype(jnp.float32))
         out_specs = [out_specs,
                      pl.BlockSpec((b, len(TELEMETRY_COLS)),
                                   lambda i, sel, cnt: (0, 0))]
@@ -164,11 +205,12 @@ def fused_sparse_mlp(x: jax.Array,
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(cap,),
+        grid=(cap // gps,),
         in_specs=in_specs,
         out_specs=out_specs,
     )
-    kernel = _make_kernel(activation, fatrelu_threshold, gated, collect_stats)
+    kernel = _make_kernel(activation, fatrelu_threshold, gated,
+                          collect_stats, gps)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

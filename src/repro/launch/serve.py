@@ -68,9 +68,13 @@ def main() -> None:
     # axis (shard-local selection, psum telemetry epilogue, sharded KV)
     ap.add_argument("--mesh-shape", default="",
                     help="serve mesh for the sharded sparse decode "
-                         "subsystem, e.g. 1x4 (data x model) or 4 "
-                         "(model-only); tokens and controller telemetry "
-                         "are bitwise-identical to the single-device path")
+                         "subsystem, DxM (data x model), e.g. 2x4 (batch "
+                         "slots sharded 2-way over 'data', FFN hidden dim "
+                         "4-way over 'model'), 1x4, or 4 (model-only); "
+                         "tokens and controller telemetry are "
+                         "bitwise-identical to the single-device path for "
+                         "any placement of the same (data, model) "
+                         "semantics")
     ap.add_argument("--controller-ckpt", default="",
                     help="directory for controller-state checkpoints: the "
                          "server restores the latest snapshot at startup "

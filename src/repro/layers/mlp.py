@@ -39,19 +39,21 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
     def finish(out):
         if return_stats:
             y, stats = out
-            # contract keys, plus the sharded strategies' per-shard rider
+            # contract keys, plus the sharded strategies' per-shard riders
             # (token dims + (tp_shards,)) which the DistributedController
             # pops host-side before aggregation (DESIGN.md §8)
             keys = SM.MLP_STAT_KEYS + tuple(
-                k for k in (SM.SHARD_STAT_KEY,) if k in stats)
+                k for k in SM.SHARD_RIDER_KEYS if k in stats)
             stats = {k: jnp.asarray(stats[k], jnp.float32) for k in keys}
-            if cfg.tp_shards and SM.SHARD_STAT_KEY not in stats:
+            if cfg.tp_shards:
                 # paths that bypass the sharded dispatch (the big-batch
-                # dense fallback below) must still emit the rider so their
+                # dense fallback below) must still emit the riders so their
                 # stats stack against sharded layers' under scan
                 tok = stats["realized_density"].shape
-                stats[SM.SHARD_STAT_KEY] = jnp.zeros(
-                    tok + (cfg.tp_shards,), jnp.float32)
+                for rk in SM.SHARD_RIDER_KEYS:
+                    if rk not in stats:
+                        stats[rk] = jnp.zeros(
+                            tok + (cfg.tp_shards,), jnp.float32)
             return y.reshape(shape).astype(x.dtype), stats
         return out.reshape(shape).astype(x.dtype)
 
@@ -68,7 +70,8 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if n > cfg.sparse_max_batch * dp:
         out = SM.dense_mlp(params, xf, cfg, return_stats=return_stats)
     elif (cfg.strategy == "gather" and n > cfg.sparse_max_batch
-          and n % dp == 0 and dp > 1 and not cfg.tp_shards):
+          and n % dp == 0 and dp > 1
+          and not (cfg.tp_shards or cfg.dp_shards)):
         xg = xf.reshape(dp, n // dp, shape[-1])
         xg = R.shard(xg, R.data_axes(mesh), None, None)
         ag = 1.0 if alpha is None else alpha

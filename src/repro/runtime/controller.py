@@ -387,26 +387,39 @@ class AlphaController:
 class DistributedController:
     """Mesh-serving wrapper around :class:`AlphaController` (DESIGN.md §8).
 
-    The sharded decode path psums the per-token ``MLP_STAT_KEYS`` telemetry
-    into exactly the (L, B) shapes the inner controller already consumes —
-    this wrapper adds the part only a mesh run has: the per-shard realized
-    densities riding along under ``core.sparse_mlp.SHARD_STAT_KEY``
-    ((L, B, ms) per step).  It pops that key BEFORE the per-tier / batch
-    aggregation sees the dict (whose (L, B) shape checks would reject it),
-    keeps a per-(layer, shard) density EMA, and reports shard skew — the
-    signal that a hot neuron block is concentrating selection demand on one
-    shard so that shard's C/ms clamp binds while others idle (the cure is
-    the offline co-activation permutation, DESIGN.md §2).
+    The sharded decode path reduces the per-token ``MLP_STAT_KEYS``
+    telemetry into exactly the (L, B) shapes the inner controller already
+    consumes — this wrapper adds the parts only a sharded run has: the
+    per-shard realized densities and per-shard union selection demands
+    riding along under ``core.sparse_mlp.SHARD_RIDER_KEYS`` ((L, B, ms)
+    per step).  It pops those keys BEFORE the per-tier / batch aggregation
+    sees the dict (whose (L, B) shape checks would reject them), keeps
+    per-(layer, shard) EMAs of both, and feeds two consumers:
 
+    * ``shard_skew`` — the signal that a hot neuron block is concentrating
+      selection demand on one shard so that shard's clamp binds while
+      others idle (the cure is the offline co-activation permutation,
+      DESIGN.md §2);
+    * ``shard_capacity_hints`` — per-shard bucket recommendations for the
+      server's per-shard capacity-bucket ladder: each model shard's local
+      bucket is sized to ITS union-demand EMA, so a skewed shard widens
+      its own bucket instead of forcing a global C/ms everywhere.
+
+    The controller also records the semantic ``(data, model)`` topology it
+    served, so a checkpoint restored onto a different grid is rejected.
     Everything else — update law, tiers, audit cadence, capacity hints,
     persistence — delegates to the wrapped controller, so the server drives
     both through one interface.
     """
 
-    def __init__(self, inner: AlphaController, n_shards: int):
+    def __init__(self, inner: AlphaController, n_shards: int,
+                 n_data_shards: int = 1):
         self.inner = inner
         self.n_shards = int(n_shards)
+        self.n_data_shards = int(n_data_shards)
         self.shard_density_ema = np.zeros(
+            (inner.num_layers, self.n_shards), np.float32)
+        self.shard_union_ema = np.zeros(
             (inner.num_layers, self.n_shards), np.float32)
         self._shard_steps = 0
 
@@ -417,38 +430,60 @@ class DistributedController:
     def consume_shard_stats(self, stats: dict,
                             active: Optional[np.ndarray] = None,
                             fold: bool = True) -> dict:
-        """Pop the per-shard telemetry from a decode step's stats dict,
-        fold it into the shard EMAs, and return the (L, B)-only remainder
-        for the inner controller's aggregation path.  ``fold=False`` only
-        strips the key (audit steps: the masked path's realized densities
-        live on a different scale than the serving strategy's — mixing them
-        into the skew EMAs would mirror the density-EMA poisoning the inner
-        controller's audit gating avoids)."""
-        from repro.core.sparse_mlp import SHARD_STAT_KEY
+        """Pop the per-shard telemetry riders from a decode step's stats
+        dict, fold them into the shard EMAs, and return the (L, B)-only
+        remainder for the inner controller's aggregation path.
+        ``fold=False`` only strips the keys (audit steps: the masked path's
+        realized densities live on a different scale than the serving
+        strategy's — mixing them into the skew EMAs would mirror the
+        density-EMA poisoning the inner controller's audit gating
+        avoids)."""
+        from repro.core.sparse_mlp import (SHARD_RIDER_KEYS, SHARD_STAT_KEY,
+                                           SHARD_UNION_KEY)
         if SHARD_STAT_KEY not in stats:
             return stats
         stats = dict(stats)
-        per_shard = np.asarray(stats.pop(SHARD_STAT_KEY), np.float32)
+        riders = {k: np.asarray(stats.pop(k), np.float32)
+                  for k in SHARD_RIDER_KEYS if k in stats}
         if not fold:
             return stats
-        if per_shard.ndim != 3 or per_shard.shape[-1] != self.n_shards:
-            raise ValueError(
-                f"per-shard telemetry shape {per_shard.shape} != "
-                f"(L, B, {self.n_shards})")
+        for k, v in riders.items():
+            if v.ndim != 3 or v.shape[-1] != self.n_shards:
+                raise ValueError(
+                    f"per-shard telemetry {k} shape {v.shape} != "
+                    f"(L, B, {self.n_shards})")
         if active is not None:
             sel = np.asarray(active, bool)
             if not sel.any():
                 return stats
-            per_shard = per_shard[:, sel]
-        obs = per_shard.mean(axis=1)                          # (L, ms)
+            riders = {k: v[:, sel] for k, v in riders.items()}
         beta = np.float32(self.inner.cfg.ema)
-        if self._shard_steps == 0:
-            self.shard_density_ema = obs
-        else:
-            self.shard_density_ema = ((1 - beta) * self.shard_density_ema
-                                      + beta * obs)
+
+        def fold_ema(prev, v):
+            obs = v.mean(axis=1)                              # (L, ms)
+            if self._shard_steps == 0:
+                return obs
+            return (1 - beta) * prev + beta * obs
+
+        self.shard_density_ema = fold_ema(self.shard_density_ema,
+                                          riders[SHARD_STAT_KEY])
+        union = riders.get(SHARD_UNION_KEY)
+        if union is not None:
+            self.shard_union_ema = fold_ema(self.shard_union_ema, union)
         self._shard_steps += 1
         return stats
+
+    def shard_capacity_hints(self, k: int) -> np.ndarray:
+        """(ms,) per-shard recommended LOCAL capacities in NEURONS: each
+        shard's observed union selection demand (max over layers of its
+        union-demand EMA, a fraction of its local k rows) plus the
+        configured slack.  The server's per-shard bucket ladder rounds
+        these up to ladder buckets between decode steps
+        (``runtime.server.Server._select_bucket``)."""
+        k_local = k // self.n_shards
+        slack = float(getattr(self.inner.cfg, "shard_slack", 1.3))
+        demand = np.clip(self.shard_union_ema.max(axis=0) * slack, 0.0, 1.0)
+        return np.maximum(1, np.ceil(demand * k_local)).astype(np.int64)
 
     def shard_skew(self) -> dict:
         """Per-layer shard imbalance of realized density: (max - min) /
@@ -461,32 +496,43 @@ class DistributedController:
             "max_skew": float((spread / mean).max()),
             "mean_shard_density": [round(float(v), 4)
                                    for v in e.mean(0)],
+            "mean_shard_union_demand": [round(float(v), 4)
+                                        for v in self.shard_union_ema
+                                        .mean(0)],
         }
 
     def report(self) -> dict:
         rep = self.inner.report()
         rep["n_shards"] = self.n_shards
+        rep["n_data_shards"] = self.n_data_shards
         rep["shard_skew"] = self.shard_skew()
         return rep
 
     def state_dict(self) -> tuple[dict, dict]:
         tree, meta = self.inner.state_dict()
-        tree = dict(tree, shard_density_ema=self.shard_density_ema)
+        tree = dict(tree, shard_density_ema=self.shard_density_ema,
+                    shard_union_ema=self.shard_union_ema)
         meta = dict(meta, n_shards=self.n_shards,
+                    n_data_shards=self.n_data_shards,
                     shard_steps=self._shard_steps)
         return tree, meta
 
     def load_state_dict(self, tree: dict, meta: dict) -> None:
-        saved = int(meta.get("n_shards", self.n_shards))
-        if saved != self.n_shards:
+        saved = (int(meta.get("n_shards", self.n_shards)),
+                 int(meta.get("n_data_shards", self.n_data_shards)))
+        if saved != (self.n_shards, self.n_data_shards):
             raise ValueError(
-                f"controller checkpoint shard-count mismatch: saved "
-                f"{saved} vs configured {self.n_shards}")
+                "controller checkpoint (data, model) topology mismatch: "
+                f"saved {(saved[1], saved[0])} vs configured "
+                f"{(self.n_data_shards, self.n_shards)}")
         tree = dict(tree)
         shard_ema = tree.pop("shard_density_ema", None)
+        union_ema = tree.pop("shard_union_ema", None)
         self.inner.load_state_dict(tree, meta)
         if shard_ema is not None:
             self.shard_density_ema = np.asarray(shard_ema, np.float32)
+        if union_ema is not None:
+            self.shard_union_ema = np.asarray(union_ema, np.float32)
         self._shard_steps = int(meta.get("shard_steps", 0))
 
 

@@ -1,32 +1,43 @@
-"""Tensor-parallel sparse decode: shard_map execution of the SparseInfer
-MLP over the mesh's ``model`` axis (DESIGN.md §8).
+"""Distributed sparse decode: shard_map execution of the SparseInfer MLP
+over a 2D ``(data, model)`` mesh (DESIGN.md §8).
 
-Semantics are defined by ``SparseInferConfig.tp_shards`` (ms): the FFN
-hidden dim ``k`` is split into ms contiguous row slices.  Each shard
+Semantics are defined by TWO config fields, independent of placement:
+
+``SparseInferConfig.tp_shards`` (ms) — the FFN hidden dim ``k`` splits into
+ms contiguous row slices.  Each model shard
 
   * holds its slice of the sign-packed predictor weights and the three
     neuron-major matrices — margins need NO communication (sign bits pack
     along ``d``, the reduction axis, which stays whole);
   * computes its (B, k/G/ms) group-margin slice, its own batch-union and
-    its own top-(C/ms) capacity selection (the shard-local selection the
-    GSPMD gather path already used — weight-row gathers never cross
-    shards);
+    its own capacity selection.  The selection width is uniform
+    (``shard_capacity``) or, under the per-shard bucket ladder, a
+    per-shard effective capacity (``shard_bucket_caps``): the compiled
+    width is max over the bucket tuple and each shard clamps its count to
+    its own bucket (``core.selection.clamp_selection`` — bitwise-equal to
+    selecting at the narrow width directly);
   * produces a partial down-projection and its telemetry in NEURON-COUNT
     units.
 
-The epilogue is ONE psum of the (B, n_keys) count matrix (integer-valued
-float32 — exact under any reduction order) plus one all_gather that carries
-the output partials and the per-shard realized counts together; the output
-combine is the all_gather followed by a fixed-order sum over the shard
-axis rather than a psum, so the result is BITWISE identical to the
-single-device emulation of the same math (``emulated_apply``) — execution
-placement must not change results, which is the invariant
-tests/test_distributed.py pins across strategies and capacity buckets.
+``SparseInferConfig.dp_shards`` (ds) — the B batch slots split into ds
+contiguous blocks of B/ds.  Each data block runs its OWN batch-union +
+selection per model shard, so a block's selection never depends on another
+block's tokens.  ds=0/1 degenerates to the single global union.
 
-Telemetry leaves normalized by the GLOBAL k land in the exact per-token
-shapes ``MLP_STAT_KEYS`` promises, so the controller consumes mesh runs
-unchanged; the extra per-shard realized densities ride along under
-``SHARD_STAT_KEY`` for the DistributedController's skew diagnosis.
+Execution placement is orthogonal: under a mesh whose ``data`` / ``model``
+axes EVENLY DIVIDE (ds, ms), each device loops over its assigned semantic
+tiles inside one shard_map body; without a mesh (or with axes of size 1)
+the identical static loop runs on one device (``emulated_apply``).  The
+telemetry epilogue is a two-axis reduction: ONE psum of the per-token count
+matrix over ``model`` (integer-valued float32 — exact under any reduction
+order) while the ``data`` out_spec reassembles the (B, n) rows, so the
+controller receives the exact ``(L, B)`` matrices it already consumes; the
+output combine is one all_gather over ``model`` carrying the partials plus
+the per-shard realized/union count columns, followed by a FIXED-ORDER sum
+over the full ms-length semantic shard axis — never a psum of f32 partials
+— so tokens and telemetry are BITWISE identical across every placement of
+the same (ds, ms) semantics, the invariant tests/test_distributed.py and
+the tests/test_mesh_properties.py property suite pin.
 """
 from __future__ import annotations
 
@@ -46,6 +57,10 @@ from repro.sharding import sparse as SS
 # overflow_frac is derived as predicted - realized in the epilogue)
 COUNT_COLS = ("predicted", "realized", "actual", "false_neg", "union")
 
+# trailing rider columns packed next to the output partials so ONE
+# all_gather moves the partials and both per-shard skew signals
+_RIDER_COLS = 2   # realized, union
+
 
 def _shard_map(fn, mesh, in_specs, out_specs):
     """Version-portable shard_map (same shim as sharding/pipeline.py)."""
@@ -55,6 +70,22 @@ def _shard_map(fn, mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map
     return shard_map(fn, mesh=mesh, in_specs=in_specs,
                      out_specs=out_specs, check_rep=False)
+
+
+def semantic_grid(cfg: SM.SparseInferConfig) -> tuple[int, int]:
+    """The (ds, ms) semantic shard grid of a config (1 = unsharded axis)."""
+    return max(1, cfg.dp_shards or 1), max(1, cfg.tp_shards or 1)
+
+
+def shard_caps(cfg: SM.SparseInferConfig, k: int) -> tuple[tuple, int]:
+    """Per-model-shard effective group capacities and the compiled
+    selection width (max over the tuple).  Uniform configs return
+    ``((cap_l,) * ms, cap_l)``."""
+    _, ms = semantic_grid(cfg)
+    cap_l = cfg.shard_capacity(k)
+    if cfg.shard_bucket_caps:
+        return tuple(int(c) for c in cfg.shard_bucket_caps), cap_l
+    return (cap_l,) * ms, cap_l
 
 
 # ------------------------------------------------------- shard-local math --
@@ -69,9 +100,13 @@ def _take_groups(w_t, sel: S.Selection, g: int):
 
 
 def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
-               strategy: str, cap_l: int, collect: bool,
+               strategy: str, cap_l: int, cap_eff, collect: bool,
                interpret: Optional[bool]):
-    """One shard's partial MLP.
+    """One (data block × model shard) tile's partial MLP.
+
+    ``cap_l`` is the compiled selection width; ``cap_eff`` (None = no
+    clamp) is the shard's effective bucket capacity — a python int in the
+    emulation, a constant-indexed scalar in the SPMD shard_map body.
 
     Returns ``(y_partial (B, d) float32, counts | None)`` where counts maps
     ``COUNT_COLS`` to (B,) float32 NEURON counts over the shard's k/ms rows
@@ -91,6 +126,8 @@ def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
             sign_l, x, d, a, group_size=g, interpret=interpret)
         gm = S.union_margin(gm_tok)
         sel, sstats = S.capacity_select_with_stats(gm, cap_l)
+        if cap_eff is not None:
+            sel, sstats = S.clamp_selection(sel, sstats, cap_eff)
         out = kops.fused_sparse_mlp(
             x, params_l["wg_t"], params_l.get("wu_t"), params_l["wd_t"],
             sel.indices, sel.count, gm_tok if collect else None,
@@ -140,6 +177,8 @@ def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
     gm_tok = S.group_margins(m_tok, g)                        # (B, k_l/G)
     gm = S.union_margin(gm_tok)
     sel, sstats = S.capacity_select_with_stats(gm, cap_l)
+    if cap_eff is not None:
+        sel, sstats = S.clamp_selection(sel, sstats, cap_eff)
     wg = _take_groups(params_l["wg_t"], sel, g).astype(x.dtype)
     wd = _take_groups(params_l["wd_t"], sel, g).astype(x.dtype)
     vmask = jnp.repeat(sel.valid, g).astype(x.dtype)          # (cap_l*G,)
@@ -172,24 +211,30 @@ def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
 # ----------------------------------------------------- combine + epilogue --
 
 def _pack_partial(y, counts):
-    """(B, d) partial + realized column -> (B, d+1) so ONE all_gather moves
-    both the output partials and the per-shard skew signal."""
-    return jnp.concatenate([y, counts["realized"][:, None]], axis=-1)
+    """(B, d) partial + (realized, union) columns -> (B, d+2) so ONE
+    all_gather moves the output partials and both per-shard skew signals."""
+    return jnp.concatenate(
+        [y, counts["realized"][:, None], counts["union"][:, None]], axis=-1)
 
 
 def _combine_gathered(gathered, collect: bool, k_l: int):
     """Fixed-order shard combine, shared verbatim by the shard_map body and
-    the emulation: sum over the leading (ms) axis — NOT a psum — so both
-    execution placements reduce in the same order (bitwise parity)."""
+    the emulation: sum over the leading FULL (ms) semantic axis — NOT a
+    psum — so every execution placement reduces in the same order (bitwise
+    parity)."""
     if not collect:
         return gathered.sum(axis=0)
-    y = gathered[..., :-1].sum(axis=0)
-    shard_real = gathered[..., -1].T / jnp.float32(k_l)       # (B, ms)
-    return y, shard_real
+    y = gathered[..., :-_RIDER_COLS].sum(axis=0)
+    shard_real = gathered[..., -2].T / jnp.float32(k_l)       # (B, ms)
+    shard_union = gathered[..., -1].T / jnp.float32(k_l)      # (B, ms)
+    return y, shard_real, shard_union
 
 
-def _finalize_stats(totals: dict, shard_real, k: int) -> dict:
-    """Summed neuron counts -> the MLP_STAT_KEYS per-token contract."""
+def _finalize_stats(totals: dict, shard_real, shard_union, k: int,
+                    tp_shards: int) -> dict:
+    """Summed neuron counts -> the MLP_STAT_KEYS per-token contract.  The
+    per-shard riders are emitted only for tensor-sharded configs (data-only
+    sharding has no model axis to diagnose)."""
     kf = jnp.float32(k)
     p = totals["predicted"] / kf
     r = totals["realized"] / kf
@@ -202,7 +247,9 @@ def _finalize_stats(totals: dict, shard_real, k: int) -> dict:
         overflow_frac=jnp.maximum(p - r, 0.0),
         union_demand_frac=totals["union"] / kf,
     )
-    stats[SM.SHARD_STAT_KEY] = shard_real
+    if tp_shards:
+        stats[SM.SHARD_STAT_KEY] = shard_real
+        stats[SM.SHARD_UNION_KEY] = shard_union
     return stats
 
 
@@ -216,99 +263,227 @@ def _slice_params(params: dict, sign_wg, s: int, ms: int) -> tuple:
     return sign_wg[sl], local
 
 
+def _count_matrix(counts_by_shard: list) -> jax.Array:
+    """Stack one data block's per-shard count dicts into (ms, B, n) and sum
+    the shard axis — same stacked-sum every placement performs."""
+    cmat = jnp.stack(
+        [jnp.stack([c[col] for col in COUNT_COLS], axis=-1)
+         for c in counts_by_shard], axis=0)                   # (ms, B, n)
+    return cmat.sum(axis=0)                                   # (B, n)
+
+
 # ------------------------------------------------------------ public API --
 
 def emulated_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
                    alpha, *, strategy: str, return_stats: bool = False,
                    interpret: Optional[bool] = None):
-    """The tp_shards semantics on ONE device: a static loop over shard
-    slices through the same ``_local_mlp`` + the same combine the shard_map
-    path uses.  This is the parity reference — and the execution path when
-    no mesh is active (so a tp_shards config runs anywhere)."""
-    ms = cfg.tp_shards
+    """The (ds, ms) semantics on ONE device: a static loop over data blocks
+    and shard slices through the same ``_local_mlp`` + the same combine the
+    shard_map path uses.  This is the parity reference — and the execution
+    path when no mesh is active (so a sharded config runs anywhere)."""
+    ds, ms = semantic_grid(cfg)
     k = params["wg_t"].shape[0]
-    cap_l = cfg.shard_capacity(k)
+    caps, cap_l = shard_caps(cfg, k)
+    clamp = bool(cfg.shard_bucket_caps)
     sign_wg = params.get("sign_wg")
     if sign_wg is None:
         sign_wg = P.pack_signs(params["wg_t"])
-    parts = []
-    counts = []
-    for s in range(ms):
-        sign_l, params_l = _slice_params(params, sign_wg, s, ms)
-        y_s, c_s = _local_mlp(sign_l, params_l, x, cfg, alpha, strategy,
-                              cap_l, return_stats, interpret)
-        parts.append(_pack_partial(y_s, c_s) if return_stats else y_s)
-        if return_stats:
-            counts.append(c_s)
-    gathered = jnp.stack(parts, axis=0)                       # (ms, B, d[+1])
+    b = x.shape[0]
+    if b % ds:
+        raise ValueError(
+            f"batch {b} not divisible by dp_shards={ds} (DESIGN.md §8)")
+    bt = b // ds
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    y_blocks, tot_blocks, real_blocks, union_blocks = [], [], [], []
+    for db in range(ds):
+        x_t = x[db * bt:(db + 1) * bt]
+        a_t = a[db * bt:(db + 1) * bt]
+        parts = []
+        counts = []
+        for s in range(ms):
+            sign_l, params_l = _slice_params(params, sign_wg, s, ms)
+            cap_eff = caps[s] if clamp else None
+            y_s, c_s = _local_mlp(sign_l, params_l, x_t, cfg, a_t, strategy,
+                                  cap_l, cap_eff, return_stats, interpret)
+            parts.append(_pack_partial(y_s, c_s) if return_stats else y_s)
+            if return_stats:
+                counts.append(c_s)
+        gathered = jnp.stack(parts, axis=0)                   # (ms,bt,d[+2])
+        if not return_stats:
+            y_blocks.append(_combine_gathered(gathered, False, k // ms))
+            continue
+        y_t, real_t, union_t = _combine_gathered(gathered, True, k // ms)
+        y_blocks.append(y_t)
+        tot_blocks.append(_count_matrix(counts))
+        real_blocks.append(real_t)
+        union_blocks.append(union_t)
+    y = y_blocks[0] if ds == 1 else jnp.concatenate(y_blocks, axis=0)
     if not return_stats:
-        return _combine_gathered(gathered, False, k // ms)
-    y, shard_real = _combine_gathered(gathered, True, k // ms)
-    cmat = jnp.stack(
-        [jnp.stack([c[col] for col in COUNT_COLS], axis=-1)
-         for c in counts], axis=0)                            # (ms, B, n)
-    totals_mat = cmat.sum(axis=0)                             # (B, n)
+        return y
+    totals_mat = (tot_blocks[0] if ds == 1
+                  else jnp.concatenate(tot_blocks, axis=0))   # (B, n)
     totals = {col: totals_mat[..., i] for i, col in enumerate(COUNT_COLS)}
-    return y, _finalize_stats(totals, shard_real, k)
+    shard_real = (real_blocks[0] if ds == 1
+                  else jnp.concatenate(real_blocks, axis=0))
+    shard_union = (union_blocks[0] if ds == 1
+                   else jnp.concatenate(union_blocks, axis=0))
+    return y, _finalize_stats(totals, shard_real, shard_union, k,
+                              cfg.tp_shards)
 
 
 def shard_map_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
                     alpha, *, mesh, strategy: str,
                     return_stats: bool = False,
                     interpret: Optional[bool] = None):
-    """The same math under shard_map over the mesh's 'model' axis: weights
-    and margins partitioned per shard, one psum for the count telemetry,
-    one all_gather for the output partials + per-shard realized counts."""
-    ms = cfg.tp_shards
+    """The same math under shard_map over the mesh's ('data', 'model')
+    axes.  A mesh axis may be SMALLER than the semantic shard count as long
+    as it divides it — each device then loops over its contiguous semantic
+    tiles, which is what keeps results placement-invariant.  Two-axis
+    telemetry epilogue: one psum of the count matrix over 'model', the
+    'data' out_spec reassembling the (B, ·) rows."""
+    ds, ms = semantic_grid(cfg)
     k = params["wg_t"].shape[0]
-    cap_l = cfg.shard_capacity(k)
+    caps, cap_l = shard_caps(cfg, k)
+    clamp = bool(cfg.shard_bucket_caps)
+    axes = R.mesh_axes(mesh)
+    m_mesh = R.axis_size(mesh, "model") if "model" in axes else 1
+    d_mesh = R.axis_size(mesh, "data") if "data" in axes else 1
+    per_m, per_d = ms // m_mesh, ds // d_mesh
+    mname = "model" if "model" in axes else None
+    dname = "data" if "data" in axes else None
     sign_wg = params.get("sign_wg")
     if sign_wg is None:
         sign_wg = P.pack_signs(params["wg_t"])
     b = x.shape[0]
+    if b % ds:
+        raise ValueError(
+            f"batch {b} not divisible by dp_shards={ds} (DESIGN.md §8)")
+    bt = b // ds
+    k_l = k // ms
+    k_dev = k // m_mesh
     a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
     gated = params.get("wu_t") is not None
     wu = params["wu_t"] if gated else params["wg_t"][:0]      # 0-row stub
+    caps_vec = jnp.asarray(caps, jnp.int32)
 
-    row = SS.mlp_param_spec("wg_t", (k, 1))   # P('model', None) row sharding
-    in_specs = (row, row, row, row, P_(None, None), P_(None))
+    row = P_(mname, None)                      # weight row sharding
+    in_specs = (row, row, row, row, P_(dname, None), P_(dname))
     if return_stats:
-        out_specs = (P_(None, None), P_(None, None), P_(None, None))
+        out_specs = (P_(dname, None), P_(dname, None), P_(dname, None),
+                     P_(dname, None))
     else:
-        out_specs = P_(None, None)
+        out_specs = P_(dname, None)
 
     def body(sign_l, wg_l, wu_l, wd_l, x_l, a_l):
-        params_l = {"wg_t": wg_l, "wd_t": wd_l}
-        if gated:
-            params_l["wu_t"] = wu_l
-        y_s, c_s = _local_mlp(sign_l, params_l, x_l, cfg, a_l, strategy,
-                              cap_l, return_stats, interpret)
+        # x_l: (b/d_mesh, d) = per_d semantic data blocks of bt rows;
+        # weights: (k_dev, d) = per_m semantic shard slices of k_l rows
+        m_base = (jax.lax.axis_index(mname) * per_m if mname is not None
+                  else jnp.int32(0))
+        y_rows, tot_rows, real_rows, union_rows = [], [], [], []
+        for db in range(per_d):
+            x_t = x_l[db * bt:(db + 1) * bt]
+            a_t = a_l[db * bt:(db + 1) * bt]
+            parts = []
+            counts = []
+            for mt in range(per_m):
+                sl = slice(mt * k_l, (mt + 1) * k_l)
+                params_t = {"wg_t": wg_l[sl], "wd_t": wd_l[sl]}
+                if gated:
+                    params_t["wu_t"] = wu_l[sl]
+                cap_eff = caps_vec[m_base + mt] if clamp else None
+                y_s, c_s = _local_mlp(sign_l[sl], params_t, x_t, cfg, a_t,
+                                      strategy, cap_l, cap_eff,
+                                      return_stats, interpret)
+                parts.append(_pack_partial(y_s, c_s)
+                             if return_stats else y_s)
+                if return_stats:
+                    counts.append(c_s)
+            local = jnp.stack(parts, axis=0)          # (per_m, bt, d[+2])
+            if mname is not None:
+                gathered = jax.lax.all_gather(local, mname, axis=0)
+                gathered = gathered.reshape((ms,) + local.shape[1:])
+            else:
+                gathered = local
+            if not return_stats:
+                y_rows.append(_combine_gathered(gathered, False, k_l))
+                continue
+            y_t, real_t, union_t = _combine_gathered(gathered, True, k_l)
+            cm = _count_matrix(counts)                        # (bt, n)
+            if mname is not None:
+                cm = jax.lax.psum(cm, mname)   # exact: integer counts
+            y_rows.append(y_t)
+            tot_rows.append(cm)
+            real_rows.append(real_t)
+            union_rows.append(union_t)
+
+        def cat(rows):
+            return rows[0] if per_d == 1 else jnp.concatenate(rows, axis=0)
+
         if not return_stats:
-            gathered = jax.lax.all_gather(y_s, "model", axis=0)
-            return _combine_gathered(gathered, False, k // ms)
-        cmat = jnp.stack([c_s[col] for col in COUNT_COLS], axis=-1)
-        totals_mat = jax.lax.psum(cmat, "model")     # exact: integer counts
-        gathered = jax.lax.all_gather(_pack_partial(y_s, c_s), "model",
-                                      axis=0)
-        y, shard_real = _combine_gathered(gathered, True, k // ms)
-        return y, totals_mat, shard_real
+            return cat(y_rows)
+        return cat(y_rows), cat(tot_rows), cat(real_rows), cat(union_rows)
 
     fn = _shard_map(body, mesh, in_specs, out_specs)
     with R.shard_local():   # the body works on per-shard values: no nested
         out = fn(sign_wg, params["wg_t"], wu, params["wd_t"], x, a)
     if not return_stats:
         return out
-    y, totals_mat, shard_real = out
+    y, totals_mat, shard_real, shard_union = out
     totals = {col: totals_mat[..., i] for i, col in enumerate(COUNT_COLS)}
-    return y, _finalize_stats(totals, shard_real, k)
+    return y, _finalize_stats(totals, shard_real, shard_union, k,
+                              cfg.tp_shards)
+
+
+def selection_masks(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
+                    alpha, *, strategy: str = "gather") -> jax.Array:
+    """(ds, k/G) bool — which row-groups each data block's shard-local
+    union selection keeps (concatenated over the ms model shards).  The
+    margins/selection pipeline is the exact one ``_local_mlp`` runs for the
+    gather strategy (the pallas predictor is bitwise-identical to it), so
+    the property suite and the bench occupancy rows can observe selection
+    SETS without duplicating the implementation."""
+    if strategy not in ("gather", "pallas"):
+        raise ValueError(
+            f"selection_masks is defined for the capacity-selected union "
+            f"strategies, got {strategy!r}")
+    ds, ms = semantic_grid(cfg)
+    k = params["wg_t"].shape[0]
+    g = cfg.group_size
+    caps, cap_l = shard_caps(cfg, k)
+    clamp = bool(cfg.shard_bucket_caps)
+    sign_wg = params.get("sign_wg")
+    if sign_wg is None:
+        sign_wg = P.pack_signs(params["wg_t"])
+    b = x.shape[0]
+    if b % ds:
+        raise ValueError(
+            f"batch {b} not divisible by dp_shards={ds} (DESIGN.md §8)")
+    bt = b // ds
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    rows = []
+    for db in range(ds):
+        x_t = x[db * bt:(db + 1) * bt]
+        a_t = a[db * bt:(db + 1) * bt]
+        per_shard = []
+        for s in range(ms):
+            sign_l, _ = _slice_params(params, sign_wg, s, ms)
+            m_tok = P.margins(sign_l, P.pack_signs(x_t), x.shape[-1], a_t)
+            gm = S.union_margin(S.group_margins(m_tok, g))
+            sel, sstats = S.capacity_select_with_stats(gm, cap_l)
+            if clamp:
+                sel, sstats = S.clamp_selection(sel, sstats, caps[s])
+            mask = jnp.zeros(((k // g) // ms,), jnp.bool_)
+            per_shard.append(mask.at[sel.indices].max(sel.valid))
+        rows.append(jnp.concatenate(per_shard))
+    return jnp.stack(rows, axis=0)
 
 
 def sharded_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
                   alpha, *, strategy: str, return_stats: bool = False,
                   interpret: Optional[bool] = None):
-    """Dispatch for ``tp_shards > 0`` (called from ``core.sparse_mlp.apply``):
-    shard_map when the ambient mesh's 'model' axis matches the configured
-    shard count, bitwise-identical single-device emulation otherwise."""
+    """Dispatch for sharded configs (called from ``core.sparse_mlp.apply``):
+    shard_map when the ambient mesh's axes evenly divide the (ds, ms)
+    semantic grid, bitwise-identical single-device emulation otherwise."""
     squeeze = x.ndim == 1
     xb = x[None] if squeeze else x
     if xb.ndim != 2:
@@ -316,14 +491,28 @@ def sharded_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
             f"tp_shards decode expects (B, d) tokens, got {x.shape} — the "
             "dp-grouped (G, B, d) gather layout composes with GSPMD data "
             "sharding, not with the shard_map TP path (DESIGN.md §8)")
+    ds, ms = semantic_grid(cfg)
     mesh = R.current_mesh()
-    ms_mesh = SS.mesh_shard_count(mesh)
-    if mesh is not None and ms_mesh > 1 and ms_mesh != cfg.tp_shards:
-        raise ValueError(
-            f"tp_shards={cfg.tp_shards} but the active mesh's 'model' axis "
-            f"has {ms_mesh} devices — the shard count is part of the decode "
-            "semantics and must match the mesh it runs on (DESIGN.md §8)")
-    if ms_mesh == cfg.tp_shards and mesh is not None:
+    use_mesh = False
+    if mesh is not None:
+        axes = R.mesh_axes(mesh)
+        m_mesh = R.axis_size(mesh, "model") if "model" in axes else 1
+        d_mesh = R.axis_size(mesh, "data") if "data" in axes else 1
+        if m_mesh > 1 or d_mesh > 1:
+            if ms % m_mesh:
+                raise ValueError(
+                    f"tp_shards={cfg.tp_shards} but the active mesh's "
+                    f"'model' axis has {m_mesh} devices — the mesh axis "
+                    "must evenly divide the semantic shard count "
+                    "(DESIGN.md §8)")
+            if ds % d_mesh:
+                raise ValueError(
+                    f"dp_shards={cfg.dp_shards} but the active mesh's "
+                    f"'data' axis has {d_mesh} devices — the mesh axis "
+                    "must evenly divide the semantic shard count "
+                    "(DESIGN.md §8)")
+            use_mesh = True
+    if use_mesh:
         out = shard_map_apply(params, xb, cfg, alpha, mesh=mesh,
                               strategy=strategy, return_stats=return_stats,
                               interpret=interpret)

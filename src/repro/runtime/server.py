@@ -118,45 +118,46 @@ class Server:
     def __init__(self, model_mod, cfg: ModelConfig, scfg: ServeConfig,
                  params: dict, extra_inputs: Optional[dict] = None,
                  mesh: Optional[jax.sharding.Mesh] = None):
-        """``mesh``: tensor-parallel serving mode (DESIGN.md §8).  The
-        sparse decode runs under shard_map over the mesh's 'model' axis
-        (``cfg.sparse.tp_shards`` is set to the axis size — shard-local
-        selection semantics, bitwise-identical to the single-device
-        emulation of the same config); params are placed row-sharded, KV
-        caches get their ``shard_kv_cache`` layout, and all jitted steps
-        trace inside the mesh context."""
+        """``mesh``: sharded serving mode over a 2D ``(data, model)`` mesh
+        (DESIGN.md §8).  The sparse decode runs under shard_map over both
+        axes — ``cfg.sparse.tp_shards`` / ``dp_shards`` define the SEMANTIC
+        shard grid (explicit config values win; unset fields default to the
+        mesh axis sizes, which must evenly divide them) — so results are
+        bitwise-identical to the single-device emulation of the same
+        config on any placement.  Params are placed row-sharded over
+        'model', the KV cache and the per-step slot arrays (tokens, cache
+        lengths, the SLA alpha matrix) partition their batch-slot dim over
+        'data', and all jitted steps trace inside the mesh context."""
         self.mod = model_mod
         self.mesh = mesh
+        self._slot_sh = None
+        self._grid_warned: set = set()
         if mesh is not None:
+            from repro.sharding import rules as RR
             from repro.sharding import sparse as SSP
-            ms = SSP.mesh_shard_count(mesh)
-            if ms <= 1:
+            if int(np.prod(mesh.devices.shape)) <= 1:
                 raise ValueError(
-                    "mesh serving needs a 'model' axis with > 1 devices "
-                    f"(got mesh axes {mesh.axis_names}, shape "
-                    f"{mesh.devices.shape})")
+                    "mesh serving needs > 1 devices across the ('data', "
+                    f"'model') axes (got mesh axes {mesh.axis_names}, "
+                    f"shape {mesh.devices.shape})")
             if not cfg.sparse.enabled or cfg.sparse.strategy not in (
                     "masked", "gather", "pallas"):
                 raise ValueError(
                     "mesh serving shards the SparseInfer decode strategies; "
                     f"got enabled={cfg.sparse.enabled} "
                     f"strategy={cfg.sparse.strategy!r} (DESIGN.md §8)")
+            ds, ms = SSP.resolve_grid(cfg.sparse, mesh, scfg.batch)
             SSP.validate_shardable(cfg.sparse, cfg.d_ff, ms)
-            if cfg.sparse.strategy == "pallas":
-                from repro.core.predictor import packed_width
-                from repro.kernels import ops as kops
-                try:
-                    kops.choose_blocks(cfg.d_ff, packed_width(cfg.d_model),
-                                       scfg.batch,
-                                       group_size=cfg.sparse.group_size,
-                                       n_shards=ms)
-                except ValueError as e:
-                    warnings.warn(
-                        f"sharded pallas predictor grid is degenerate at "
-                        f"the local dims ({e}); each shard will run the "
-                        "jnp oracle fallback", stacklevel=2)
             cfg = cfg.replace(sparse=dataclasses.replace(
-                cfg.sparse, tp_shards=ms))
+                cfg.sparse, tp_shards=ms, dp_shards=ds))
+            tok_sh = RR.slot_sharding(mesh, 2, 0)
+            if tok_sh is not None:
+                self._slot_sh = (tok_sh, RR.slot_sharding(mesh, 1, 0),
+                                 RR.slot_sharding(mesh, 2, 1))
+        elif cfg.sparse.dp_shards and scfg.batch % cfg.sparse.dp_shards:
+            raise ValueError(
+                f"batch {scfg.batch} not divisible by dp_shards="
+                f"{cfg.sparse.dp_shards} (DESIGN.md §8)")
         self.cfg = cfg
         self.scfg = scfg
         self.params = (model_mod.prepare_sparse(params)
@@ -226,12 +227,21 @@ class Server:
                 native_fn=cfg.sparse.strategy == "pallas")
             if cfg.sparse.tp_shards:
                 # sharded strategies (mesh or emulated) ride per-shard
-                # realized densities along the telemetry: wrap for skew
-                # diagnosis + the key strip before aggregation
+                # realized densities + union demands along the telemetry:
+                # wrap for skew diagnosis, per-shard bucket hints and the
+                # key strip before aggregation
                 self.controller = DistributedController(
-                    self.controller, cfg.sparse.tp_shards)
+                    self.controller, cfg.sparse.tp_shards,
+                    n_data_shards=max(1, cfg.sparse.dp_shards or 1))
             self._build_controller_fns()
         # ---- controller persistence (DESIGN.md §8) -----------------------
+        if cfg.sparse.tp_shards and cfg.sparse.strategy == "pallas":
+            # construction-time grid check for the static capacity (ladder
+            # buckets are checked as they activate); deduped per (bucket,
+            # shard) so later bucket switches never re-warn
+            ms = cfg.sparse.tp_shards
+            self._check_shard_grids((cfg.sparse.shard_capacity(cfg.d_ff),)
+                                    * ms)
         self._ckpt_mgr = None
         if scfg.controller_ckpt and self.controller is not None:
             from repro.checkpoint.manager import CheckpointManager
@@ -245,10 +255,13 @@ class Server:
         """(Re)build the stats-collecting decode jits against the CURRENT
         self.cfg: one per capacity bucket when the config carries a
         ``capacity_buckets`` ladder (DESIGN.md §2), else a single fn.
-        Each bucket's fn is jitted once and cached — the controller then
-        switches buckets between decode steps with a dict lookup, never a
-        retrace.  ``_trace_counts`` counts (re)traces per bucket (the
-        no-retrace regression tests read it)."""
+        Sharded configs key the dict by per-shard bucket TUPLES (one
+        executable per tuple — the full len(ladder)**tp_shards product when
+        it fits ``ControllerConfig.bucket_tuple_cap``, else uniform tuples
+        only, DESIGN.md §8).  Each fn is jitted once and cached — the
+        controller then switches buckets between decode steps with a dict
+        lookup, never a retrace.  ``_trace_counts`` counts (re)traces per
+        bucket key (the no-retrace regression tests read it)."""
         cfg = self.cfg
         self._trace_counts: collections.Counter = collections.Counter()
 
@@ -263,7 +276,47 @@ class Server:
 
         self._bucket_fns: dict = {}
         self._warmed_buckets = False
+        self._local_ladder: tuple = ()
+        self._per_shard_buckets = False
+        ms = max(1, cfg.sparse.tp_shards or 1)
         if (cfg.sparse.capacity_buckets
+                and cfg.sparse.strategy in ("gather", "pallas")
+                and cfg.sparse.tp_shards):
+            import itertools
+
+            from repro.sharding import sparse as SSP
+            # every ladder bucket must split evenly across the shards on
+            # EVERY placement — the mesh path validates at construction,
+            # and the meshless (emulated) path must reject the same
+            # configs rather than silently flooring a bucket
+            SSP.validate_shardable(cfg.sparse, cfg.d_ff, ms)
+            sc = self.scfg.controller
+            ladder = cfg.sparse.capacity_ladder(cfg.d_ff)
+            local = tuple(capg // ms for capg in ladder)
+            self._local_ladder = local
+            n_tuples = len(local) ** ms
+            self._per_shard_buckets = (sc.per_shard_buckets
+                                       and n_tuples <= sc.bucket_tuple_cap)
+            if sc.per_shard_buckets and not self._per_shard_buckets:
+                warnings.warn(
+                    f"per-shard bucket ladder would need {n_tuples} "
+                    f"executables (len(ladder)={len(local)} ** tp_shards="
+                    f"{ms}) > bucket_tuple_cap={sc.bucket_tuple_cap}: "
+                    "falling back to uniform bucket tuples (every shard "
+                    "shares one ladder rung) — shrink the ladder or raise "
+                    "the cap (DESIGN.md §8)", stacklevel=2)
+            tuples = (itertools.product(local, repeat=ms)
+                      if self._per_shard_buckets
+                      else [(c,) * ms for c in local])
+            for t in tuples:
+                t = tuple(t)
+                cfg_b = cfg.replace(sparse=dataclasses.replace(
+                    cfg.sparse, capacity_override=max(t) * ms,
+                    shard_bucket_caps=t))
+                self._bucket_fns[t] = make_ctrl(cfg_b, t)
+            self._active_cap = (max(local),) * ms  # start at the widest
+            self._check_shard_grids(self._active_cap)
+        elif (cfg.sparse.capacity_buckets
                 and cfg.sparse.strategy in ("gather", "pallas")):
             for capg in cfg.sparse.capacity_ladder(cfg.d_ff):
                 cfg_b = cfg.replace(sparse=dataclasses.replace(
@@ -300,6 +353,23 @@ class Server:
         a no-op single-device."""
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
+    def _put_slots(self, tok, lengths, alphas=None):
+        """Per-step slot arrays onto the mesh, batch-slot dim partitioned
+        over the 'data' axis (DESIGN.md §8): tokens (B, 1), cache lengths
+        (B,), and the (L, B) alpha matrix each land pre-sharded so the
+        jitted decode step never re-lays them out.  Placement only — the
+        values (and therefore the decoded tokens) are identical without a
+        mesh."""
+        jt, jl = jnp.asarray(tok), jnp.asarray(lengths)
+        ja = None if alphas is None else jnp.asarray(alphas)
+        if self._slot_sh is not None:
+            tok_sh, len_sh, a_sh = self._slot_sh
+            jt = jax.device_put(jt, tok_sh)
+            jl = jax.device_put(jl, len_sh)
+            if ja is not None:
+                ja = jax.device_put(ja, a_sh)
+        return jt, jl, ja
+
     def save_controller(self, step: Optional[int] = None) -> Optional[int]:
         """Checkpoint the controller state (no-op without
         ``ServeConfig.controller_ckpt``).  Returns the step written."""
@@ -312,15 +382,70 @@ class Server:
         """The stats-collecting decode jit for the ACTIVE capacity bucket."""
         return self._bucket_fns[self._active_cap]
 
-    def _select_bucket(self) -> int:
+    @staticmethod
+    def _pick_rung(ladder: tuple, need: int) -> int:
+        """Smallest ladder rung covering ``need`` groups (widest if none)."""
+        for rung in ladder:          # capacity_ladder is sorted ascending
+            if rung >= need:
+                return rung
+        return ladder[-1]
+
+    def _check_shard_grids(self, caps: tuple) -> None:
+        """Warn — once per (bucket, shard), deduplicated across decode
+        steps and bucket switches — when a shard's pallas kernel grid is
+        degenerate at its local dims for its ACTIVE bucket, so the jnp
+        oracle fallback is visible without spamming the serve loop."""
+        if self.cfg.sparse.strategy != "pallas":
+            return
+        from repro.core.predictor import packed_width
+        from repro.kernels import ops as kops
+        ds = max(1, self.cfg.sparse.dp_shards or 1)
+        for s, capg in enumerate(caps):
+            key = (capg, s)
+            if key in self._grid_warned:
+                continue
+            self._grid_warned.add(key)
+            try:
+                kops.choose_blocks(self.cfg.d_ff,
+                                   packed_width(self.cfg.d_model),
+                                   max(1, self.scfg.batch // ds),
+                                   group_size=self.cfg.sparse.group_size,
+                                   n_shards=len(caps),
+                                   capacity_groups=capg)
+            except ValueError as e:
+                warnings.warn(
+                    f"sharded pallas predictor grid is degenerate for "
+                    f"shard {s} at bucket {capg} local groups ({e}); the "
+                    "shard runs the jnp oracle fallback", stacklevel=2)
+
+    def _select_bucket(self):
         """Pick the smallest pre-jitted capacity bucket covering the
-        controller's union-demand hint (DESIGN.md §2/§4).  Pure host-side
+        controller's union-demand hint (DESIGN.md §2/§4) — per SHARD under
+        the sharded bucket-tuple ladder: each model shard's local rung is
+        sized to its own union-demand EMA (``shard_capacity_hints``), so a
+        skewed shard widens only itself (DESIGN.md §8).  Pure host-side
         arithmetic + dict lookup between decode steps — switching buckets
-        never retraces the jitted decode step."""
+        (or bucket tuples) never retraces the jitted decode step."""
         ctl = self.controller
         if ctl is None or len(self._bucket_fns) <= 1 or ctl.state.steps == 0:
             return self._active_cap
         g = self.cfg.sparse.group_size
+        if isinstance(self._active_cap, tuple):
+            ms = len(self._active_cap)
+            if (self._per_shard_buckets
+                    and isinstance(ctl, DistributedController)
+                    and ctl._shard_steps > 0):
+                hints = ctl.shard_capacity_hints(self.cfg.d_ff)
+                needs = [-(-int(h) // g) for h in hints]      # local groups
+            else:
+                need = -(-ctl.capacity_hint(self.cfg.d_ff) // g)
+                needs = [-(-need // ms)] * ms                 # global -> C/ms
+            t = tuple(self._pick_rung(self._local_ladder, n) for n in needs)
+            if t not in self._bucket_fns:      # uniform-only fallback mode
+                t = (max(t),) * ms
+            self._active_cap = t
+            self._check_shard_grids(t)
+            return t
         need = -(-ctl.capacity_hint(self.cfg.d_ff) // g)  # neurons -> groups
         for capg in sorted(self._bucket_fns):
             if capg >= need:
@@ -643,29 +768,31 @@ class Server:
                               self._slot_alpha_matrix(tier_idx, active))
         alpha_mat: Optional[np.ndarray] = None  # cached off-controller matrix
         while active.any():
-            jt, jl = jnp.asarray(tok), jnp.asarray(lengths)
             if ctl is not None:
                 audit = ctl.is_audit_step()
                 # between-step capacity-bucket switch: a host dict lookup
-                # into the pre-jitted ladder — never a retrace
+                # into the pre-jitted (per-shard tuple) ladder — never a
+                # retrace
                 self._select_bucket()
                 fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
                 # rebuilt per step: the controller adapts between steps
                 alphas = self._slot_alpha_matrix(tier_idx, active)
-                ntok, caches, stats = fn(self.params, jt, caches, jl,
-                                         jnp.asarray(alphas))
+                jt, jl, ja = self._put_slots(tok, lengths, alphas)
+                ntok, caches, stats = fn(self.params, jt, caches, jl, ja)
                 self._observe_step(stats, tier_idx, active, audit)
             elif legacy and active.all():
                 # uniform schedule, every slot live: the seed decode jit
                 # (bit-identical path; no alpha plumbing at all)
+                jt, jl, _ = self._put_slots(tok, lengths)
                 ntok, caches = self.decode_fn(self.params, jt, caches, jl)
             else:
                 # static alphas change only at refill boundaries — cache the
                 # matrix; dead slots are neutralized out of the union
                 if alpha_mat is None:
                     alpha_mat = self._slot_alpha_matrix(tier_idx, active)
+                jt, jl, ja = self._put_slots(tok, lengths, alpha_mat)
                 ntok, caches = self.decode_alpha_fn(
-                    self.params, jt, caches, jl, jnp.asarray(alpha_mat))
+                    self.params, jt, caches, jl, ja)
             ntok = np.asarray(ntok)
             refill = []
             for i in range(B):

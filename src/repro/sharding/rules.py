@@ -217,6 +217,22 @@ def named_shardings(specs, mesh=None):
 
 # ---------------------------------------------------- activation helpers --
 
+def slot_sharding(mesh, ndim: int, batch_dim: int):
+    """NamedSharding placing the batch-SLOT dim of a serve-step array over
+    the mesh's 'data' axis, everything else replicated (DESIGN.md §8).
+
+    The slot-refill scheduler's per-step arrays — tokens (B, 1), cache
+    lengths (B,), the (L, B) SLA alpha matrix — are device_put with this
+    before entering the jitted decode step, so each data shard holds only
+    its own slots' values.  Returns None when the mesh has no 'data' axis
+    (single-axis TP serving: everything replicated, nothing to place)."""
+    if mesh is None or "data" not in mesh_axes(mesh):
+        return None
+    spec = [None] * ndim
+    spec[batch_dim] = "data"
+    return NamedSharding(mesh, P(*spec))
+
+
 def shard_tokens(x: jax.Array) -> jax.Array:
     """(B, S) token ids: batch over data axes."""
     return shard(x, data_axes(), None)

@@ -35,6 +35,44 @@ def mesh_shard_count(mesh: Optional[jax.sharding.Mesh] = None) -> int:
     return R.axis_size(mesh, "model")
 
 
+def mesh_data_count(mesh: Optional[jax.sharding.Mesh] = None) -> int:
+    """Size of the 'data' axis (1 without a mesh / 'data')."""
+    mesh = mesh or R.current_mesh()
+    if mesh is None or "data" not in R.mesh_axes(mesh):
+        return 1
+    return R.axis_size(mesh, "data")
+
+
+def resolve_grid(sparse, mesh, batch: int) -> tuple[int, int]:
+    """Resolve the SEMANTIC (ds, ms) shard grid for serving on ``mesh``.
+
+    The config's explicit ``dp_shards`` / ``tp_shards`` win (so the same
+    semantics can be pinned across placements); unset fields default to the
+    mesh's axis sizes.  The mesh axes must evenly divide the semantic
+    counts (each device loops over its contiguous semantic tiles — that is
+    what keeps results placement-invariant, DESIGN.md §8), and the batch
+    must split evenly over the data shards."""
+    ms_mesh = mesh_shard_count(mesh)
+    ds_mesh = mesh_data_count(mesh)
+    ms = sparse.tp_shards or ms_mesh
+    ds = sparse.dp_shards or ds_mesh
+    if ms % ms_mesh:
+        raise ValueError(
+            f"tp_shards={ms} not divisible by the mesh's 'model' axis "
+            f"({ms_mesh} devices) — the mesh axis must evenly divide the "
+            "semantic shard count (DESIGN.md §8)")
+    if ds % ds_mesh:
+        raise ValueError(
+            f"dp_shards={ds} not divisible by the mesh's 'data' axis "
+            f"({ds_mesh} devices) — the mesh axis must evenly divide the "
+            "semantic shard count (DESIGN.md §8)")
+    if batch % ds:
+        raise ValueError(
+            f"batch {batch} not divisible by dp_shards={ds}: every data "
+            "shard owns the same number of batch slots (DESIGN.md §8)")
+    return ds, ms
+
+
 def validate_shardable(sparse, k: int, ms: int) -> None:
     """Fail fast before any tracing if the config cannot shard ``ms`` ways.
 
@@ -74,10 +112,37 @@ def mlp_param_spec(name: str, shape: tuple) -> P:
 
 def serve_param_shardings(params, mesh=None):
     """NamedShardings for the whole serve-path param tree (TP over 'model',
-    replicated over data axes — ``rules`` mode='serve')."""
+    replicated over data axes — ``rules`` mode='serve').
+
+    2D-mesh caveat (DESIGN.md §8): when the mesh has BOTH a non-trivial
+    'data' axis and a non-trivial 'model' axis, only the sparse-MLP leaves
+    (``SPARSE_MLP_KEYS``) keep their row sharding — they execute under the
+    fixed-order shard_map combine, which is placement-deterministic by
+    construction.  The attention/embedding leaves are replicated: jax
+    0.4.37's SPMD partitioner MISCOMPUTES prefill when the q/k projections
+    are column-sharded sub-head over 'model' while a 'data' axis is also
+    present (observed ~1.5 absolute logit error, not float noise;
+    tests/test_distributed.py::test_2d_placed_prefill_matches_unplaced
+    pins the workaround).  Single-axis meshes (1×m, d×1) are unaffected
+    and keep the full placement."""
     mesh = mesh or R.current_mesh()
     specs = R.param_specs(params, mode="serve", mesh=mesh)
+    if mesh_shard_count(mesh) > 1 and mesh_data_count(mesh) > 1:
+        from jax.sharding import PartitionSpec as PS
+
+        def guard(path, spec):
+            name = _path_leaf(path)
+            return spec if name in SPARSE_MLP_KEYS else PS()
+
+        specs = jax.tree_util.tree_map_with_path(
+            guard, specs,
+            is_leaf=lambda s: isinstance(s, P))
     return R.named_shardings(specs, mesh)
+
+
+def _path_leaf(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
 
 
 def place_serve_params(params, mesh=None):

@@ -85,12 +85,26 @@ class TestShardCapacity:
 
     def test_ops_choose_blocks_shard_local(self):
         from repro.kernels import ops as kops
-        bk = kops.choose_blocks(K, P.packed_width(D), 3, group_size=8,
-                                n_shards=MS)
+        plan = kops.choose_blocks(K, P.packed_width(D), 3, group_size=8,
+                                  n_shards=MS)
+        bk = plan.block_k
         assert bk <= K // MS and (K // MS) % bk == 0
+        assert plan.mlp_groups == 1          # no bucket given
         with pytest.raises(ValueError, match="divisible"):
             kops.choose_blocks(K, P.packed_width(D), 3, group_size=8,
                                n_shards=3)
+
+    def test_choose_blocks_per_bucket_mlp_tile(self):
+        """Wide local buckets get a taller fused-MLP weight tile; narrow
+        ones keep the single-group tile (satellite: per-bucket block-shape
+        tuning beyond the shared G×d)."""
+        from repro.kernels import ops as kops
+        wide = kops.choose_blocks(1024, P.packed_width(D), 2, group_size=8,
+                                  n_shards=2, capacity_groups=64)
+        narrow = kops.choose_blocks(1024, P.packed_width(D), 2, group_size=8,
+                                    n_shards=2, capacity_groups=2)
+        assert wide.mlp_groups > narrow.mlp_groups == 1
+        assert 64 % wide.mlp_groups == 0
 
 
 @needs_mesh
@@ -336,20 +350,24 @@ class TestMeshServer:
         """One jitted executable per capacity bucket under the mesh: every
         bucket traced exactly once (the warmup), none after — switching
         buckets between decode steps never retraces (PR 3 invariant,
-        preserved by the shard_map subsystem)."""
+        preserved by the shard_map subsystem).  ``per_shard_buckets=False``
+        pins the uniform-tuple ladder: exactly len(ladder) executables,
+        keyed by per-shard local-capacity tuples."""
         cfg = _serve_cfg("pallas", buckets=(0.25, 0.5, 1.0))
         cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, alpha_base=0.3, alpha_early=0.3))
-        ccfg = ControllerConfig(enabled=True, gain=0.0, fn_gain=0.0)
+        ccfg = ControllerConfig(enabled=True, gain=0.0, fn_gain=0.0,
+                                per_shard_buckets=False)
         srv = Server(lm, cfg,
                      ServeConfig(batch=2, max_len=64, controller=ccfg,
                                  warm_buckets=True),
                      lm.init_lm(jax.random.PRNGKey(0), cfg), mesh=_mesh())
-        assert set(srv._bucket_fns) == {128, 256}   # MXU-aligned + deduped
+        # global {128, 256} MXU-aligned + deduped -> local C/ms tuples
+        assert set(srv._bucket_fns) == {(32,) * MS, (64,) * MS}
         done = srv.serve(_reqs())
         assert all(len(r.out) == 5 for r in done)
-        # alpha 0.3 predicts almost nothing -> smallest bucket
-        assert srv._active_cap == 128, dict(srv._trace_counts)
+        # alpha 0.3 predicts almost nothing -> smallest bucket on all shards
+        assert srv._active_cap == (32,) * MS, dict(srv._trace_counts)
         assert all(c == 1 for c in srv._trace_counts.values()), \
             dict(srv._trace_counts)
 
@@ -373,6 +391,212 @@ class TestMeshServer:
         assert len(skew["per_layer_skew"]) == cfg.n_layers
         assert skew["max_skew"] >= 0.0
         assert len(skew["mean_shard_density"]) == MS
+
+
+DS = 4
+needs_mesh8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host-platform devices (conftest XLA_FLAGS)")
+
+# semantic grid pinned in CONFIG (dp_shards=4, tp_shards=4): every
+# placement below executes the exact same (data, model) semantics
+CFG_2D = CFG_LM.replace(sparse=dataclasses.replace(
+    CFG_LM.sparse, group_size=1, tp_shards=MS, dp_shards=DS))
+
+PLACEMENTS = [((1, MS), ("data", "model")),
+              ((DS, 1), ("data", "model")),
+              ((2, MS), ("data", "model"))]
+
+
+@needs_mesh8
+class TestMesh2DServer:
+    """Acceptance pin: greedy tokens and ALL controller telemetry are
+    bitwise-identical across 1-device emulation, 1×4, 4×1 and 2×4
+    placements of the same (dp_shards=4, tp_shards=4) semantics, for all
+    three strategies."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_serve_bitwise_across_placements(self, strategy):
+        cfg = CFG_2D.replace(sparse=dataclasses.replace(
+            CFG_2D.sparse, strategy=strategy))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        ccfg = ControllerConfig(enabled=True, target_density=0.25,
+                                audit_period=3)
+        scfg = ServeConfig(batch=DS, max_len=64, controller=ccfg)
+
+        def reqs():
+            rng = np.random.default_rng(0)
+            return [Request(uid=i, prompt=rng.integers(0, 128, size=6),
+                            max_new=3) for i in range(5)]
+
+        srv_e = Server(lm, cfg, scfg, params)
+        done_e = srv_e.serve(reqs())
+        for shape, axes in PLACEMENTS:
+            srv_m = Server(lm, cfg, scfg, params,
+                           mesh=make_mesh(shape, axes))
+            done_m = srv_m.serve(reqs())
+            for a, b in zip(done_e, done_m):
+                np.testing.assert_array_equal(
+                    a.out, b.out, err_msg=f"{strategy} tokens @ {shape}")
+            for name in ("alphas", "density_ema", "fn_ema", "union_ema",
+                         "predicted_ema"):
+                np.testing.assert_array_equal(
+                    getattr(srv_e.controller.state, name),
+                    getattr(srv_m.controller.state, name),
+                    err_msg=f"{strategy} {name} @ {shape}")
+            np.testing.assert_array_equal(
+                srv_e.controller.shard_density_ema,
+                srv_m.controller.shard_density_ema,
+                err_msg=f"{strategy} shard_density_ema @ {shape}")
+            np.testing.assert_array_equal(
+                srv_e.controller.shard_union_ema,
+                srv_m.controller.shard_union_ema,
+                err_msg=f"{strategy} shard_union_ema @ {shape}")
+
+    def test_2d_placed_prefill_matches_unplaced(self):
+        """Regression pin for the 2D param-placement workaround: jax
+        0.4.37's SPMD partitioner miscomputes prefill when q/k projections
+        are column-sharded sub-head over 'model' while a 'data' axis is
+        present; ``serve_param_shardings`` therefore replicates the
+        attention/embed leaves on 2D meshes (sharding/sparse.py).  Placed
+        and unplaced prefill must agree to float noise — a ~1.0-magnitude
+        logit error means the workaround regressed."""
+        from repro.sharding import sparse as SSP
+        cfg = CFG_2D.replace(sparse=dataclasses.replace(
+            CFG_2D.sparse, strategy="gather"))
+        params = lm.prepare_sparse(lm.init_lm(jax.random.PRNGKey(0), cfg))
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0,
+                                     cfg.vocab)
+        fn = jax.jit(lambda p, t: lm.prefill(p, cfg, t, max_len=64)[0])
+        ref = np.asarray(fn(params, prompts))
+        with make_mesh((2, MS), ("data", "model")) as mesh:
+            placed = SSP.place_serve_params(params, mesh)
+            got = np.asarray(fn(placed, prompts))
+        np.testing.assert_allclose(ref, got, atol=1e-4, rtol=1e-4)
+        # ...and the sparse-MLP leaves did keep their row sharding
+        spec = placed["blocks"]["mlp"]["wg_t"].sharding.spec
+        assert "model" in tuple(spec), spec
+
+    def test_mesh_must_divide_semantics(self):
+        """A mesh axis that does not divide the semantic shard count is
+        rejected (3 does not divide dp_shards=4)."""
+        cfg = CFG_2D.replace(sparse=dataclasses.replace(
+            CFG_2D.sparse, dp_shards=3))
+        with pytest.raises(ValueError, match="data"):
+            Server(lm, cfg, ServeConfig(batch=6, max_len=64),
+                   lm.init_lm(jax.random.PRNGKey(0), cfg),
+                   mesh=make_mesh((2, MS), ("data", "model")))
+
+    def test_batch_must_divide_data_shards(self):
+        with pytest.raises(ValueError, match="batch"):
+            Server(lm, CFG_2D, ServeConfig(batch=3, max_len=64),
+                   lm.init_lm(jax.random.PRNGKey(0), CFG_2D),
+                   mesh=make_mesh((2, MS), ("data", "model")))
+
+
+class TestPerShardBuckets:
+    """Tentpole: per-shard adaptive capacity buckets — one pre-jitted
+    executable per bucket TUPLE, controller-driven per-shard rung
+    selection, zero retraces on switches."""
+
+    def _srv(self, per_shard=True, cap=16, mesh=None, warm=False):
+        cfg = _serve_cfg("gather", buckets=(0.25, 1.0))
+        cfg = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, tp_shards=2, dp_shards=2))
+        ccfg = ControllerConfig(enabled=True, target_density=0.25,
+                                per_shard_buckets=per_shard,
+                                bucket_tuple_cap=cap)
+        return Server(lm, cfg,
+                      ServeConfig(batch=2, max_len=64, controller=ccfg,
+                                  warm_buckets=warm),
+                      lm.init_lm(jax.random.PRNGKey(0), cfg), mesh=mesh)
+
+    def test_tuple_ladder_is_full_product(self):
+        srv = self._srv()
+        # global ladder {128, 256} -> local {64, 128} over 2 shards
+        assert set(srv._bucket_fns) == {(64, 64), (64, 128),
+                                        (128, 64), (128, 128)}
+        assert srv._per_shard_buckets
+
+    def test_tuple_cap_falls_back_to_uniform(self):
+        with pytest.warns(UserWarning, match="bucket_tuple_cap"):
+            srv = self._srv(cap=3)
+        assert set(srv._bucket_fns) == {(64, 64), (128, 128)}
+        assert not srv._per_shard_buckets
+
+    def test_per_shard_switch_zero_retrace(self):
+        """Driving the controller's per-shard union EMAs to a skewed
+        profile switches to a HETEROGENEOUS bucket tuple; every executable
+        traces at most once, and switching back adds zero traces."""
+        srv = self._srv()
+        srv.serve(_reqs(n=2, max_new=4))
+        ctl = srv.controller
+        # force a skewed per-shard union-demand profile: shard 0 narrow,
+        # shard 1 wide (k_local = 128 neurons; ladder local rungs 64/128)
+        ctl.shard_union_ema = np.array([[0.1, 0.9]] * 2, np.float32)
+        assert srv._select_bucket() == (64, 128)
+        before = dict(srv._trace_counts)
+        srv.serve(_reqs(n=1, max_new=3))
+        ctl.shard_union_ema = np.array([[0.9, 0.1]] * 2, np.float32)
+        assert srv._select_bucket() == (128, 64)
+        srv.serve(_reqs(n=1, max_new=3))
+        # back to the first tuple: already traced, must not trace again
+        ctl.shard_union_ema = np.array([[0.1, 0.9]] * 2, np.float32)
+        assert srv._select_bucket() == (64, 128)
+        srv.serve(_reqs(n=1, max_new=3))
+        assert all(c == 1 for c in srv._trace_counts.values()), \
+            dict(srv._trace_counts)
+        assert (64, 128) in srv._trace_counts
+        assert (128, 64) in srv._trace_counts
+        assert before  # the initial serve traced at least one tuple
+
+    @needs_mesh
+    def test_heterogeneous_tuple_bitwise_on_mesh(self):
+        """A heterogeneous shard_bucket_caps tuple is bitwise-identical
+        between the shard_map execution and the emulation — the clamp is
+        part of the semantics, not the placement."""
+        params = _params(21)
+        x = jax.random.normal(jax.random.PRNGKey(22), (4, D))
+        for strategy in ("gather", "pallas"):
+            cfg = _cfg(strategy, capacity_frac=1.0)
+            cfg = dataclasses.replace(cfg, dp_shards=2,
+                                      shard_bucket_caps=(2, 8, 4, 8),
+                                      capacity_override=32)
+            y_ref, st_ref = SM.apply(params, x, cfg, alpha=1.0,
+                                     return_stats=True)
+            with _mesh():
+                y_sh, st_sh = jax.jit(
+                    lambda p, xx: SM.apply(p, xx, cfg, alpha=1.0,
+                                           return_stats=True))(params, x)
+            np.testing.assert_array_equal(np.asarray(y_ref),
+                                          np.asarray(y_sh))
+            _assert_tree_equal(st_ref, st_sh, f"hetero:{strategy}")
+
+    def test_degenerate_grid_warning_fires_once_per_bucket_shard(
+            self, monkeypatch):
+        """Satellite: the degenerate-grid warning is deduplicated per
+        (bucket, shard) — repeated bucket switches across decode steps
+        must not re-warn."""
+        from repro.kernels import ops as kops
+
+        def boom(*a, **kw):
+            raise ValueError("forced degenerate tile")
+
+        srv = self._srv()
+        monkeypatch.setattr(kops, "choose_blocks", boom)
+        srv.cfg = srv.cfg.replace(sparse=dataclasses.replace(
+            srv.cfg.sparse, strategy="pallas"))
+        srv._grid_warned.clear()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            for _ in range(5):                # five "decode steps"
+                srv._check_shard_grids((64, 128))
+            srv._check_shard_grids((128, 128))  # one NEW (bucket, shard)
+        msgs = [str(w.message) for w in rec
+                if "degenerate" in str(w.message)]
+        # (64, s0), (128, s1) from the first tuple; (128, s0) new; the
+        # repeated (128, s1) is deduped
+        assert len(msgs) == 3, msgs
 
 
 class TestControllerPersistence:
@@ -446,3 +670,55 @@ class TestControllerPersistence:
                                      2)
         with pytest.raises(ValueError):
             restore_controller(ctl2, mgr)
+
+    def test_2d_topology_mismatch_rejected(self, tmp_path):
+        """Satellite: a checkpoint from one (data, model) grid is rejected
+        on any DIFFERENT grid — wrong model-shard count OR wrong
+        data-shard count, even with the model axis matching."""
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.predictor import AlphaSchedule
+        cc = ControllerConfig(enabled=True)
+        ctl = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
+                                    MS, n_data_shards=2)
+        mgr = CheckpointManager(str(tmp_path))
+        save_controller(ctl, mgr)
+        for ms, ds, pat in ((MS, 1, "topology"), (MS, 4, "topology"),
+                            (2, 2, "mismatch")):
+            # a wrong model-shard count fails the tree-shape check first;
+            # a wrong data-shard count reaches the explicit topology check
+            bad = DistributedController(
+                AlphaController(cc, AlphaSchedule(), 2), ms,
+                n_data_shards=ds)
+            with pytest.raises(ValueError, match=pat):
+                restore_controller(bad, mgr)
+        ok = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
+                                   MS, n_data_shards=2)
+        assert restore_controller(ok, mgr)
+
+    @needs_mesh8
+    def test_2d_mesh_server_restart_resumes_per_shard_state(self, tmp_path):
+        """Satellite: the per-shard bucket state (density AND union-demand
+        EMAs) round-trips through CheckpointManager across a 2D-mesh
+        server restart, and the restored EMAs steer the first
+        _select_bucket."""
+        cfg = CFG_2D.replace(sparse=dataclasses.replace(
+            CFG_2D.sparse, strategy="gather",
+            capacity_buckets=(0.25, 1.0)))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        ccfg = ControllerConfig(enabled=True, target_density=0.25)
+        scfg = ServeConfig(batch=DS, max_len=64, controller=ccfg,
+                           controller_ckpt=str(tmp_path))
+        mesh = make_mesh((2, MS), ("data", "model"))
+        srv1 = Server(lm, cfg, scfg, params, mesh=mesh)
+        srv1.serve(_reqs(n=4, max_new=3))
+        assert srv1.controller._shard_steps > 0
+        srv2 = Server(lm, cfg, scfg, params,
+                      mesh=make_mesh((2, MS), ("data", "model")))
+        np.testing.assert_array_equal(srv2.controller.shard_density_ema,
+                                      srv1.controller.shard_density_ema)
+        np.testing.assert_array_equal(srv2.controller.shard_union_ema,
+                                      srv1.controller.shard_union_ema)
+        assert srv2.controller.n_data_shards == DS
+        assert srv2._active_cap == srv1._active_cap
+        srv2.serve(_reqs(n=2, max_new=3))
+        assert srv2.controller.state.steps > srv1.controller.state.steps
