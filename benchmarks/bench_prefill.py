@@ -1,0 +1,140 @@
+"""Serve-path prefill bench: chunked vs monolithic (DESIGN.md §9).
+
+    PYTHONPATH=src python -m benchmarks.bench_prefill [--quick] \
+        [--out BENCH_prefill.json] [--against BENCH_prefill.json]
+
+Runs the same staggered-prompt-length request queue through the
+slot-refill scheduler twice — monolithic prefill (``prefill_chunk=0``)
+and chunked prefill interleaved with decode — and reports:
+
+* TTFT p50/p95        — admission to first token (the chunked path
+                        admits through fixed-shape executables, so a new
+                        prompt length never pays a trace)
+* ITL p95             — per-request mean inter-token latency,
+                        (latency - ttft) / (tokens - 1); the interleave
+                        knob trades this against TTFT
+* tok/s               — queue tokens over true wall clock
+* chunk_traces        — executable count per (chunk shape, collect)
+                        (the zero-retraces-after-warmup invariant)
+
+CPU wall-clock is a trend proxy, not TPU time.  ``--against`` prints a
+delta table vs a previous run (the nightly diffs against the committed
+seed) without failing the job — timing on shared CI runners is noisy;
+the diff is for eyeballing drift, the invariants are asserted in
+tests/test_prefill_chunked.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.runtime.server import Request, Server, ServeConfig, \
+    throughput_report
+
+
+def _pct(vals: list, q: float) -> float:
+    if not vals:
+        return 0.0
+    vals = sorted(vals)
+    return vals[min(len(vals) - 1, max(0, int(np.ceil(q * len(vals))) - 1))]
+
+
+def _requests(n: int, max_new: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    # staggered lengths: the monolithic path traces one prefill per
+    # distinct length, the chunked path reuses one executable
+    plens = [int(p) for p in rng.integers(8, 96, size=n)]
+    return [Request(uid=i, prompt=rng.integers(0, vocab, size=plens[i]),
+                    max_new=max_new) for i in range(n)]
+
+
+def _serve(cfg, scfg, n_req, max_new):
+    srv = Server(lm, cfg, scfg, lm.init_lm(jax.random.PRNGKey(0), cfg))
+    srv.serve(_requests(2, max_new, cfg.vocab, seed=99))  # warmup traces
+    reqs = _requests(n_req, max_new, cfg.vocab)
+    t0 = time.perf_counter()
+    done = srv.serve(reqs)
+    wall = time.perf_counter() - t0
+    rep = throughput_report(done)
+    itls = [(r.latency_s - r.ttft_s) / max(1, len(r.out) - 1)
+            for r in done if r.ttft_s > 0.0 and len(r.out) > 1]
+    return {
+        "wall_s": wall,
+        "tok_per_s": rep["tokens"] / max(wall, 1e-9),
+        "p50_ttft_s": rep["p50_ttft_s"],
+        "p95_ttft_s": rep["p95_ttft_s"],
+        "p50_itl_s": _pct(itls, 0.5),
+        "p95_itl_s": _pct(itls, 0.95),
+        "p95_queue_wait_s": rep["p95_queue_wait_s"],
+        "chunk_traces": {str(k): v for k, v in srv._prefill_traces.items()},
+    }
+
+
+_DIFF_KEYS = ("tok_per_s", "p50_ttft_s", "p95_ttft_s", "p95_itl_s")
+
+
+def _print_diff(old: dict, new: dict) -> None:
+    for side in ("monolithic", "chunked"):
+        o, n = old.get(side, {}), new.get(side, {})
+        for k in _DIFF_KEYS:
+            if k in o and k in n and o[k]:
+                delta = (n[k] - o[k]) / o[k] * 100.0
+                print(f"bench_prefill_diff,{side},{k},"
+                      f"old={o[k]:.5f},new={n[k]:.5f},delta={delta:+.1f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_prefill.json")
+    ap.add_argument("--against", default="",
+                    help="previous BENCH_prefill.json to diff against "
+                         "(informational; never fails)")
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--interleave", type=int, default=2)
+    args = ap.parse_args()
+
+    d = 64 if args.quick else 128
+    cfg = ModelConfig(name="bench-prefill", family="dense", vocab=512,
+                      d_model=d, n_layers=4, n_heads=4, n_kv_heads=4,
+                      d_ff=4 * d, max_seq=256, dtype="float32",
+                      param_dtype="float32", attn_chunk=256, remat=False)
+    n_req = 8 if args.quick else 16
+    max_new = 8 if args.quick else 16
+    mk = lambda pc: ServeConfig(batch=4, max_len=256, prefill_chunk=pc,
+                                prefill_interleave=args.interleave)
+    report = {
+        "shape": {"d_model": d, "n_layers": 4, "batch": 4, "max_len": 256,
+                  "requests": n_req, "max_new": max_new,
+                  "chunk": args.chunk, "interleave": args.interleave},
+        "backend": jax.default_backend(),
+        "monolithic": _serve(cfg, mk(0), n_req, max_new),
+        "chunked": _serve(cfg, mk(args.chunk), n_req, max_new),
+        "generated_unix": time.time(),
+    }
+    for side in ("monolithic", "chunked"):
+        r = report[side]
+        print(f"bench_prefill,{side},tok_per_s={r['tok_per_s']:.1f},"
+              f"p50_ttft_s={r['p50_ttft_s']:.4f},"
+              f"p95_ttft_s={r['p95_ttft_s']:.4f},"
+              f"p95_itl_s={r['p95_itl_s']:.5f},"
+              f"traces={r['chunk_traces']}")
+    if args.against:
+        try:
+            with open(args.against) as f:
+                _print_diff(json.load(f), report)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_prefill_diff,skipped: {e}")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

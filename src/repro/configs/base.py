@@ -86,6 +86,14 @@ class ControllerConfig:
                                     # executable count stays len(ladder)
     shard_slack: float = 1.3        # per-shard bucket hint headroom over the
                                     # observed shard-local union demand
+    # --- sparse chunked prefill telemetry rider (DESIGN.md §9) ------------
+    prefill_weight: float = 0.25    # weight of the prefill-density error in
+                                    # the alpha update relative to the decode
+                                    # density error: prefill chunks fold their
+                                    # realized density into a separate EMA and
+                                    # nudge alpha at this fraction of the
+                                    # decode gain (0 = observe-only; prefill
+                                    # telemetry never drives alpha)
 
 
 @dataclasses.dataclass(frozen=True)

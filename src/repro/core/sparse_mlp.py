@@ -40,6 +40,16 @@ class SparseInferConfig:
     group_size: int = 8               # TPU row-group granularity G
     use_actual_sparsity: bool = True  # paper's +AS
     sparse_max_batch: int = 16        # union-mask regime bound (per device)
+    # Sequence-axis extension (DESIGN.md §9): apply the predictor during
+    # chunked prefill too ("ReLU Strikes Back" — ReLU-fied models are sparse
+    # in prefill as well).  Per-position margins reduce through the same
+    # batch-union selection the decode strategies use (a chunk is just a
+    # batch of token rows), so one group-union serves the whole chunk.
+    sparse_prefill: bool = False
+    # Per-device token bound for a sparse prefill chunk (the union loosens
+    # with more rows, so bigger chunks than this run dense; mirrors
+    # sparse_max_batch for the decode regime).
+    prefill_max_tokens: int = 128
     fatrelu_threshold: float = 0.0
     local_selection: bool = True      # per-TP-shard top-C (no cross-shard
                                       # gather; EXPERIMENTS.md §Perf iter 2)
@@ -209,6 +219,14 @@ SHARD_STAT_KEY = "shard_realized_density"
 # bucket ladder must cover
 SHARD_UNION_KEY = "shard_union_frac"
 SHARD_RIDER_KEYS = (SHARD_STAT_KEY, SHARD_UNION_KEY)
+
+
+# Sentinel alpha that makes ANY row predict all-sparse (margin strictly
+# positive for every neuron), dropping it from the batch/chunk union
+# selection.  The slot-refill scheduler drains finished or mid-prefill slots
+# with it (runtime/server.py re-exports); the chunked-prefill path assigns it
+# to pad positions so prompt padding never inflates the union (DESIGN.md §9).
+DEAD_SLOT_ALPHA = -1e9
 
 
 def zero_mlp_stats(shape: tuple = (), tp_shards: int = 0) -> dict:
@@ -438,12 +456,19 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     if sign_wg is None:
         sign_wg = P.pack_signs(params["wg_t"])
     a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
-    gm_tok, pred_cnt = kops.predict_group_margins(
+    # chunk-token regime (sequence-axis prefill, DESIGN.md §9): beyond the
+    # decode kernels' resident-batch budget, the token/row-tiled twins take
+    # over — identical contracts, bitwise-equal per-row results
+    chunked = b > cfg.sparse_max_batch
+    predict = (kops.predict_chunk_group_margins if chunked
+               else kops.predict_group_margins)
+    fused = kops.fused_sparse_mlp_chunk if chunked else kops.fused_sparse_mlp
+    gm_tok, pred_cnt = predict(
         sign_wg, xb, d, a, group_size=g, interpret=interpret)
-    gm = S.union_margin(gm_tok)                   # (k/g,) batch union
+    gm = S.union_margin(gm_tok)                   # (k/g,) batch/chunk union
     sel, sstats = S.capacity_select_with_stats(gm, cap)
 
-    out = kops.fused_sparse_mlp(
+    out = fused(
         xb, params["wg_t"], params.get("wu_t"), params["wd_t"],
         sel.indices, sel.count, gm_tok if return_stats else None,
         group_size=g, activation=cfg.activation,

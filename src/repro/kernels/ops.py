@@ -95,6 +95,34 @@ def predict_group_margins(packed_w: jax.Array, x: jax.Array, d_valid: int,
         interpret=interp, block_k=bk)
 
 
+def predict_chunk_group_margins(packed_w: jax.Array, x: jax.Array,
+                                d_valid: int,
+                                alpha: float | jax.Array = 1.0, *,
+                                group_size: int = 8,
+                                interpret: Optional[bool] = None):
+    """Chunked-prefill predictor (DESIGN.md §9): token-tiled twin of
+    :func:`predict_group_margins` with the identical output contract, for
+    row counts (a 64–128-token chunk) that would blow the decode kernel's
+    resident-batch VMEM budget.  Falls back to the jnp oracle on degenerate
+    tilings, exactly like the decode wrapper.
+    """
+    interp = _resolve_interpret(interpret)
+    k, w = packed_w.shape
+    b = x.shape[0]
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
+    try:
+        bt = _predict.choose_block_tokens(b)
+        bk = _predict.choose_block_k(k, w, bt, group_size)
+    except ValueError:   # degenerate tiling: explicit error -> oracle
+        return ref.predict_chunk_group_margins_ref(packed_w, x, d_valid, a,
+                                                   group_size)
+    pad = w * _predict.PACK - x.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    return _predict.predict_chunk_group_margins(
+        packed_w, xp, a, d_valid=d_valid, group_size=group_size,
+        interpret=interp, block_k=bk, block_t=bt)
+
+
 def fused_sparse_mlp(x: jax.Array,
                      wg_t: jax.Array,
                      wu_t: Optional[jax.Array],
@@ -123,6 +151,40 @@ def fused_sparse_mlp(x: jax.Array,
         group_size=group_size, activation=activation,
         fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
         interpret=interp, groups_per_step=groups_per_step)
+
+
+def fused_sparse_mlp_chunk(x: jax.Array,
+                           wg_t: jax.Array,
+                           wu_t: Optional[jax.Array],
+                           wd_t: jax.Array,
+                           sel_indices: jax.Array,
+                           sel_count: jax.Array,
+                           gm_tok: Optional[jax.Array] = None,
+                           *,
+                           group_size: int = 8,
+                           activation: str = "relu",
+                           fatrelu_threshold: float = 0.0,
+                           collect_stats: bool = False,
+                           interpret: Optional[bool] = None,
+                           groups_per_step: int = 0):
+    """Row-tiled fused sparse MLP for prefill chunks (DESIGN.md §9): one
+    chunk-union selection drives every row block; per-row outputs and
+    telemetry are bitwise-equal to :func:`fused_sparse_mlp` on the same
+    selection.  Degenerate row tilings fall back to the jnp oracle.
+    """
+    interp = _resolve_interpret(interpret)
+    try:
+        bt = _fused.choose_block_rows(x.shape[0], x.shape[1])
+    except ValueError:   # degenerate tiling: explicit error -> oracle
+        return ref.fused_sparse_mlp_chunk_ref(
+            x, wg_t, wu_t, wd_t, sel_indices, sel_count, gm_tok,
+            group_size=group_size, activation=activation,
+            fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats)
+    return _fused.fused_sparse_mlp_chunk(
+        x, wg_t, wu_t, wd_t, sel_indices, sel_count, gm_tok,
+        group_size=group_size, activation=activation,
+        fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
+        interpret=interp, groups_per_step=groups_per_step, block_rows=bt)
 
 
 class BlockPlan(NamedTuple):

@@ -138,6 +138,102 @@ def _make_group_margins_kernel(d_valid: int, group_size: int):
     return kernel
 
 
+def choose_block_tokens(b: int, max_tokens: int = 128) -> int:
+    """Token-tile for the chunked predictor: largest divisor of ``b`` not
+    exceeding ``max_tokens`` (chunks are MXU-aligned so this is normally
+    just min(b, 128))."""
+    if b <= 0:
+        raise ValueError(f"chunk predictor needs b > 0, got {b}")
+    bt = min(b, max_tokens)
+    while bt > 1 and b % bt:
+        bt -= 1
+    return bt
+
+
+def _make_chunk_group_margins_kernel(d_valid: int, group_size: int):
+    """Token-tiled twin of ``_make_group_margins_kernel`` for prefill
+    chunks (DESIGN.md §9): grid is (token_blocks, k_blocks) with k as the
+    FAST axis, so each count block's revisits are consecutive (TPU output
+    revisit rule) — gm blocks are written exactly once at (i, j), the count
+    block at i accumulates over j.  Same margin op sequence, so selections
+    stay bitwise-aligned with the decode predictor and the jnp oracle.
+    """
+    def kernel(x_ref, pw_ref, alpha_ref, gm_ref, cnt_ref):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        x = x_ref[...]                                   # (bt, dp)
+        b, dp = x.shape
+        bits = (x < 0).astype(jnp.uint32)
+        bits = bits.reshape(b, dp // PACK, PACK)
+        weights = jnp.uint32(1) << jnp.arange(PACK, dtype=jnp.uint32)
+        px = jnp.sum(bits * weights, axis=-1,
+                     dtype=jnp.uint32).astype(jnp.int32)  # (bt, w)
+
+        pw = pw_ref[...]                                 # (bk, w)
+        xor = jnp.bitwise_xor(px[:, None, :], pw[None, :, :])
+        n_neg = jnp.sum(jax.lax.population_count(xor), axis=-1,
+                        dtype=jnp.int32).astype(jnp.float32)      # (bt, bk)
+        a = alpha_ref[...]                               # (bt, 1)
+        m = n_neg - a * (jnp.float32(d_valid) - n_neg)
+        bk = m.shape[-1]
+        gm = m.reshape(b, bk // group_size, group_size).min(-1)
+        gm_ref[...] = gm                                 # (bt, bk/G)
+        cnt_ref[...] += jnp.sum(gm <= 0, axis=-1,
+                                dtype=jnp.int32)[:, None]
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_valid", "group_size", "interpret", "block_k",
+                     "block_t"))
+def predict_chunk_group_margins(packed_w: jax.Array,
+                                x: jax.Array,
+                                alpha: jax.Array,
+                                *,
+                                d_valid: int,
+                                group_size: int = 8,
+                                interpret: bool = True,
+                                block_k: int | None = None,
+                                block_t: int | None = None):
+    """Chunked-prefill predictor: same contract as ``predict_group_margins``
+    ((B, k/G) per-row group margins + (B,) predicted counts) but tiled over
+    the token axis as well, so a 64–128-token chunk never blows the VMEM
+    budget that caps the decode kernel's resident batch.
+    """
+    k, w = packed_w.shape
+    b, dp = x.shape
+    assert dp == w * PACK, (dp, w)
+    assert k % group_size == 0, (k, group_size)
+    bt = block_t or choose_block_tokens(b)
+    bk = block_k or choose_block_k(k, w, bt, group_size)
+    grid = (b // bt, k // bk)
+    a = jnp.reshape(alpha.astype(jnp.float32), (b, 1))
+    gm, cnt = pl.pallas_call(
+        _make_chunk_group_margins_kernel(d_valid, group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, bk // group_size), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((b, k // group_size), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x, packed_w, a)
+    return gm, cnt[:, 0]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("d_valid", "group_size", "interpret", "block_k"))

@@ -30,6 +30,16 @@ def predict_group_margins_ref(packed_w: jax.Array, x: jax.Array,
     return gm, cnt
 
 
+def predict_chunk_group_margins_ref(packed_w: jax.Array, x: jax.Array,
+                                    d_valid: int, alpha: jax.Array,
+                                    group_size: int = 8):
+    """Oracle for kernels.predict.predict_chunk_group_margins: the chunked
+    (token-tiled) predictor computes per-ROW results, so its oracle is the
+    decode predictor's oracle verbatim — the tiling must not change a single
+    bit of any row (DESIGN.md §9)."""
+    return predict_group_margins_ref(packed_w, x, d_valid, alpha, group_size)
+
+
 def fused_mlp_telemetry_ref(x: jax.Array,
                             wg_t: jax.Array,
                             sel_indices: jax.Array,
@@ -103,3 +113,31 @@ def fused_sparse_mlp_ref(x: jax.Array,
                            take(wu_t).astype(jnp.float32))
     y = jnp.einsum("bn,nd->bd", h, take(wd_t).astype(jnp.float32))
     return y.astype(jnp.float32)
+
+
+def fused_sparse_mlp_chunk_ref(x: jax.Array,
+                               wg_t: jax.Array,
+                               wu_t: jax.Array | None,
+                               wd_t: jax.Array,
+                               sel_indices: jax.Array,
+                               sel_count: jax.Array,
+                               gm_tok: jax.Array | None = None,
+                               *,
+                               group_size: int = 8,
+                               activation: str = "relu",
+                               fatrelu_threshold: float = 0.0,
+                               collect_stats: bool = False):
+    """Oracle for kernels.sparse_mlp_fused.fused_sparse_mlp_chunk: per-row
+    math is row-tiling-invariant, so it composes the untiled MLP oracle with
+    the telemetry oracle (matching the chunked kernel's (y, tel) contract
+    when ``collect_stats``)."""
+    y = fused_sparse_mlp_ref(x, wg_t, wu_t, wd_t, sel_indices, sel_count,
+                             group_size=group_size, activation=activation,
+                             fatrelu_threshold=fatrelu_threshold)
+    if not collect_stats:
+        return y
+    tel = fused_mlp_telemetry_ref(x, wg_t, sel_indices, sel_count, gm_tok,
+                                  group_size=group_size,
+                                  activation=activation,
+                                  fatrelu_threshold=fatrelu_threshold)
+    return y, tel

@@ -58,7 +58,14 @@ def _telemetry_delta(ga, keep):
 
 
 def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool,
-                 collect_stats: bool, groups_per_step: int = 1):
+                 collect_stats: bool, groups_per_step: int = 1,
+                 sel_axis: int = 0):
+    """``sel_axis``: which grid axis walks the selection.  The decode kernel
+    uses a 1-D grid (axis 0); the chunked-prefill kernel adds a slow
+    row-block axis in front and walks the selection on axis 1, so each row
+    block's accumulator sees i==0 (init) at its first visit and the
+    accumulation order over selected groups is identical to the decode
+    kernel's — per-row results are bitwise-equal across the two tilings."""
     act = get_activation(
         "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
         else activation, fatrelu_threshold)
@@ -73,7 +80,7 @@ def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool,
         else:
             (y_ref,) = rest
             tel_ref = None
-        i = pl.program_id(0)
+        i = pl.program_id(sel_axis)
 
         @pl.when(i == 0)
         def _init():
@@ -211,6 +218,108 @@ def fused_sparse_mlp(x: jax.Array,
     )
     kernel = _make_kernel(activation, fatrelu_threshold, gated,
                           collect_stats, gps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sel_indices.astype(jnp.int32), cnt, *operands)
+
+
+def choose_block_rows(b: int, d: int, max_vmem: int = 4 * 1024 * 1024) -> int:
+    """Row-block height for the chunked fused MLP: largest divisor of ``b``
+    whose (bt, d) f32 accumulator stays under ~``max_vmem``."""
+    if b <= 0 or d <= 0:
+        raise ValueError(f"chunk MLP tiling needs b,d > 0, got b={b} d={d}")
+    budget = max(1, max_vmem // (4 * d))
+    bt = min(b, budget, 128)
+    while bt > 1 and b % bt:
+        bt -= 1
+    return bt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "activation", "fatrelu_threshold",
+                     "collect_stats", "interpret", "groups_per_step",
+                     "block_rows"))
+def fused_sparse_mlp_chunk(x: jax.Array,
+                           wg_t: jax.Array,
+                           wu_t: jax.Array | None,
+                           wd_t: jax.Array,
+                           sel_indices: jax.Array,
+                           sel_count: jax.Array,
+                           gm_tok: jax.Array | None = None,
+                           *,
+                           group_size: int = 8,
+                           activation: str = "relu",
+                           fatrelu_threshold: float = 0.0,
+                           collect_stats: bool = False,
+                           interpret: bool = True,
+                           groups_per_step: int = 0,
+                           block_rows: int = 0):
+    """Row-tiled twin of :func:`fused_sparse_mlp` for prefill chunks
+    (DESIGN.md §9): grid (row_blocks, cap/gps) with the SELECTION as the
+    fast axis, so each row block's accumulator initializes once and folds
+    the selected groups in the same order as the decode kernel — per-row
+    outputs and telemetry are bitwise-equal to the untiled kernel.  One
+    chunk-union selection (the caller unions margins over the chunk) drives
+    the weight DMAs for every row block, so selected weights stream once
+    per row block instead of once per token.
+    """
+    b, d = x.shape
+    k = wg_t.shape[0]
+    g = group_size
+    assert k % g == 0
+    cap = sel_indices.shape[0]
+    gated = wu_t is not None
+    if collect_stats:
+        assert gm_tok is not None and gm_tok.shape == (b, k // g), (
+            "collect_stats needs per-token group margins (B, k/G)")
+    gps = groups_per_step or mlp_groups_per_step(cap, g)
+    if cap % gps:
+        raise ValueError(
+            f"groups_per_step={gps} must divide the selection capacity "
+            f"{cap} (per-bucket tiling, DESIGN.md §2)")
+    bt = block_rows or choose_block_rows(b, d)
+    if b % bt:
+        raise ValueError(f"block_rows={bt} must divide the chunk rows {b}")
+
+    cnt = jnp.reshape(sel_count.astype(jnp.int32), (1,))
+    in_specs = [pl.BlockSpec((bt, d), lambda r, i, sel, cnt: (r, 0))]
+    operands = [x]
+    for j in range(gps):
+        w_spec = pl.BlockSpec(
+            (g, d), lambda r, i, sel, cnt, j=j: (sel[i * gps + j], 0))
+        in_specs.append(w_spec)
+        operands.append(wg_t)
+        if gated:
+            in_specs.append(w_spec)
+            operands.append(wu_t)
+        in_specs.append(w_spec)
+        operands.append(wd_t)
+        if collect_stats:
+            in_specs.append(pl.BlockSpec(
+                (bt, 1), lambda r, i, sel, cnt, j=j: (r, sel[i * gps + j])))
+            operands.append(gm_tok.astype(jnp.float32))
+    out_specs = pl.BlockSpec((bt, d), lambda r, i, sel, cnt: (r, 0))
+    out_shape = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    if collect_stats:
+        out_specs = [out_specs,
+                     pl.BlockSpec((bt, len(TELEMETRY_COLS)),
+                                  lambda r, i, sel, cnt: (r, 0))]
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((b, len(TELEMETRY_COLS)),
+                                          jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b // bt, cap // gps),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    kernel = _make_kernel(activation, fatrelu_threshold, gated,
+                          collect_stats, gps, sel_axis=1)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

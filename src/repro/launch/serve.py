@@ -117,6 +117,23 @@ def main() -> None:
     ap.add_argument("--warm-buckets", action="store_true",
                     help="compile every capacity bucket before serving so "
                          "the first switches never stall a request")
+    # chunked prefill unified with decode (DESIGN.md §9)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="fixed prefill chunk size in tokens (MXU-aligned "
+                         "64/128; must divide --max-len).  0 = monolithic "
+                         "prefill.  Slot-refill streams admissions through "
+                         "one pre-jitted chunk executable interleaved with "
+                         "decode steps (no per-prompt-length retraces); the "
+                         "legacy chunked scheduler pads prompt lengths to "
+                         "the chunk ladder")
+    ap.add_argument("--prefill-interleave", type=int, default=1,
+                    help="max prefill chunks advanced per decode-loop "
+                         "iteration — the TTFT-vs-ITL knob (higher = "
+                         "faster admission, more decode-step jitter)")
+    ap.add_argument("--sparse-prefill", action="store_true",
+                    help="extend sign-bit sparse prediction to prefill "
+                         "chunks (one chunk-union selection per chunk; "
+                         "requires --prefill-chunk)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -131,6 +148,14 @@ def main() -> None:
         buckets = tuple(float(v) for v in args.capacity_buckets.split(","))
         cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, capacity_buckets=buckets))
+    if args.sparse_prefill:
+        if not args.prefill_chunk:
+            raise SystemExit("--sparse-prefill needs --prefill-chunk "
+                             "(chunk-union selection is per prefill chunk)")
+        cfg = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, sparse_prefill=True,
+            prefill_max_tokens=max(cfg.sparse.prefill_max_tokens,
+                                   args.prefill_chunk)))
     mesh = parse_mesh(args.mesh)
     serve_mesh = None
     if args.mesh_shape:
@@ -165,6 +190,9 @@ def main() -> None:
                                            slot_refill=args.slot_refill,
                                            controller=ccfg,
                                            warm_buckets=args.warm_buckets,
+                                           prefill_chunk=args.prefill_chunk,
+                                           prefill_interleave=args
+                                           .prefill_interleave,
                                            controller_ckpt=args
                                            .controller_ckpt),
                      params, extra_inputs=extra, mesh=serve_mesh)
@@ -195,6 +223,15 @@ def main() -> None:
                 cfg.sparse.capacity_ladder(cfg.d_ff))
             rep["sparse"]["active_bucket"] = getattr(srv, "_active_cap",
                                                      None)
+        if args.prefill_chunk:
+            rep["prefill"] = {
+                "chunk": args.prefill_chunk,
+                "interleave": args.prefill_interleave,
+                "sparse": bool(args.sparse_prefill),
+                # one trace per chunk SHAPE after warmup (zero retraces)
+                "chunk_traces": {str(k): v
+                                 for k, v in srv._prefill_traces.items()},
+            }
         if srv.controller is not None:
             rep["controller"] = srv.controller.report()
         print(json.dumps(rep, indent=1))

@@ -156,11 +156,21 @@ def attend(params: dict, x: jax.Array, cfg: AttentionConfig,
            positions: jax.Array, kv_x: Optional[jax.Array] = None,
            kv_positions: Optional[jax.Array] = None,
            q_chunk: int = 1024, kv_chunk: int = 1024,
-           return_kv: bool = False):
+           return_kv: bool = False, kv_pad_to: int = 0):
     """Full training/prefill attention (self or cross). x: (B, S, d).
 
     ``return_kv=True`` additionally returns the (roped) K/V for KV-cache
     seeding during prefill.
+
+    ``kv_pad_to`` (prefill only; ignored for cross-attn): zero-pad the KV
+    operand to this fixed width with causally-masked positions before the
+    flash scan.  Softmax reductions on XLA are only bitwise-reproducible at
+    a fixed width (a length-S and a length-max_len reduction of the same
+    live values tree differently), so monolithic prefill pads to the cache
+    width here and chunked prefill (``chunk_attend``) attends the cache at
+    that same width — the bitwise-parity contract of DESIGN.md §9.  Masked
+    pad lanes are exact +0.0 after exp and never perturb the live values.
+    The returned K/V are unpadded.
     """
     from repro.layers.rope import apply_rope
     from repro.sharding import rules as R
@@ -170,14 +180,27 @@ def attend(params: dict, x: jax.Array, cfg: AttentionConfig,
     if not cfg.cross:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, kv_positions, cfg.rope_theta)
-    q, k, v = R.shard_heads(q), R.shard_heads(k), R.shard_heads(v)
+    k, v = R.shard_heads(k), R.shard_heads(v)
+    kv_ret = (k, v)
+    s_kv = k.shape[1]
+    if kv_pad_to and kv_pad_to > s_kv and not cfg.cross:
+        pad = ((0, 0), (0, kv_pad_to - s_kv), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        # pad positions follow contiguously past the live ones, so they sit
+        # strictly above every query position and the causal mask drops them
+        kv_positions = jnp.concatenate([
+            jnp.asarray(kv_positions, jnp.int32),
+            jnp.asarray(kv_positions, jnp.int32)[-1] + 1
+            + jnp.arange(kv_pad_to - s_kv, dtype=jnp.int32)])
+    q = R.shard_heads(q)
     out = flash_attention(q, k, v, cfg, positions, kv_positions,
                           q_chunk, kv_chunk)
     b, s = x.shape[0], x.shape[1]
     out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
     out = out @ params["wo"].astype(x.dtype)
     if return_kv:
-        return out, (k, v)
+        return out, kv_ret
     return out
 
 
@@ -346,6 +369,69 @@ def decode_attend(params: dict, x: jax.Array, cfg: AttentionConfig,
 
 def q_pos_sentinel(s_max: int, cache_len: jax.Array) -> jax.Array:
     return jnp.int32(s_max) + cache_len + 1
+
+
+def chunk_attend(params: dict, x: jax.Array, cfg: AttentionConfig,
+                 cache: dict, offset: jax.Array,
+                 valid: Optional[jax.Array] = None,
+                 q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Chunked-prefill attention: an S-token chunk at sequence ``offset``
+    attends the KV cache (every previously written chunk plus itself).
+
+    x: (B, S, d); ``offset`` is a scalar — the prefill scratch layout where
+    all rows sit at the same chunk boundary.  ``valid`` (scalar or (B,)) is
+    the total number of real prompt tokens; chunk rows at absolute position
+    >= valid are padding.  Their K/V are zeroed before the cache write so
+    the spliced cache stays bitwise-identical to a monolithic prefill (pad
+    positions match the zero-initialized cache) — decode additionally masks
+    them by cache_len, so correctness never depends on the zeroing, only
+    the parity guarantee does.
+
+    Chunks must be written in order from offset 0: positions beyond
+    offset+S are excluded causally, so stale cache content is never
+    attended and the scratch cache needs no re-zeroing between requests.
+
+    Bitwise parity with monolithic ``attend`` relies on masked lanes being
+    exact +0.0 after exp (NEG_INF scores) so they never perturb the flash
+    accumulation, plus both paths seeing a single KV block (kv_chunk >=
+    live length).  tests/test_prefill_chunked.py pins it.
+
+    Returns (out (B, S, d), new_cache).
+    """
+    from repro.layers.rope import apply_rope
+    from repro.sharding import rules as R
+    b, s = x.shape[0], x.shape[1]
+    off = jnp.asarray(offset, jnp.int32)
+    q_pos = off + jnp.arange(s, dtype=jnp.int32)             # (S,)
+    q, k, v = _project_qkv(params, x, cfg)
+    if not cfg.cross:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+    if valid is not None:
+        vld = jnp.asarray(valid, jnp.int32)
+        live = q_pos < (vld[:, None] if vld.ndim else vld)   # (B,S) or (S,)
+        if live.ndim == 1:
+            live = live[None, :]
+        live = live[:, :, None, None]
+        k = jnp.where(live, k, jnp.zeros_like(k))
+        v = jnp.where(live, v, jnp.zeros_like(v))
+    cache = update_kv_cache(cache, k, v, off)
+    s_max = cache["k"].shape[1]
+    k_pos = jnp.arange(s_max, dtype=jnp.int32)
+    ck, cv = cache["k"], cache["v"]
+    if ck.dtype == jnp.int8:
+        ck = (ck.astype(jnp.float32)
+              * cache["k_scale"].astype(jnp.float32)[..., None]).astype(x.dtype)
+        cv = (cv.astype(jnp.float32)
+              * cache["v_scale"].astype(jnp.float32)[..., None]).astype(x.dtype)
+    else:
+        ck, cv = ck.astype(x.dtype), cv.astype(x.dtype)
+    q, ck, cv = R.shard_heads(q), R.shard_heads(ck), R.shard_heads(cv)
+    out = flash_attention(q, ck, cv, cfg, q_pos, k_pos,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, cache
 
 
 def cross_decode_attend(params: dict, x: jax.Array, cfg: AttentionConfig,

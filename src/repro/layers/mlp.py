@@ -20,10 +20,14 @@ def init_mlp(key: jax.Array, d: int, k: int, gated: bool = True,
 
 
 def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
-              *, decode: bool = False, alpha: jax.Array | float | None = None,
+              *, decode: bool = False, prefill: bool = False,
+              alpha: jax.Array | float | None = None,
               layer_idx: int = 0, num_layers: int = 1,
               return_stats: bool = False):
-    """x: (..., d). Dense unless (decode and cfg.enabled).
+    """x: (..., d). Dense unless (decode and cfg.enabled) or — the
+    sequence-axis extension (DESIGN.md §9) — (prefill and cfg.enabled and
+    cfg.sparse_prefill), where a chunk's token rows run through the same
+    batch-union machinery as a decode batch.
 
     ``alpha`` overrides the per-layer schedule (used under scan-over-layers
     where layer_idx is traced: the schedule is precomputed into an array; the
@@ -57,7 +61,12 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
             return y.reshape(shape).astype(x.dtype), stats
         return out.reshape(shape).astype(x.dtype)
 
-    if not (decode and cfg.enabled):
+    sparse = cfg.enabled and (decode or (prefill and cfg.sparse_prefill))
+    if prefill and (cfg.tp_shards or cfg.dp_shards):
+        # the sharded decode formulation's row layout is batch slots, not
+        # chunk tokens — sparse prefill under TP/DP stays dense for now
+        sparse = False
+    if not sparse:
         return finish(SM.dense_mlp(params, x, cfg, return_stats=return_stats))
     xf = x.reshape(-1, shape[-1])
     # union-mask regime bound is PER-DEVICE tokens (DESIGN.md §2): under a
@@ -67,9 +76,11 @@ def mlp_apply(params: dict, x: jax.Array, cfg: SparseInferConfig,
     mesh = R.current_mesh()
     dp = R.axis_size(mesh, R.data_axes(mesh)) if mesh is not None else 1
     n = xf.shape[0]
-    if n > cfg.sparse_max_batch * dp:
+    # a prefill chunk is many rows; its union bound is its own knob
+    max_rows = cfg.prefill_max_tokens if prefill else cfg.sparse_max_batch
+    if n > max_rows * dp:
         out = SM.dense_mlp(params, xf, cfg, return_stats=return_stats)
-    elif (cfg.strategy == "gather" and n > cfg.sparse_max_batch
+    elif (cfg.strategy == "gather" and decode and n > cfg.sparse_max_batch
           and n % dp == 0 and dp > 1
           and not (cfg.tp_shards or cfg.dp_shards)):
         xg = xf.reshape(dp, n // dp, shape[-1])

@@ -85,9 +85,12 @@ def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
 def _dec_block_fwd(blk, x, cfg, positions, enc_out, enc_positions, aux,
                    collect: bool, max_len: int):
     h = C.norm_apply(cfg, blk["ln1"], x)
+    # kv_pad_to: prefill (collect) reduces the self-attn softmax at the
+    # cache width, bitwise-matching chunked prefill (DESIGN.md §9);
+    # training (collect=False, max_len=0) is untouched
     h, kv = A.attend(blk["attn"], h, C.attn_cfg(cfg), positions,
                      q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
-                     return_kv=True)
+                     return_kv=True, kv_pad_to=max_len if collect else 0)
     x = R.shard_activations(x + h, sp=cfg.sp_activations)
     h = C.norm_apply(cfg, blk["ln_x"], x)
     ccfg = C.attn_cfg(cfg, cross=True)
@@ -151,6 +154,94 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     logits = C.head_logits(hidden[:, -1], LM._head_table(params),
                            cfg.final_softcap)
     return logits, caches
+
+
+# The scheduler may stream decoder prompts through prefill_chunk; the
+# encoder runs ONCE per admission (the server precomputes ``enc_out`` via
+# ``encode`` and passes the states to every chunk — DESIGN.md §9).
+CHUNK_PREFILL_FAMILIES = ("encdec",)
+
+
+def _dec_block_chunk_fwd(blk, x, cfg, cache, offset, valid, enc_out, q_pos,
+                         tok_mask, alpha, collect_stats: bool = False):
+    """One decoder block over a fixed-size prefill chunk: self-attention
+    streams K/V into the decode cache at ``offset`` (``chunk_attend``);
+    cross-attention re-runs against the precomputed encoder states (per-row
+    independent, so chunking cannot change any row) and returns the same
+    cross (k, v) on every chunk for the idempotent cache write."""
+    from repro.core import sparse_mlp as SM
+    h = C.norm_apply(cfg, blk["ln1"], x)
+    h, cache = A.chunk_attend(blk["attn"], h, C.attn_cfg(cfg), cache,
+                              offset, valid, q_chunk=cfg.attn_chunk,
+                              kv_chunk=cfg.attn_chunk)
+    x = R.shard_activations(x + h, sp=cfg.sp_activations)
+    h = C.norm_apply(cfg, blk["ln_x"], x)
+    ccfg = C.attn_cfg(cfg, cross=True)
+    h, ckv = A.attend(blk["cross"], h, ccfg, q_pos, kv_x=enc_out,
+                      kv_positions=jnp.arange(enc_out.shape[1]),
+                      q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                      return_kv=True)
+    x = R.shard_activations(x + h, sp=cfg.sp_activations)
+    h = C.norm_apply(cfg, blk["ln2"], x)
+    al = jnp.asarray(alpha, jnp.float32)
+    if al.ndim == 1:                                       # per-slot (B,)
+        al = al[:, None]
+    a_tok = jnp.where(tok_mask, al, SM.DEAD_SLOT_ALPHA).reshape(-1)
+    stats = None
+    if collect_stats:
+        h, st = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg),
+                          prefill=True, alpha=a_tok, return_stats=True)
+        stats = jax.tree.map(lambda a: LM._chunk_stat_mean(a, tok_mask), st)
+    else:
+        h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg),
+                      prefill=True, alpha=a_tok)
+    x = R.shard_activations(x + h, sp=cfg.sp_activations)
+    return x, cache, ckv, stats
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  caches: dict, offset: jax.Array, valid: jax.Array,
+                  enc_out: jax.Array, *, alphas=None,
+                  collect_stats: bool = False):
+    """One fixed-size decoder prefill chunk — the enc-dec twin of
+    ``models.lm.prefill_chunk`` (same contract: traced ``offset``, (B,)
+    ``valid``, chunks in order from 0).  ``enc_out`` is the PRECOMPUTED
+    encoder output (``encode``) — the encoder must not re-run per chunk."""
+    tokens = R.shard_tokens(tokens)
+    x = LM._embed_in(params, cfg, tokens)
+    b, s = tokens.shape
+    off = jnp.asarray(offset, jnp.int32)
+    vld = jnp.asarray(valid, jnp.int32)
+    if vld.ndim == 0:
+        vld = jnp.full((b,), vld, jnp.int32)
+    pos = off + jnp.arange(s, dtype=jnp.int32)
+    tok_mask = pos[None, :] < vld[:, None]                    # (B, S)
+    if alphas is None:
+        alphas = jnp.asarray(LM._alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
+
+    def body(x, xs):
+        blk, sc, al = xs
+        x, sc, ckv, st = _dec_block_chunk_fwd(
+            blk, x, cfg, sc, off, vld, enc_out, pos, tok_mask, al,
+            collect_stats=collect_stats)
+        return x, (sc, {"k": ckv[0], "v": ckv[1]}, st)
+
+    x, (new_self, new_cross, stats) = jax.lax.scan(
+        body, x, (params["dec_blocks"], caches["self"],
+                  alphas[:cfg.n_layers]))
+    new_caches = {"self": new_self,
+                  "cross": jax.tree.map(
+                      lambda a, f: a.astype(f.dtype), new_cross,
+                      caches["cross"])}
+    x = C.norm_apply(cfg, params["final_norm"], x)
+    last = jnp.clip(vld - 1 - off, 0, s - 1)                  # (B,)
+    xl = x[jnp.arange(b), last]
+    logits = C.head_logits(xl, LM._head_table(params), cfg.final_softcap)
+    if collect_stats:
+        return logits, new_caches, stats
+    return logits, new_caches
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:

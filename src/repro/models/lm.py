@@ -167,8 +167,12 @@ def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
 # --------------------------------------------------------- dense/moe fwd --
 
 def _block_fwd(blk, x, cfg: ModelConfig, positions, window, aux,
-               cache=None, lora=None):
-    """One transformer block (train/prefill). Returns (x, aux, kv or None)."""
+               cache=None, lora=None, kv_pad_to: int = 0):
+    """One transformer block (train/prefill). Returns (x, aux, kv or None).
+
+    ``kv_pad_to``: prefill passes the cache width so the softmax reduces at
+    the same fixed width as chunked prefill (bitwise parity, DESIGN.md §9);
+    training leaves it 0."""
     h = C.norm_apply(cfg, blk["ln1"], x)
     acfg = C.attn_cfg(cfg, window=window)
     attn_params = blk["attn"]
@@ -178,7 +182,7 @@ def _block_fwd(blk, x, cfg: ModelConfig, positions, window, aux,
             lora["lora_a"] @ lora["lora_b_q"]).astype(attn_params["wq"].dtype)
     h, kv = A.attend(attn_params, h, acfg, positions,
                      q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
-                     return_kv=True)
+                     return_kv=True, kv_pad_to=kv_pad_to)
     if cfg.post_block_norm:
         h = C.norm_apply(cfg, blk["ln1_post"], h)
     x = R.shard_activations(x + h, sp=cfg.sp_activations)
@@ -233,6 +237,126 @@ def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
     return x + h, cache, stats
 
 
+def _chunk_stat_mean(a, tok_mask):
+    """Reduce one chunk's per-token MLP telemetry to per-slot (B, ...):
+    strategy stats arrive per flattened token (B*S, ...) from the sparse
+    paths or (B, S, ...) from dense; mask-weighted mean over the chunk's
+    REAL prompt positions only (pad tokens carry dead-alpha'd garbage).
+    Shared by every family's chunked prefill (lm / vision_lm / encdec)."""
+    b, s = tok_mask.shape
+    if a.shape[0] == b * s:
+        a = a.reshape((b, s) + a.shape[1:])
+    wm = tok_mask.astype(jnp.float32)
+    wm = wm.reshape(wm.shape + (1,) * (a.ndim - 2))
+    return (a * wm).sum(axis=1) / jnp.maximum(wm.sum(axis=1), 1.0)
+
+
+def _block_chunk_fwd(blk, x, cfg: ModelConfig, cache, offset, valid, window,
+                     alpha, tok_mask, collect_stats: bool = False):
+    """One transformer block over a fixed-size prefill chunk, writing K/V
+    into the decode cache at ``offset``.  Mirrors ``_block_fwd`` numerics
+    (same residual sharding) so the dense chunked path is bitwise-identical
+    to monolithic prefill, and ``_block_decode``'s cache/telemetry contract.
+
+    ``tok_mask``: (B, S) — True on real prompt positions.  Pad tokens enter
+    the sparse union with ``DEAD_SLOT_ALPHA`` (all-sparse prediction, out of
+    the union — the same drain mechanism the scheduler uses for dead slots)
+    and are excluded from the telemetry reduction.
+    """
+    from repro.core import sparse_mlp as SM
+    b, s = x.shape[0], x.shape[1]
+    h = C.norm_apply(cfg, blk["ln1"], x)
+    acfg = C.attn_cfg(cfg, window=window)
+    h, cache = A.chunk_attend(blk["attn"], h, acfg, cache, offset, valid,
+                              q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    if cfg.post_block_norm:
+        h = C.norm_apply(cfg, blk["ln1_post"], h)
+    x = R.shard_activations(x + h, sp=cfg.sp_activations)
+    h = C.norm_apply(cfg, blk["ln2"], x)
+    wmean = lambda a: _chunk_stat_mean(a, tok_mask)
+    stats = None
+    if "moe" in blk:
+        h, _ = moe_apply(blk["moe"], h, moe_cfg(cfg))
+        if collect_stats:
+            stats = SM.zero_mlp_stats((b,), cfg.sparse.tp_shards)
+    else:
+        al = jnp.asarray(alpha, jnp.float32)
+        if al.ndim == 1:                                   # per-slot (B,)
+            al = al[:, None]
+        a_tok = jnp.where(tok_mask, al, SM.DEAD_SLOT_ALPHA).reshape(-1)
+        if collect_stats:
+            h, st = mlp_apply(blk["mlp"], h, _mlp_sparse_cfg(cfg),
+                              prefill=True, alpha=a_tok, return_stats=True)
+            stats = jax.tree.map(wmean, st)
+        else:
+            h = mlp_apply(blk["mlp"], h, _mlp_sparse_cfg(cfg),
+                          prefill=True, alpha=a_tok)
+    if cfg.post_block_norm:
+        h = C.norm_apply(cfg, blk["ln2_post"], h)
+    x = R.shard_activations(x + h, sp=cfg.sp_activations)
+    return x, cache, stats
+
+
+def _dense_stack_chunk(params, x, cfg: ModelConfig, caches, offset, valid,
+                       tok_mask, alphas=None, collect_stats: bool = False):
+    """Chunked-prefill pass over the grouped layer scan (decode cache
+    layout).  Same alpha plumbing as ``_dense_stack_decode``."""
+    windows = _windows(cfg)
+    p = len(windows)
+    if alphas is None:
+        alphas = jnp.asarray(_alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
+
+    def run(stacked, caches_s, alphas_s, n):
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n // p, p) + a.shape[1:]), stacked)
+        caches_g = jax.tree.map(
+            lambda a: a.reshape((n // p, p) + a.shape[1:]), caches_s)
+        alphas_g = alphas_s.reshape((n // p, p) + alphas_s.shape[1:])
+
+        def body(x, xs):
+            blk_g, cache_g, al = xs
+            new_caches, stats = [], []
+            for j in range(p):
+                blk = jax.tree.map(lambda a: a[j], blk_g)
+                cache = jax.tree.map(lambda a: a[j], cache_g)
+                x, cache, st = _block_chunk_fwd(
+                    blk, x, cfg, cache, offset, valid, windows[j], al[j],
+                    tok_mask, collect_stats=collect_stats)
+                new_caches.append(cache)
+                if collect_stats:
+                    stats.append(st)
+            ys = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_caches),
+                  (jax.tree.map(lambda *ls: jnp.stack(ls), *stats)
+                   if collect_stats else None))
+            return x, ys
+
+        x2, (new_caches, stats) = jax.lax.scan(
+            body, x, (grouped, caches_g, alphas_g))
+        new_caches = jax.tree.map(
+            lambda a: a.reshape((n,) + a.shape[2:]), new_caches)
+        if collect_stats:
+            stats = jax.tree.map(
+                lambda a: a.reshape((n,) + a.shape[2:]), stats)
+        return x2, new_caches, stats
+
+    new = {}
+    all_stats = []
+    nf = cfg.first_dense_layers
+    if "first_blocks" in params:
+        x, new["first"], st = run(params["first_blocks"], caches["first"],
+                                  alphas[:nf], nf)
+        all_stats.append(st)
+    x, new["blocks"], st = run(params["blocks"], caches["blocks"], alphas[nf:],
+                               cfg.n_layers - nf)
+    all_stats.append(st)
+    if collect_stats:
+        stats = jax.tree.map(lambda *ls: jnp.concatenate(ls), *all_stats)
+        return x, new, stats
+    return x, new, None
+
+
 def _dense_stack_fwd(params, x, cfg: ModelConfig, positions,
                      collect_kv: bool, max_len: int = 0):
     windows = _windows(cfg)
@@ -249,7 +373,9 @@ def _dense_stack_fwd(params, x, cfg: ModelConfig, positions,
             for j in range(p):
                 blk = jax.tree.map(lambda a: a[j], xs)
                 x, aux, kv = _block_fwd(blk, x, cfg, positions, windows[j],
-                                        aux)
+                                        aux,
+                                        kv_pad_to=max_len if collect_kv
+                                        else 0)
                 if collect_kv:
                     kvs.append(_seed_cache(kv, max_len, cfg))
             ys = jax.tree.map(lambda *ls: jnp.stack(ls), *kvs) if collect_kv \
@@ -625,6 +751,58 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, max_len: int):
         raise ValueError(cfg.family)
     x = C.norm_apply(cfg, params["final_norm"], x)
     logits = C.head_logits(x[:, -1], _head_table(params), cfg.final_softcap)
+    return logits, caches
+
+
+# Families the scheduler may stream through prefill_chunk (hybrid/xlstm
+# recurrent state has no offset splice; they stay on monolithic prefill).
+CHUNK_PREFILL_FAMILIES = ("dense", "moe")
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  caches: dict, offset: jax.Array, valid: jax.Array, *,
+                  alphas=None, collect_stats: bool = False):
+    """One fixed-size prefill chunk against decode-layout caches.
+
+    tokens: (B, S) — a chunk of the prompt starting at sequence ``offset``
+    (a traced scalar, so one executable serves every chunk of a given
+    shape — the fixed chunk shape is what structurally eliminates the
+    per-prompt-length trace cache, DESIGN.md §9).  ``valid`` (scalar or
+    (B,)): total real prompt length; positions >= valid inside the chunk
+    are padding (dead-alpha'd out of the sparse union, K/V zeroed).
+    ``caches`` is the decode cache tree from ``init_caches`` — chunks must
+    arrive in order from offset 0.
+
+    Returns (logits (B, V), caches[, stats]): logits are next-token logits
+    read at position ``valid - 1`` and only meaningful on the chunk that
+    contains it; ``stats`` (collect_stats) is the (L, B) MLP telemetry
+    pytree matching ``decode_step``'s contract, reduced over the chunk's
+    real positions.
+
+    Only dense/moe families chunk (hybrid/xlstm recurrent state doesn't
+    splice at an offset); the scheduler falls back to monolithic prefill
+    for those.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"chunked prefill supports dense/moe, not {cfg.family!r}")
+    tokens = R.shard_tokens(tokens)
+    x = _embed_in(params, cfg, tokens)
+    b, s = tokens.shape
+    off = jnp.asarray(offset, jnp.int32)
+    vld = jnp.asarray(valid, jnp.int32)
+    if vld.ndim == 0:
+        vld = jnp.full((b,), vld, jnp.int32)
+    pos = off + jnp.arange(s, dtype=jnp.int32)
+    tok_mask = pos[None, :] < vld[:, None]                    # (B, S)
+    x, caches, stats = _dense_stack_chunk(params, x, cfg, caches, off, vld,
+                                          tok_mask, alphas, collect_stats)
+    x = C.norm_apply(cfg, params["final_norm"], x)
+    last = jnp.clip(vld - 1 - off, 0, s - 1)                  # (B,)
+    xl = x[jnp.arange(b), last]
+    logits = C.head_logits(xl, _head_table(params), cfg.final_softcap)
+    if collect_stats:
+        return logits, caches, stats
     return logits, caches
 
 

@@ -113,7 +113,8 @@ def _stack(params, x, cfg: ModelConfig, positions, images,
         for j in range(p - 1):
             blk = jax.tree.map(lambda a: a[j], sg)
             x, aux, kv = LM._block_fwd(blk, x, cfg, positions, cfg.window,
-                                       aux)
+                                       aux,
+                                       kv_pad_to=max_len if collect else 0)
             if collect:
                 kvs.append(LM._seed_cache(kv, max_len, cfg))
         x, ckv = _cross_fwd(cg, x, cfg, images)
@@ -163,6 +164,117 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     logits = C.head_logits(x[:, -1], LM._head_table(params),
                            cfg.final_softcap)
     return logits, caches
+
+
+# The scheduler may stream VLM prompts through prefill_chunk (DESIGN.md §9).
+CHUNK_PREFILL_FAMILIES = ("vlm",)
+
+
+def _cross_chunk_fwd(blk, x, cfg: ModelConfig, images, q_pos, tok_mask,
+                     alpha, collect_stats: bool = False):
+    """Gated cross-attention block over one prefill chunk.  Cross attention
+    is per-query-row independent (non-causal softmax over the image tokens),
+    so re-running ``A.attend`` against the raw image embeddings reproduces
+    the monolithic ``_cross_fwd`` numerics row-for-row — and returns the
+    same (k, v) for the cross cache on every chunk (idempotent write)."""
+    from repro.core import sparse_mlp as SM
+    h = C.norm_apply(cfg, blk["ln1"], x)
+    acfg = C.attn_cfg(cfg, cross=True)
+    h, kv = A.attend(blk["attn"], h, acfg, q_pos, kv_x=images,
+                     kv_positions=jnp.arange(images.shape[1]),
+                     q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                     return_kv=True)
+    x = x + jnp.tanh(blk["gate_attn"].astype(jnp.float32)).astype(x.dtype) * h
+    x = R.shard_activations(x, sp=cfg.sp_activations)
+    h = C.norm_apply(cfg, blk["ln2"], x)
+    al = jnp.asarray(alpha, jnp.float32)
+    if al.ndim == 1:                                       # per-slot (B,)
+        al = al[:, None]
+    a_tok = jnp.where(tok_mask, al, SM.DEAD_SLOT_ALPHA).reshape(-1)
+    stats = None
+    if collect_stats:
+        h, st = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg),
+                          prefill=True, alpha=a_tok, return_stats=True)
+        stats = jax.tree.map(lambda a: LM._chunk_stat_mean(a, tok_mask), st)
+    else:
+        h = mlp_apply(blk["mlp"], h, LM._mlp_sparse_cfg(cfg),
+                      prefill=True, alpha=a_tok)
+    x = x + jnp.tanh(blk["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * h
+    return R.shard_activations(x, sp=cfg.sp_activations), kv, stats
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  caches: dict, offset: jax.Array, valid: jax.Array,
+                  images: jax.Array, *, alphas=None,
+                  collect_stats: bool = False):
+    """One fixed-size prefill chunk against decode-layout caches — the VLM
+    twin of ``models.lm.prefill_chunk`` (same contract: traced ``offset``,
+    (B,) ``valid``, chunks arrive in order from 0; logits meaningful on the
+    chunk containing position ``valid - 1``).  Self-attention blocks stream
+    K/V into the cache via ``chunk_attend``; the gated cross blocks re-run
+    attention over the raw image embeddings per chunk and (re)write the
+    cross K/V cache with identical values each time."""
+    p, n_groups = _layout(cfg)
+    tokens = R.shard_tokens(tokens)
+    x = LM._embed_in(params, cfg, tokens)
+    b, s = tokens.shape
+    off = jnp.asarray(offset, jnp.int32)
+    vld = jnp.asarray(valid, jnp.int32)
+    if vld.ndim == 0:
+        vld = jnp.full((b,), vld, jnp.int32)
+    pos = off + jnp.arange(s, dtype=jnp.int32)
+    tok_mask = pos[None, :] < vld[:, None]                    # (B, S)
+    if alphas is None:
+        alphas = jnp.asarray(LM._alphas(cfg))
+    else:
+        alphas = jnp.asarray(alphas, jnp.float32)
+    alphas_g = alphas.reshape((n_groups, p) + alphas.shape[1:])
+    self_g = jax.tree.map(
+        lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]),
+        params["self_blocks"])
+    self_c = jax.tree.map(
+        lambda a: a.reshape((n_groups, p - 1) + a.shape[1:]), caches["self"])
+
+    def body(x, xs):
+        sg, cg, sc, al = xs
+        new_kv, stats = [], []
+        for j in range(p - 1):
+            blk = jax.tree.map(lambda a: a[j], sg)
+            cache = jax.tree.map(lambda a: a[j], sc)
+            x, cache, st = LM._block_chunk_fwd(
+                blk, x, cfg, cache, off, vld, cfg.window, al[j], tok_mask,
+                collect_stats=collect_stats)
+            new_kv.append(cache)
+            if collect_stats:
+                stats.append(st)
+        x, ckv, st = _cross_chunk_fwd(cg, x, cfg, images, pos, tok_mask,
+                                      al[p - 1],
+                                      collect_stats=collect_stats)
+        if collect_stats:
+            stats.append(st)
+        ys = (jax.tree.map(lambda *ls: jnp.stack(ls), *new_kv),
+              {"k": ckv[0], "v": ckv[1]},
+              (jax.tree.map(lambda *ls: jnp.stack(ls), *stats)
+               if collect_stats else None))
+        return x, ys
+
+    x, (new_self, new_cross, stats) = jax.lax.scan(
+        body, x, (self_g, params["cross_blocks"], self_c, alphas_g))
+    new_self = jax.tree.map(
+        lambda a: a.reshape((n_groups * (p - 1),) + a.shape[2:]), new_self)
+    new_caches = {"self": new_self,
+                  "cross": jax.tree.map(
+                      lambda a, f: a.astype(f.dtype), new_cross,
+                      caches["cross"])}
+    x = C.norm_apply(cfg, params["final_norm"], x)
+    last = jnp.clip(vld - 1 - off, 0, s - 1)                  # (B,)
+    xl = x[jnp.arange(b), last]
+    logits = C.head_logits(xl, LM._head_table(params), cfg.final_softcap)
+    if collect_stats:  # (n_groups, p, B) -> (n_layers, B)
+        stats = jax.tree.map(
+            lambda a: a.reshape((n_groups * p,) + a.shape[2:]), stats)
+        return logits, new_caches, stats
+    return logits, new_caches
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:

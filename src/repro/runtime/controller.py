@@ -153,6 +153,15 @@ class AlphaController:
             predicted_ema=t.copy(),
             union_ema=t.copy(),
         )
+        # Sparse chunked prefill telemetry rider (DESIGN.md §9): prefill
+        # chunks report realized density on the same (L,) contract as decode
+        # but at a different operating point (chunk-union over S tokens vs
+        # batch-union over B slots), so they fold into their OWN EMA and
+        # nudge alpha at ``cfg.prefill_weight`` of the decode gain.  Lives
+        # outside ControllerState so pre-prefill checkpoints restore cleanly
+        # (the strict state tuple is unchanged; these ride in the meta).
+        self.prefill_ema = t.copy()
+        self.prefill_chunks = 0
         self._trajectory: collections.deque = collections.deque(
             maxlen=TRAJECTORY_KEEP)
 
@@ -261,6 +270,40 @@ class AlphaController:
             "mean_fn": float(s.fn_ema.mean()),
         })
 
+    def observe_prefill(self, stats: dict,
+                        tier: Optional[int] = None) -> None:
+        """Fold one prefill chunk's per-layer MLP telemetry into the
+        prefill-density EMA and apply the down-weighted alpha nudge
+        (``ControllerConfig.prefill_weight``; 0 = observe-only).
+
+        ``stats``: dict with (L,) float arrays (``prefill_chunk``'s (L, B=1)
+        telemetry reduced over the chunk's real positions by the caller).
+        ``tier``: the owning request's SLA tier row when tiered — a prefill
+        chunk belongs to exactly one request, so every other tier's EMA and
+        alphas are frozen for the observation."""
+        s, c = self.state, self.cfg
+        obs = np.asarray(stats["realized_density"], np.float32)
+        if obs.shape != (self.num_layers,):
+            raise ValueError(
+                f"prefill telemetry shape {obs.shape} != "
+                f"({self.num_layers},)")
+        beta = np.float32(c.ema)
+        w = np.float32(getattr(c, "prefill_weight", 0.0))
+        if self.tiers:
+            t = 0 if tier is None else int(tier)
+            self.prefill_ema[t] = (1 - beta) * self.prefill_ema[t] + beta * obs
+            err = self.prefill_ema[t] - self._target[t]
+            dalpha = np.clip(-c.gain * w * err, -c.max_step, c.max_step)
+            s.alphas[t] = np.clip(s.alphas[t] + dalpha.astype(np.float32),
+                                  c.alpha_min, c.alpha_max)
+        else:
+            self.prefill_ema = (1 - beta) * self.prefill_ema + beta * obs
+            err = self.prefill_ema - self._target
+            dalpha = np.clip(-c.gain * w * err, -c.max_step, c.max_step)
+            s.alphas = np.clip(s.alphas + dalpha.astype(np.float32),
+                               c.alpha_min, c.alpha_max).astype(np.float32)
+        self.prefill_chunks += 1
+
     # ------------------------------------------------------------ outputs --
     def capacity_hint(self, k: int, slack: float = 1.3,
                       multiple: int = 128) -> int:
@@ -296,6 +339,8 @@ class AlphaController:
             "mean_overflow": float(s.overflow_ema.mean()),
             "mean_union_demand": (float(s.union_ema.mean())
                                   if s.union_ema is not None else None),
+            "prefill_chunks": self.prefill_chunks,
+            "mean_prefill_density": float(self.prefill_ema.mean()),
             "converged_2pct": self.converged(0.02),
         }
         if self.tiers:
@@ -348,6 +393,12 @@ class AlphaController:
             "num_layers": int(self.num_layers),
             "native_fn": bool(self.native_fn),
             "tiers": [t.name for t in self.tiers] if self.tiers else [],
+            # prefill rider travels in the meta so the checkpoint TREE
+            # layout is unchanged: snapshots round-trip with pre-prefill
+            # builds in both directions (restore below is tolerant)
+            "prefill_chunks": int(self.prefill_chunks),
+            "prefill_ema": np.asarray(self.prefill_ema,
+                                      np.float32).tolist(),
         }
         return tree, meta
 
@@ -382,6 +433,14 @@ class AlphaController:
             setattr(s, name, arr)
         s.steps = int(meta.get("steps", 0))
         s.audits = int(meta.get("audits", 0))
+        # tolerant restore: a pre-prefill snapshot simply keeps the fresh
+        # target-seeded EMA (it re-converges within a few chunks)
+        pe = meta.get("prefill_ema")
+        if pe is not None:
+            arr = np.asarray(pe, np.float32)
+            if arr.shape == s.alphas.shape:
+                self.prefill_ema = arr
+        self.prefill_chunks = int(meta.get("prefill_chunks", 0))
 
 
 class DistributedController:

@@ -32,17 +32,20 @@ import numpy as np
 
 from repro.configs.base import (DEFAULT_SLA_TIERS, ControllerConfig,
                                 ModelConfig, SLATier)
+# Alpha column for a dead (drained) slot — and, since the chunked-prefill
+# scheduler, for a slot mid-prefill and for pad tokens inside a prefill
+# chunk: margin = N_neg - alpha*N_pos with a huge negative alpha is positive
+# for every neuron (N_neg + N_pos = d_valid >= 1), so the row predicts
+# all-sparse and contributes NOTHING to the gather/pallas union selection —
+# it must not consume shared capacity or perturb live requests' row
+# selection (DESIGN.md §5/§9).  Canonical home is core.sparse_mlp (the model
+# layer dead-alphas prefill pad tokens with it); re-exported here because
+# the scheduler and its tests have always spelled it server.DEAD_SLOT_ALPHA.
+from repro.core.sparse_mlp import DEAD_SLOT_ALPHA  # noqa: F401 (re-export)
 from repro.models.common import greedy_sample
 from repro.runtime.controller import (AlphaController, DistributedController,
                                       aggregate_tier_stats, restore_controller,
                                       save_controller)
-
-# Alpha column for a dead (drained) slot: margin = N_neg - alpha*N_pos with a
-# huge negative alpha is positive for every neuron (N_neg + N_pos = d_valid
-# >= 1), so the slot predicts all-sparse and contributes NOTHING to the
-# gather/pallas batch-union selection — a dead slot must not consume shared
-# capacity or perturb live requests' row selection (DESIGN.md §5).
-DEAD_SLOT_ALPHA = -1e9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +70,21 @@ class ServeConfig:
     # decode call per bucket before the serve loop) so no request ever pays
     # a mid-stream compile when the controller first switches buckets.
     warm_buckets: bool = False
+    # ---- chunked prefill (DESIGN.md §9) ---------------------------------
+    # Fixed prefill chunk size in tokens (MXU-aligned: 64/128).  0 keeps the
+    # legacy monolithic batch-1 prefill (byte-exact seed behavior).  >0 and
+    # the slot-refill scheduler streams each admitted prompt through the
+    # pre-jitted chunk executable in order — one trace per chunk SHAPE, not
+    # per prompt length — interleaving chunks with live decode steps so a
+    # long admission never stalls resident requests' ITL.  Must divide
+    # max_len.  The legacy chunked scheduler (slot_refill=False) instead
+    # pads each batch's prompt length up to the chunk ladder, bounding its
+    # jit cache at max_len/prefill_chunk shapes.
+    prefill_chunk: int = 0
+    # Max prefill chunks advanced per decode-loop iteration: the TTFT-vs-ITL
+    # knob.  Higher drains admissions faster (better TTFT) at the cost of
+    # more prefill compute squeezed between decode steps (worse ITL).
+    prefill_interleave: int = 1
     # Controller persistence (DESIGN.md §8): directory for the adaptive
     # controller's state checkpoints (checkpoint.manager atomic-rename
     # layout).  On construction the server restores the latest snapshot if
@@ -83,9 +101,16 @@ class Request:
     max_new: int = 32
     sla: str = "balanced"        # ServeConfig.sla_tiers entry
     out: Optional[np.ndarray] = None
-    latency_s: float = 0.0       # admission -> last token (wall clock)
-    t_start: float = 0.0         # perf_counter at admission
+    latency_s: float = 0.0       # admission -> last token (wall clock,
+                                 # INCLUDES queue wait — the documented
+                                 # contract; it used to silently run from
+                                 # dequeue, under-reporting loaded-server
+                                 # latency by the whole queue wait)
+    t_admit: float = 0.0         # perf_counter at admission (serve() entry)
+    t_start: float = 0.0         # perf_counter at dequeue (service start)
     t_end: float = 0.0           # perf_counter at completion
+    queue_wait_s: float = 0.0    # admission -> dequeue
+    ttft_s: float = 0.0          # admission -> first token emitted
 
 
 def _splice_slot(full, one, slot):
@@ -132,6 +157,16 @@ class Server:
         self.mesh = mesh
         self._slot_sh = None
         self._grid_warned: set = set()
+        if scfg.prefill_chunk:
+            if scfg.prefill_chunk < 1 or scfg.max_len % scfg.prefill_chunk:
+                raise ValueError(
+                    f"prefill_chunk={scfg.prefill_chunk} must be positive "
+                    f"and divide max_len={scfg.max_len} (so every padded "
+                    "prompt fits the cache; DESIGN.md §9)")
+            if scfg.prefill_interleave < 1:
+                raise ValueError(
+                    f"prefill_interleave={scfg.prefill_interleave} must be "
+                    ">= 1 (chunks per decode-loop iteration)")
         if mesh is not None:
             from repro.sharding import rules as RR
             from repro.sharding import sparse as SSP
@@ -191,6 +226,42 @@ class Server:
         self.decode_alpha_fn = jax.jit(_decode_alphas)
         # slot index is traced: one compiled splice serves every refill
         self.splice_fn = jax.jit(_splice_slot)
+
+        # ---- chunked prefill executables (DESIGN.md §9) ------------------
+        # The sequence offset enters the jit as a traced scalar, so ONE
+        # executable serves every chunk of a given shape — the per-prompt-
+        # length trace cache of the monolithic batch-1 prefill is gone
+        # structurally.  ``_prefill_traces`` counts (re)traces per chunk
+        # shape (the no-retrace regression tests read it).
+        self._prefill_traces: collections.Counter = collections.Counter()
+        fams = getattr(model_mod, "CHUNK_PREFILL_FAMILIES", ())
+        self._chunk_prefill = bool(scfg.prefill_chunk) and cfg.family in fams
+        if scfg.prefill_chunk and scfg.slot_refill and not self._chunk_prefill:
+            warnings.warn(
+                f"prefill_chunk={scfg.prefill_chunk} set but family "
+                f"{cfg.family!r} has no chunked prefill (supported: "
+                f"{fams}); admissions run the monolithic batch-1 prefill "
+                "(DESIGN.md §9)", stacklevel=2)
+
+        def _mk_prefill_chunk(collect: bool):
+            def _chunk(params, toks, caches, offset, valid, alphas, *ex):
+                self._prefill_traces[(int(toks.shape[1]), collect)] += 1
+                return self.mod.prefill_chunk(
+                    params, cfg, toks, caches, offset, valid, *ex,
+                    alphas=alphas, collect_stats=collect)
+            return jax.jit(_chunk)
+
+        self.prefill_chunk_fn = None
+        self.prefill_chunk_stats_fn = None
+        self.encode_fn = None
+        if self._chunk_prefill:
+            self.prefill_chunk_fn = _mk_prefill_chunk(False)
+            self.prefill_chunk_stats_fn = _mk_prefill_chunk(True)
+            if hasattr(model_mod, "encode"):
+                # enc-dec: the encoder runs ONCE per admission; chunks
+                # consume the precomputed encoder states
+                self.encode_fn = jax.jit(
+                    lambda p, f: self.mod.encode(p, cfg, f))
 
         # ---- adaptive-alpha controller wiring (DESIGN.md §4/§5) ----------
         # The controller lives across generate()/serve() calls so adaptation
@@ -551,6 +622,29 @@ class Server:
             mat[:, ~np.asarray(active, bool)] = DEAD_SLOT_ALPHA
         return mat
 
+    def _prefill_alphas(self, t: int) -> np.ndarray:
+        """(n_layers,) alpha vector for one request's prefill chunks: the
+        same schedule + tier plumbing as the decode slots, for a single
+        request on tier ``t`` (pad positions inside a chunk are dead-alpha'd
+        by the model layer itself)."""
+        ctl = self.controller
+        if ctl is None:
+            base = self.cfg.sparse.alpha_schedule().alphas(self.cfg.n_layers)
+            return (base + self._tier_offsets[t]).astype(np.float32)
+        if ctl.tiers:
+            return self._pad_layers(ctl.slot_alphas(np.asarray([t])))[:, 0]
+        return (self._pad_layers(ctl.alphas())
+                + self._tier_offsets[t]).astype(np.float32)
+
+    def _slot_extra(self, i: int, extra: tuple) -> tuple:
+        """Per-slot extra model inputs for a chunked prefill: batch-1 slices
+        of ``extra_inputs`` — except the enc-dec encoder input, which is
+        encoded ONCE here so every chunk reuses the states."""
+        ex = tuple(e[i:i + 1] for e in extra)
+        if self.encode_fn is not None and ex:
+            return (self.encode_fn(self.params, ex[0]),) + ex[1:]
+        return ex
+
     def _observe_step(self, stats: dict, tier_idx: np.ndarray,
                       active: Optional[np.ndarray], audit: bool) -> None:
         """Fold one decode step's (L, B) telemetry into the controller:
@@ -643,8 +737,10 @@ class Server:
         # validate the whole queue BEFORE any work: a bad request must not
         # abort a half-served batch (and the chunked path would otherwise
         # silently clamp oversized cache writes)
+        t_adm = time.perf_counter()   # admission: latency clocks start HERE
         for r in requests:
             self._tier_of(r)
+            r.t_admit = t_adm
             if len(r.prompt) + r.max_new > self.scfg.max_len:
                 raise ValueError(
                     f"request {r.uid}: prompt {len(r.prompt)} + max_new "
@@ -656,10 +752,13 @@ class Server:
             return done
         # chunk composition is deterministic, so padded-chunk overflow
         # (chunk-max prompt + chunk-max budget) is also checkable up front
+        pc = self.scfg.prefill_chunk
         for c0 in range(0, len(requests), self.scfg.batch):
             chunk = requests[c0:c0 + self.scfg.batch]
-            need = (max(len(r.prompt) for r in chunk) +
-                    max(r.max_new for r in chunk))
+            plen = max(len(r.prompt) for r in chunk)
+            if pc:   # ladder-padded prompt length (satellite retrace fix)
+                plen = -(-plen // pc) * pc
+            need = plen + max(r.max_new for r in chunk)
             if need > self.scfg.max_len:
                 raise ValueError(
                     f"chunk {c0 // self.scfg.batch}: padded prompt + chunk "
@@ -686,6 +785,14 @@ class Server:
             chunk, queue = queue[:self.scfg.batch], queue[self.scfg.batch:]
             t0 = time.perf_counter()
             plen = max(len(r.prompt) for r in chunk)
+            if self.scfg.prefill_chunk:
+                # pad the batch's prompt length up to the chunk ladder: the
+                # prefill jit cache is then bounded at max_len/prefill_chunk
+                # shapes instead of one trace per distinct prompt length
+                # (the per-prompt-length retrace storm).  Right-align pad
+                # semantics are unchanged — just more leading pad columns.
+                pc = self.scfg.prefill_chunk
+                plen = -(-plen // pc) * pc
             prompts = np.zeros((self.scfg.batch, plen), np.int32)
             for i, r in enumerate(chunk):
                 prompts[i, plen - len(r.prompt):] = r.prompt
@@ -695,7 +802,10 @@ class Server:
             for i, r in enumerate(chunk):
                 r.out = gen[i, :r.max_new]
                 r.t_start, r.t_end = t0, t1
-                r.latency_s = t1 - t0
+                r.queue_wait_s = t0 - r.t_admit if r.t_admit else 0.0
+                # admission -> last token (the documented latency contract;
+                # dequeue-relative timing under-counted by the queue wait)
+                r.latency_s = t1 - (r.t_admit if r.t_admit else t0)
                 done.append(r)
             self.maybe_adapt_capacity()  # re-jit boundary (DESIGN.md §4)
         return done
@@ -724,41 +834,121 @@ class Server:
         slot_req: list[Optional[Request]] = [None] * B
         slot_out: list[list[int]] = [[] for _ in range(B)]
 
+        # per-slot chunked-prefill state (DESIGN.md §9): a slot mid-prefill
+        # is NOT active — the decode union sees it exactly like a dead slot
+        # (DEAD_SLOT_ALPHA via the ``active`` mask) until its last chunk
+        # splices the scratch caches in and the first token lands
+        pending: dict[int, dict] = {}
+        alpha_mat: Optional[np.ndarray] = None  # cached off-controller matrix
+        # collect prefill telemetry only where sparse prefill actually runs
+        # (mlp_apply forces prefill dense under tp/dp sharding)
+        prefill_stats = (ctl is not None and self.cfg.sparse.enabled
+                         and self.cfg.sparse.sparse_prefill
+                         and not (self.cfg.sparse.tp_shards
+                                  or self.cfg.sparse.dp_shards))
+
         def finish(i: int) -> None:
             r = slot_req[i]
             r.out = np.asarray(slot_out[i][: r.max_new], np.int32)
             r.t_end = time.perf_counter()
-            r.latency_s = r.t_end - r.t_start
+            # admission -> last token (the documented latency contract; the
+            # old dequeue-relative clock silently excluded the queue wait)
+            r.latency_s = r.t_end - (r.t_admit if r.t_admit else r.t_start)
             done.append(r)
             slot_req[i] = None
             active[i] = False
 
+        def place(i: int, r: Request, first: int, plen: int, t: int,
+                  one) -> None:
+            """Activate slot i with a finished prefill: splice the batch-1
+            caches, seed the token/length/tier columns, stamp TTFT."""
+            nonlocal caches, alpha_mat
+            now = time.perf_counter()
+            r.ttft_s = now - (r.t_admit if r.t_admit else r.t_start)
+            slot_req[i] = r
+            slot_out[i] = [first]
+            tok[i, 0] = first
+            lengths[i] = plen
+            tier_idx[i] = t
+            active[i] = True
+            caches = self.splice_fn(caches, one, jnp.int32(i))
+            alpha_mat = None              # slot composition changed
+
         def admit(i: int) -> None:
-            """Fill slot i from the queue (batch-1 prefill at the prompt's
-            natural length -> exact single-request semantics; the trace
-            caches per distinct prompt length)."""
+            """Fill slot i from the queue.  With chunked prefill the slot
+            goes PENDING (scratch caches; chunks advance interleaved with
+            decode steps); otherwise the monolithic batch-1 prefill runs at
+            the prompt's natural length -> exact single-request semantics,
+            one trace per distinct prompt length."""
             nonlocal caches
             while queue:
                 r = queue.popleft()
                 t = self._tier_of(r)      # queue pre-validated in serve()
                 plen = len(r.prompt)
-                r.t_start = time.perf_counter()
+                now = time.perf_counter()
+                r.t_start = now           # dequeue: service starts
+                r.queue_wait_s = now - r.t_admit if r.t_admit else 0.0
+                if self._chunk_prefill:
+                    pc = self.scfg.prefill_chunk
+                    padded = -(-plen // pc) * pc
+                    toks = np.zeros((1, padded), np.int32)
+                    toks[0, :plen] = np.asarray(r.prompt, np.int32)
+                    pending[i] = {
+                        "req": r, "tier": t, "tokens": toks, "off": 0,
+                        "plen": plen,
+                        "caches": self.mod.init_caches(self.cfg, 1,
+                                                       scfg.max_len),
+                        "extra": self._slot_extra(i, extra),
+                    }
+                    return
                 prompt = jnp.asarray(
                     np.asarray(r.prompt, np.int32)[None, :])
                 ex = tuple(e[i:i + 1] for e in extra)
                 logits, one = self.prefill_fn(self.params, prompt, *ex)
                 first = int(np.asarray(greedy_sample(logits))[0])
-                slot_req[i] = r
-                slot_out[i] = [first]
-                tok[i, 0] = first
-                lengths[i] = plen
-                tier_idx[i] = t
-                active[i] = True
-                caches = self.splice_fn(caches, one, jnp.int32(i))
+                place(i, r, first, plen, t, one)
                 if r.max_new <= 1:
                     finish(i)     # prefill alone satisfied it; keep draining
                     continue
                 return
+
+        def advance_prefill(budget: int) -> None:
+            """Run up to ``budget`` prefill chunks (round-robin over pending
+            slots): ServeConfig.prefill_interleave chunks per decode-loop
+            iteration is the TTFT-vs-ITL knob (DESIGN.md §9)."""
+            pc = self.scfg.prefill_chunk
+            while budget > 0 and pending:
+                for i in sorted(pending):
+                    if budget <= 0:
+                        break
+                    st = pending[i]
+                    r = st["req"]
+                    chunk_toks = jnp.asarray(
+                        st["tokens"][:, st["off"]:st["off"] + pc])
+                    al = jnp.asarray(self._prefill_alphas(st["tier"]))
+                    fn = (self.prefill_chunk_stats_fn if prefill_stats
+                          else self.prefill_chunk_fn)
+                    out = fn(self.params, chunk_toks, st["caches"],
+                             jnp.int32(st["off"]), jnp.int32(st["plen"]),
+                             al, *st["extra"])
+                    if prefill_stats:
+                        logits, st["caches"], stats = out
+                        ctl.observe_prefill(
+                            {k: np.asarray(v)[:, 0]
+                             for k, v in stats.items()},
+                            tier=st["tier"] if ctl.tiers else None)
+                    else:
+                        logits, st["caches"] = out
+                    st["off"] += pc
+                    budget -= 1
+                    if st["off"] >= st["tokens"].shape[1]:
+                        first = int(np.asarray(greedy_sample(logits))[0])
+                        del pending[i]
+                        place(i, r, first, st["plen"], st["tier"],
+                              st["caches"])
+                        if r.max_new <= 1:
+                            finish(i)
+                            admit(i)   # refill: may re-enter pending
 
         for i in range(B):
             admit(i)
@@ -766,8 +956,14 @@ class Server:
                 and not self._warmed_buckets and active.any()):
             self._warm_bucket_ladder(tok, caches, lengths,
                               self._slot_alpha_matrix(tier_idx, active))
-        alpha_mat: Optional[np.ndarray] = None  # cached off-controller matrix
-        while active.any():
+        while active.any() or pending:
+            if pending:
+                # interleave admissions with decode: ≤ prefill_interleave
+                # chunks per iteration so a long admission never stalls the
+                # resident requests for its whole prompt (DESIGN.md §9)
+                advance_prefill(scfg.prefill_interleave)
+                if not active.any():
+                    continue     # nothing decoding yet — keep prefilling
             if ctl is not None:
                 audit = ctl.is_audit_step()
                 # between-step capacity-bucket switch: a host dict lookup
@@ -824,15 +1020,24 @@ def throughput_report(requests: list[Request]) -> dict:
     wall = (max(r.t_end for r in served) - min(r.t_start for r in served)
             if served else 0.0)
     lats = sorted(r.latency_s for r in served)
+    # TTFT / queue wait only exist where the scheduler stamped them
+    # (requests built by hand for the report tests carry the 0.0 defaults)
+    ttfts = sorted(r.ttft_s for r in served if r.ttft_s > 0.0)
+    waits = sorted(r.queue_wait_s for r in served if r.t_admit > 0.0)
 
-    def pct(q: float) -> float:
-        if not lats:
+    def pct(vals: list, q: float) -> float:
+        if not vals:
             return 0.0
         # nearest-rank: ceil(q*n)-1, with float fuzz rounded away (int(q*n)
         # would report the max as p95 for every n <= 20)
-        rank = math.ceil(round(q * len(lats), 9))
-        return lats[min(len(lats) - 1, max(0, rank - 1))]
+        rank = math.ceil(round(q * len(vals), 9))
+        return vals[min(len(vals) - 1, max(0, rank - 1))]
     return {"requests": len(requests), "tokens": toks,
             "total_s": wall, "tok_per_s": toks / max(wall, 1e-9),
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
-            "p50_latency_s": pct(0.5), "p95_latency_s": pct(0.95)}
+            "p50_latency_s": pct(lats, 0.5), "p95_latency_s": pct(lats, 0.95),
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "p50_ttft_s": pct(ttfts, 0.5), "p95_ttft_s": pct(ttfts, 0.95),
+            "mean_queue_wait_s": float(np.mean(waits)) if waits else 0.0,
+            "p50_queue_wait_s": pct(waits, 0.5),
+            "p95_queue_wait_s": pct(waits, 0.95)}

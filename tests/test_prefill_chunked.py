@@ -1,0 +1,431 @@
+"""Chunked prefill unified with decode (DESIGN.md §9).
+
+Parity + regression suite for the chunked-prefill serve path:
+
+- model-layer bitwise parity chunked vs monolithic prefill (logits AND
+  every cache leaf) for the dense LM at chunk 64/128, and for the
+  cross-attention families (vlm, encdec);
+- server-level token + controller-telemetry parity chunked vs monolithic
+  across the masked/gather/pallas strategies, and on the 2x4
+  (data x model) mesh;
+- the mid-prefill dead-slot pin: a slot whose prompt is still streaming
+  through chunks is excluded from the decode union exactly like a dead
+  slot (DEAD_SLOT_ALPHA column);
+- the legacy-scheduler retrace-storm regression: prompt lengths pad to
+  the prefill-chunk ladder, bounding the prefill jit cache;
+- zero retraces after warmup on the slot-refill chunk executables;
+- latency accounting: admission-stamped queue wait / TTFT / end-to-end
+  latency and their throughput_report percentiles;
+- the controller's prefill-density telemetry rider (observe_prefill,
+  checkpoint persistence, tolerant restore of pre-rider checkpoints).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ControllerConfig, DEFAULT_SLA_TIERS,
+                                ModelConfig)
+from repro.configs.registry import default_sparse
+from repro.core.predictor import AlphaSchedule
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.runtime.controller import AlphaController
+from repro.runtime.server import (DEAD_SLOT_ALPHA, Request, Server,
+                                  ServeConfig, throughput_report)
+
+jax.config.update("jax_platform_name", "cpu")
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host-platform devices (conftest XLA_FLAGS)")
+
+# attn_chunk >= max_len: the bitwise chunked-vs-monolithic contract needs
+# the monolithic softmax to reduce at the padded cache width (kv_pad_to),
+# which the chunked-attention prefill path does not thread.
+CFG = ModelConfig(name="tiny-pfc", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, max_seq=128,
+                  dtype="float32", param_dtype="float32",
+                  kv_cache_dtype="float32", attn_chunk=128, loss_chunk=64,
+                  remat=False)
+
+_PARAMS: dict = {}
+
+
+def params_for(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[cfg.name]
+
+
+def sparse_cfg(strategy):
+    return CFG.replace(
+        name=f"tiny-pfc-{strategy}", activation="relu",
+        sparse=dataclasses.replace(default_sparse(activation="relu"),
+                                   strategy=strategy, group_size=8,
+                                   capacity_frac=0.5))
+
+
+def make_requests(rng, plens, max_new=6, slas=None):
+    return [Request(uid=i, prompt=rng.integers(0, CFG.vocab, size=p),
+                    max_new=max_new,
+                    sla=(slas[i] if slas else "balanced"))
+            for i, p in enumerate(plens)]
+
+
+def chunked_prefill_loop(mod, params, cfg, tokens, chunk, max_len, *extra):
+    """Drive mod.prefill_chunk over a zero-padded prompt, as the server's
+    pending-slot state machine does, and return (last_logits, caches)."""
+    b, plen = tokens.shape
+    padded = -(-plen // chunk) * chunk
+    tp = np.zeros((b, padded), np.int32)
+    tp[:, :plen] = np.asarray(tokens, np.int32)
+    caches = mod.init_caches(cfg, b, max_len)
+    logits = None
+    for off in range(0, padded, chunk):
+        logits, caches = mod.prefill_chunk(
+            params, cfg, jnp.asarray(tp[:, off:off + chunk]), caches,
+            jnp.int32(off), jnp.int32(plen), *extra)
+    return logits, caches
+
+
+def assert_trees_bitwise(a, b, msg=""):
+    fa, _ = jax.tree.flatten(a)
+    fb, _ = jax.tree.flatten(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+class TestModelParity:
+    """prefill_chunk composed over fixed chunks is BITWISE the monolithic
+    prefill — logits and every cache leaf (the acceptance bar: splicing a
+    chunked cache must be indistinguishable from a monolithic one)."""
+
+    @pytest.mark.parametrize("chunk", [64, 128])
+    def test_lm_bitwise(self, chunk):
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, CFG.vocab, size=(1, 70)).astype(np.int32)
+        lg_m, c_m = lm.prefill(params_for(CFG), CFG, jnp.asarray(toks), 128)
+        lg_c, c_c = chunked_prefill_loop(lm, params_for(CFG), CFG,
+                                         toks, chunk, 128)
+        np.testing.assert_array_equal(np.asarray(lg_m), np.asarray(lg_c))
+        assert_trees_bitwise(c_m, c_c, f"lm cache, chunk={chunk}")
+
+    def test_vlm_bitwise(self):
+        from repro.models import vision_lm as VLM
+        cfg = ModelConfig(name="tiny-pfc-vlm", family="vlm", vocab=128,
+                          d_model=32, n_layers=2, n_heads=2, n_kv_heads=2,
+                          d_ff=64, max_seq=64, dtype="float32",
+                          param_dtype="float32", kv_cache_dtype="float32",
+                          attn_chunk=64, cross_every=2, n_image_tokens=4)
+        rng = np.random.default_rng(1)
+        params = VLM.init_lm(jax.random.PRNGKey(1), cfg)
+        images = jnp.asarray(rng.standard_normal((1, 4, 32)).astype(
+            np.float32))
+        toks = rng.integers(0, cfg.vocab, size=(1, 23)).astype(np.int32)
+        lg_m, c_m = VLM.prefill(params, cfg, jnp.asarray(toks), images, 64)
+        lg_c, c_c = chunked_prefill_loop(VLM, params, cfg, toks, 8, 64,
+                                         images)
+        np.testing.assert_array_equal(np.asarray(lg_m), np.asarray(lg_c))
+        assert_trees_bitwise(c_m, c_c, "vlm caches (self + cross)")
+
+    def test_encdec_bitwise(self):
+        from repro.models import encdec as ED
+        cfg = ModelConfig(name="tiny-pfc-ed", family="encdec", vocab=128,
+                          d_model=32, n_layers=2, n_heads=2, n_kv_heads=2,
+                          d_ff=64, max_seq=64, dtype="float32",
+                          param_dtype="float32", kv_cache_dtype="float32",
+                          attn_chunk=64, n_enc_layers=2, n_frames=4,
+                          gated_mlp=False, activation="relu",
+                          norm="layernorm")
+        rng = np.random.default_rng(2)
+        params = ED.init_lm(jax.random.PRNGKey(2), cfg)
+        frames = jnp.asarray(rng.standard_normal((1, 4, 32)).astype(
+            np.float32))
+        toks = rng.integers(0, cfg.vocab, size=(1, 23)).astype(np.int32)
+        lg_m, c_m = ED.prefill(params, cfg, jnp.asarray(toks), frames, 64)
+        enc_out = ED.encode(params, cfg, frames)  # once per admission
+        lg_c, c_c = chunked_prefill_loop(ED, params, cfg, toks, 8, 64,
+                                         enc_out)
+        np.testing.assert_array_equal(np.asarray(lg_m), np.asarray(lg_c))
+        assert_trees_bitwise(c_m, c_c, "encdec caches (self + cross)")
+
+
+class TestServerParity:
+    """Chunked-prefill slot-refill serve is token-identical to the
+    monolithic-prefill serve.  prefill_interleave >= chunks-per-prompt
+    keeps slot activation on the same loop iteration as the synchronous
+    monolithic admit, so the decode union sees identical slot sets
+    step-for-step (the parity precondition — with a lower interleave the
+    schedulers legitimately diverge, that's the TTFT knob working)."""
+
+    PLENS = (5, 13, 9, 17)
+
+    def _serve(self, cfg, prefill_chunk, ccfg=None, mesh=None):
+        scfg = ServeConfig(batch=2, max_len=64, prefill_chunk=prefill_chunk,
+                           prefill_interleave=8,
+                           controller=ccfg or ControllerConfig())
+        srv = Server(lm, cfg, scfg, params_for(cfg), mesh=mesh)
+        done = srv.serve(make_requests(np.random.default_rng(3), self.PLENS))
+        return srv, {r.uid: r.out for r in done}
+
+    @pytest.mark.parametrize("strategy",
+                             ["dense", "masked", "gather", "pallas"])
+    def test_tokens_bitwise(self, strategy):
+        cfg = CFG if strategy == "dense" else sparse_cfg(strategy)
+        _, mono = self._serve(cfg, 0)
+        srv, chunked = self._serve(cfg, 8)
+        for uid in mono:
+            np.testing.assert_array_equal(mono[uid], chunked[uid],
+                                          err_msg=f"uid={uid} {strategy}")
+        assert all(v == 1 for v in srv._prefill_traces.values()), (
+            srv._prefill_traces)
+
+    def test_controller_telemetry_bitwise(self):
+        ccfg = ControllerConfig(enabled=True, target_density=0.25,
+                                audit_period=4)
+        cfg = sparse_cfg("gather")
+        srv_m, mono = self._serve(cfg, 0, ccfg=ccfg)
+        srv_c, chunked = self._serve(cfg, 8, ccfg=ccfg)
+        for uid in mono:
+            np.testing.assert_array_equal(mono[uid], chunked[uid])
+        for name in ("alphas", "density_ema", "fn_ema", "union_ema",
+                     "predicted_ema"):
+            np.testing.assert_array_equal(
+                getattr(srv_m.controller.state, name),
+                getattr(srv_c.controller.state, name), err_msg=name)
+
+    @needs8
+    def test_mesh_2x4_tokens_bitwise(self):
+        cfg = sparse_cfg("gather")
+        cfg = cfg.replace(name="tiny-pfc-mesh", sparse=dataclasses.replace(
+            cfg.sparse, tp_shards=4, dp_shards=2))
+        _, mono = self._serve(cfg, 0,
+                              mesh=make_mesh((2, 4), ("data", "model")))
+        _, chunked = self._serve(cfg, 8,
+                                 mesh=make_mesh((2, 4), ("data", "model")))
+        for uid in mono:
+            np.testing.assert_array_equal(mono[uid], chunked[uid],
+                                          err_msg=f"uid={uid} 2x4 mesh")
+
+
+class TestMidPrefillDeadSlot:
+    """A slot streaming prefill chunks is excluded from the decode union
+    exactly like a dead slot: its alpha column is DEAD_SLOT_ALPHA for
+    every decode step before its placement (DESIGN.md §9)."""
+
+    def test_pending_slot_gets_dead_alpha_column(self):
+        cfg = sparse_cfg("masked")
+        scfg = ServeConfig(batch=2, max_len=64, prefill_chunk=8,
+                           prefill_interleave=1)
+        srv = Server(lm, cfg, scfg, params_for(cfg))
+        seen = []
+        orig = srv._slot_alpha_matrix
+
+        def spy(tier_idx, active=None):
+            mat = orig(tier_idx, active)
+            seen.append((None if active is None else active.copy(), mat))
+            return mat
+
+        srv._slot_alpha_matrix = spy
+        rng = np.random.default_rng(4)
+        # slot 0: one chunk; slot 1: four chunks at interleave=1 -> slot 0
+        # decodes several steps while slot 1 is still mid-prefill
+        srv.serve(make_requests(rng, [6, 30], max_new=8))
+        partial = [(a, m) for a, m in seen if a is not None and not a.all()]
+        assert partial, "no decode step ever saw a mid-prefill slot"
+        act, mat = partial[0]
+        assert act[0] and not act[1]
+        np.testing.assert_array_equal(
+            mat[:, 1], np.full(cfg.n_layers, DEAD_SLOT_ALPHA, np.float32))
+        assert not np.any(mat[:, 0] == DEAD_SLOT_ALPHA)
+
+
+class TestRetraceRegressions:
+    def test_legacy_scheduler_prompt_ladder_bounds_jit_cache(self):
+        """Satellite regression: 20 distinct prompt lengths through the
+        legacy (slot_refill=False) scheduler used to cost 20 prefill
+        traces; with prefill_chunk they pad to the chunk ladder."""
+        cfg = CFG.replace(name="tiny-pfc-ladder")
+        scfg = ServeConfig(batch=1, max_len=64, slot_refill=False,
+                           prefill_chunk=8)
+        srv = Server(lm, cfg, scfg, params_for(cfg))
+        rng = np.random.default_rng(5)
+        plens = list(range(5, 25))          # 20 distinct lengths
+        done = srv.serve(make_requests(rng, plens, max_new=4))
+        assert len(done) == 20
+        # lengths 5..24 pad to {8, 16, 24}: bounded by max_len / chunk,
+        # not by the number of distinct prompt lengths
+        n_traces = srv.prefill_fn._cache_size()
+        assert n_traces <= scfg.max_len // scfg.prefill_chunk, n_traces
+        assert n_traces == 3, n_traces
+
+    def test_slot_refill_zero_retraces_after_warmup(self):
+        """Acceptance: after the first batch warms the (single) chunk
+        shape, serving new prompt lengths never traces again."""
+        cfg = CFG.replace(name="tiny-pfc-warm")
+        scfg = ServeConfig(batch=2, max_len=64, prefill_chunk=8)
+        srv = Server(lm, cfg, scfg, params_for(cfg))
+        rng = np.random.default_rng(6)
+        srv.serve(make_requests(rng, [5, 9], max_new=3))
+        warm = dict(srv._prefill_traces)
+        assert warm == {(8, False): 1}, warm
+        srv.serve(make_requests(rng, [7, 13, 21, 11], max_new=3))
+        assert dict(srv._prefill_traces) == warm, srv._prefill_traces
+
+    def test_prefill_chunk_validation(self):
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            Server(lm, CFG, ServeConfig(batch=2, max_len=64,
+                                        prefill_chunk=7), params_for(CFG))
+        with pytest.raises(ValueError, match="prefill_interleave"):
+            Server(lm, CFG, ServeConfig(batch=2, max_len=64, prefill_chunk=8,
+                                        prefill_interleave=0),
+                   params_for(CFG))
+
+
+class TestLatencyAccounting:
+    """Satellite bugfix: latency_s runs admission -> last token; the queue
+    wait is measured separately instead of silently vanishing."""
+
+    def _served(self, **scfg_kw):
+        cfg = CFG.replace(name="tiny-pfc-lat")
+        srv = Server(lm, cfg, ServeConfig(batch=1, max_len=64, **scfg_kw),
+                     params_for(cfg))
+        rng = np.random.default_rng(7)
+        return srv.serve(make_requests(rng, [5, 9, 7], max_new=4))
+
+    def test_slot_refill_stamps(self):
+        done = self._served()
+        for r in done:
+            assert r.t_admit > 0.0
+            assert r.queue_wait_s >= 0.0
+            assert r.ttft_s > 0.0
+            assert r.latency_s >= r.ttft_s >= r.queue_wait_s
+        # batch=1: later admissions genuinely wait in the queue, and that
+        # wait is inside the admission-relative latency
+        waits = sorted(r.queue_wait_s for r in done)
+        assert waits[-1] > waits[0]
+        slowest = max(done, key=lambda r: r.queue_wait_s)
+        assert slowest.latency_s > slowest.queue_wait_s
+
+    def test_chunked_prefill_stamps(self):
+        done = self._served(prefill_chunk=8)
+        for r in done:
+            assert r.ttft_s > 0.0 and r.latency_s >= r.ttft_s
+
+    def test_legacy_scheduler_stamps(self):
+        done = self._served(slot_refill=False)
+        for r in done:
+            assert r.t_admit > 0.0 and r.queue_wait_s >= 0.0
+            assert r.latency_s >= r.queue_wait_s
+            assert r.ttft_s == 0.0    # not separable without slot refill
+
+    def test_report_percentiles(self):
+        reqs = []
+        for i in range(10):
+            r = Request(uid=i, prompt=np.zeros(4, np.int32), max_new=1)
+            r.out = np.zeros(1, np.int32)
+            r.t_admit, r.t_start, r.t_end = 1.0, 1.0 + i, 2.0 + i
+            r.latency_s = r.t_end - r.t_admit
+            r.ttft_s = 0.5 * (i + 1)
+            r.queue_wait_s = float(i)
+            reqs.append(r)
+        rep = throughput_report(reqs)
+        assert rep["p50_ttft_s"] == 0.5 * 5      # nearest-rank over 10
+        assert rep["p95_ttft_s"] == 0.5 * 10
+        assert rep["p50_queue_wait_s"] == 4.0
+        assert rep["p95_queue_wait_s"] == 9.0
+        assert rep["mean_queue_wait_s"] == pytest.approx(4.5)
+        assert rep["p95_latency_s"] == 10.0
+
+    def test_report_skips_unstamped(self):
+        """Hand-built requests (ttft/queue-wait defaults) must not drag
+        the percentiles to zero."""
+        reqs = []
+        for i in range(3):
+            r = Request(uid=i, prompt=np.zeros(4, np.int32), max_new=1)
+            r.out = np.zeros(1, np.int32)
+            r.t_start, r.t_end, r.latency_s = 1.0, 2.0, 1.0
+            reqs.append(r)
+        rep = throughput_report(reqs)
+        assert rep["mean_ttft_s"] == 0.0
+        assert rep["p95_queue_wait_s"] == 0.0
+
+
+class TestControllerPrefillRider:
+    """Prefill-density telemetry rider: a separate EMA outside the decode
+    ControllerState, nudging alpha at prefill_weight of the decode gain."""
+
+    def _ctl(self, **ccfg_kw):
+        tiered = ccfg_kw.pop("tiered", False)
+        ccfg = ControllerConfig(enabled=True, **ccfg_kw)
+        return AlphaController(ccfg, AlphaSchedule(), 2,
+                               tiers=DEFAULT_SLA_TIERS if tiered else None)
+
+    def test_observe_moves_alpha_toward_target(self):
+        c = self._ctl()
+        a0 = c.state.alphas.copy()
+        for _ in range(4):
+            c.observe_prefill(
+                {"realized_density": np.full(2, 0.9, np.float32)})
+        assert c.prefill_chunks == 4
+        # density far above target -> alpha must fall (less conservative)
+        assert np.all(c.state.alphas < a0)
+        rep = c.report()
+        assert rep["prefill_chunks"] == 4
+        assert rep["mean_prefill_density"] > 0.25
+
+    def test_tiered_updates_only_owning_tier(self):
+        c = self._ctl(tiered=True)
+        a0 = c.state.alphas.copy()
+        c.observe_prefill({"realized_density": np.full(2, 0.9, np.float32)},
+                          tier=1)
+        assert np.any(c.state.alphas[1] != a0[1])
+        np.testing.assert_array_equal(c.state.alphas[0], a0[0])
+        np.testing.assert_array_equal(c.state.alphas[2], a0[2])
+
+    def test_zero_weight_is_observe_only(self):
+        c = self._ctl(prefill_weight=0.0)
+        a0 = c.state.alphas.copy()
+        c.observe_prefill({"realized_density": np.full(2, 0.9, np.float32)})
+        np.testing.assert_array_equal(c.state.alphas, a0)
+        assert c.prefill_chunks == 1
+
+    def test_checkpoint_roundtrip_and_tolerant_restore(self):
+        c = self._ctl(tiered=True)
+        c.observe_prefill({"realized_density": np.full(2, 0.6, np.float32)},
+                          tier=0)
+        tree, meta = c.state_dict()
+        c2 = self._ctl(tiered=True)
+        c2.load_state_dict(tree, meta)
+        assert c2.prefill_chunks == 1
+        np.testing.assert_array_equal(c2.prefill_ema, c.prefill_ema)
+        # a checkpoint written before the rider existed restores cleanly
+        legacy = {k: v for k, v in meta.items()
+                  if k not in ("prefill_ema", "prefill_chunks")}
+        c3 = self._ctl(tiered=True)
+        c3.load_state_dict(tree, legacy)
+        assert c3.prefill_chunks == 0
+
+    def test_sparse_prefill_serve_feeds_rider(self):
+        sp = dataclasses.replace(default_sparse(activation="relu"),
+                                 strategy="masked", sparse_prefill=True,
+                                 prefill_max_tokens=8)
+        cfg = CFG.replace(name="tiny-pfc-sp", activation="relu", sparse=sp)
+        ccfg = ControllerConfig(enabled=True, per_tier=True)
+        srv = Server(lm, cfg, ServeConfig(batch=2, max_len=64,
+                                          prefill_chunk=8, controller=ccfg),
+                     params_for(cfg))
+        rng = np.random.default_rng(8)
+        done = srv.serve(make_requests(
+            rng, [5, 13, 9], max_new=4,
+            slas=["latency", "balanced", "quality"]))
+        assert len(done) == 3
+        rep = srv.controller.report()
+        # 5,13,9 pad to 8,16,16 -> 5 chunks observed
+        assert rep["prefill_chunks"] == 5
+        assert 0.0 < rep["mean_prefill_density"] <= 1.0
