@@ -1,0 +1,105 @@
+"""Tolerance-gated diff for BENCH_*.json reports (the nightly CI gate).
+
+Earlier revisions diffed wall-clock floats exactly, which made the
+nightly ``--against`` comparison either pure noise (every run "differs")
+or purely informational (never fails, so structural regressions — a
+changed trace count, a different dispatch total, a missing bucket —
+sailed through).  The fix is a split compare:
+
+* **Structural fields** — dict key sets, list lengths, strings, bools,
+  ints and deterministic analytic floats (shapes, ``chunk_traces``,
+  ``dispatches``, ``hbm_bytes``) — must match EXACTLY.  These encode
+  invariants, not measurements.
+* **Timing fields** — any leaf whose key path component ends in ``_s``
+  or ``_us`` (``tok_per_s``, ``wall_s``, TTFT/ITL percentiles, the
+  ``wall_us`` sub-dicts) — compare with a RELATIVE tolerance; only a
+  drift past the threshold fails.  CPU wall clock on shared runners is
+  noisy, so the default tolerance is generous (50%); every delta is
+  still printed for eyeballing.
+* ``generated_unix`` (and anything in ``SKIP_KEYS``) is ignored.
+
+``compare()`` returns the list of failure strings; the benches exit
+non-zero iff it is non-empty.
+"""
+from __future__ import annotations
+
+import math
+
+SKIP_KEYS = ("generated_unix",)
+
+
+def _is_timing(key: str) -> bool:
+    return key.endswith("_s") or key.endswith("_us")
+
+
+def compare(old, new, rel_tol: float = 0.5, label: str = "bench_diff",
+            _path: str = "", _timing: bool = False) -> list[str]:
+    """Diff two bench reports; print timing deltas, return failures.
+
+    ``rel_tol`` is the relative drift past which a timing leaf fails
+    (0.5 = fail only beyond +/-50%).  Everything non-timing must be
+    exactly equal.
+    """
+    fails: list[str] = []
+    if isinstance(old, dict) and isinstance(new, dict):
+        ok = set(old) - set(SKIP_KEYS)
+        nk = set(new) - set(SKIP_KEYS)
+        for k in sorted(ok ^ nk):
+            fails.append(f"{_path or '.'}: key {k!r} "
+                         f"{'removed' if k in ok else 'added'}")
+        for k in sorted(ok & nk):
+            fails += compare(old[k], new[k], rel_tol, label,
+                            f"{_path}.{k}" if _path else str(k),
+                            _timing or _is_timing(str(k)))
+        return fails
+    if isinstance(old, (list, tuple)) and isinstance(new, (list, tuple)):
+        if len(old) != len(new):
+            return [f"{_path}: length {len(old)} -> {len(new)}"]
+        for i, (o, n) in enumerate(zip(old, new)):
+            fails += compare(o, n, rel_tol, label, f"{_path}[{i}]", _timing)
+        return fails
+    if _timing and isinstance(old, (int, float)) \
+            and isinstance(new, (int, float)) \
+            and not isinstance(old, bool) and not isinstance(new, bool):
+        o, n = float(old), float(new)
+        if not (math.isfinite(o) and math.isfinite(n)):
+            if not (o == n or (math.isnan(o) and math.isnan(n))):
+                fails.append(f"{_path}: non-finite {o} -> {n}")
+            return fails
+        rel = abs(n - o) / max(abs(o), 1e-12)
+        verdict = "FAIL" if rel > rel_tol else "ok"
+        print(f"{label},{_path},old={o:.6g},new={n:.6g},"
+              f"delta={(n - o) / max(abs(o), 1e-12) * 100.0:+.1f}%,"
+              f"{verdict}")
+        if rel > rel_tol:
+            fails.append(f"{_path}: timing drift {rel * 100.0:.1f}% "
+                         f"> tolerance {rel_tol * 100.0:.0f}% "
+                         f"({o:.6g} -> {n:.6g})")
+        return fails
+    if old != new or type(old) is not type(new):
+        fails.append(f"{_path}: structural {old!r} -> {new!r}")
+    return fails
+
+
+def check_against(path: str, report: dict, rel_tol: float,
+                  label: str) -> int:
+    """Load ``path`` and compare; returns the exit status for main().
+
+    An unreadable/corrupt baseline is skipped (status 0) — first runs
+    and fresh checkouts have no baseline; a *readable* baseline that
+    fails the compare returns 1.
+    """
+    import json
+    try:
+        with open(path) as f:
+            old = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{label},skipped: {e}")
+        return 0
+    fails = compare(old, report, rel_tol=rel_tol, label=label)
+    for msg in fails:
+        print(f"{label},FAIL,{msg}")
+    if fails:
+        print(f"{label}: {len(fails)} failure(s) past tolerance "
+              f"{rel_tol * 100.0:.0f}%")
+    return 1 if fails else 0

@@ -1,7 +1,7 @@
 """Kernel-level microbench for the sparse decode-MLP pipeline.
 
     PYTHONPATH=src python -m benchmarks.bench_kernels [--quick] \
-        [--out BENCH_kernels.json]
+        [--out BENCH_kernels.json] [--against BENCH_kernels.json]
 
 For each capacity bucket of the ladder, measures the single-dispatch-pair
 pallas pipeline (predictor kernel -> XLA top-C -> fused MLP kernel,
@@ -16,11 +16,15 @@ interpret mode on CPU) against the gather and dense XLA paths:
 
 Writes one JSON document so CI can archive a comparable series per commit
 (nightly job uploads the artifact — .github/workflows/ci.yml).
+``--against`` diffs a previous run via ``benchmarks.bench_diff``:
+structural fields (``dispatches``, ``hbm_bytes``, bucket layout) exact,
+``wall_us`` timings within ``--tolerance``, exit 1 past the threshold.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -96,6 +100,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--against", default="",
+                    help="previous BENCH_kernels.json to diff against: "
+                         "structural fields exact, wall_us within "
+                         "--tolerance, exit 1 past the threshold")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="relative timing drift that fails the diff "
+                         "(0.5 = 50%%)")
     ap.add_argument("--d", type=int, default=0)
     ap.add_argument("--k", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
@@ -106,6 +117,11 @@ def main() -> None:
     iters = 2 if args.quick else 5
     report = bench(d, k, args.batch, (0.0625, 0.125, 0.25, 0.5), iters)
     report["generated_unix"] = time.time()
+    status = 0
+    if args.against:
+        from benchmarks.bench_diff import check_against
+        status = check_against(args.against, report, args.tolerance,
+                               "bench_kernels_diff")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     for row in report["buckets"]:
@@ -115,6 +131,7 @@ def main() -> None:
               f"pallas_us={row['wall_us']['pallas_interpret']:.0f},"
               f"gather_us={row['wall_us']['gather']:.0f}")
     print(f"wrote {args.out}")
+    sys.exit(status)
 
 
 if __name__ == "__main__":

@@ -16,23 +16,32 @@ and chunked prefill interleaved with decode — and reports:
 * tok/s               — queue tokens over true wall clock
 * chunk_traces        — executable count per (chunk shape, collect)
                         (the zero-retraces-after-warmup invariant)
+* paged_kv_study      — multi-turn chat over the paged KV pool
+                        (DESIGN.md §10): turn-2 prefill-chunk reduction
+                        from prefix/session reuse (>= 90%), sessions
+                        retained vs dense slot capacity, paged vs dense
+                        tok/s.  ``--study-only`` runs just this and
+                        gates the two invariants (the tier-1 CI smoke).
 
-CPU wall-clock is a trend proxy, not TPU time.  ``--against`` prints a
-delta table vs a previous run (the nightly diffs against the committed
-seed) without failing the job — timing on shared CI runners is noisy;
-the diff is for eyeballing drift, the invariants are asserted in
-tests/test_prefill_chunked.py.
+CPU wall-clock is a trend proxy, not TPU time.  ``--against`` diffs a
+previous run (the nightly compares against the committed seed) through
+``benchmarks.bench_diff``: structural fields (shape, backend,
+``chunk_traces``) must match exactly, timing fields compare with a
+relative tolerance (``--tolerance``, default 50% — shared-runner CPU
+clocks are noisy), and the job exits non-zero only past the threshold.
+The hard invariants are still asserted in tests/test_prefill_chunked.py.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PagedKVConfig
 from repro.models import lm
 from repro.runtime.server import Request, Server, ServeConfig, \
     throughput_report
@@ -76,17 +85,77 @@ def _serve(cfg, scfg, n_req, max_new):
     }
 
 
-_DIFF_KEYS = ("tok_per_s", "p50_ttft_s", "p95_ttft_s", "p95_itl_s")
+def paged_kv_study(cfg, quick: bool) -> dict:
+    """Multi-turn chat over the paged KV pool vs dense re-prefill
+    (DESIGN.md §10).
 
+    ``n_sessions`` two-turn conversations share one long system prompt;
+    turn 2 resends the full history plus a short follow-up.  The paged
+    server admits turn 2 by reference (session chain + prefix trie), so
+    nearly every turn-2 chunk is skipped; the dense server re-prefills
+    everything.  Deterministic structural outputs (gated exactly by the
+    nightly diff):
 
-def _print_diff(old: dict, new: dict) -> None:
-    for side in ("monolithic", "chunked"):
-        o, n = old.get(side, {}), new.get(side, {})
-        for k in _DIFF_KEYS:
-            if k in o and k in n and o[k]:
-                delta = (n[k] - o[k]) / o[k] * 100.0
-                print(f"bench_prefill_diff,{side},{k},"
-                      f"old={o[k]:.5f},new={n[k]:.5f},delta={delta:+.1f}%")
+    * ``turn2_chunk_reduction`` — fraction of turn-2 prefill chunks the
+      paged server skipped (the ISSUE acceptance bar: >= 0.90)
+    * ``sessions_retained``     — live sessions held at dense-equivalent
+      pool bytes (> ``slots``: the dense layout caps at batch
+      conversations, the pool dedups the shared prefix once)
+    """
+    n_sessions = 6 if quick else 8
+    batch, max_len, bs, pc, max_new = 4, 256, 16, 16, 8
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, 144)     # shared system prompt
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def mk_server(paged):
+        scfg = ServeConfig(
+            batch=batch, max_len=max_len, prefill_chunk=pc,
+            prefill_interleave=2,
+            paged_kv=PagedKVConfig(block_size=bs) if paged else None)
+        return Server(lm, cfg, scfg, params)
+
+    turn1 = [Request(uid=i, prompt=np.concatenate(
+                [shared, rng.integers(0, cfg.vocab, 16)]),
+             max_new=max_new, session_id=f"s{i}")
+             for i in range(n_sessions)]
+    follow = [rng.integers(0, cfg.vocab, 8) for _ in range(n_sessions)]
+
+    out = {}
+    for mode, paged in (("paged", True), ("dense", False)):
+        srv = mk_server(paged)
+        t0 = time.perf_counter()
+        done1 = srv.serve([Request(uid=r.uid, prompt=r.prompt,
+                                   max_new=r.max_new,
+                                   session_id=r.session_id if paged
+                                   else None)
+                           for r in turn1])
+        hist = {r.uid: np.concatenate([r.prompt, r.out]) for r in done1}
+        run0 = srv.prefill_chunks_run
+        done2 = srv.serve([Request(uid=i, prompt=np.concatenate(
+                              [hist[i], follow[i]]),
+                           max_new=max_new,
+                           session_id=f"s{i}" if paged else None)
+                           for i in range(n_sessions)])
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done1 + done2)
+        ran = srv.prefill_chunks_run - run0
+        out[mode] = {"wall_s": wall,
+                     "tok_per_s": toks / max(wall, 1e-9),
+                     "turn2_chunks_run": ran}
+        if paged:
+            stats = srv.paged_stats()
+            skipped = srv.prefill_chunks_skipped
+            out["turn2_chunks_skipped"] = skipped
+            out["turn2_chunk_reduction"] = skipped / max(1, skipped + ran)
+            out["sessions_retained"] = stats["sessions"]
+            out["slots"] = batch
+            out["pool_rows"] = stats["n_blocks"] * bs
+            out["dense_rows"] = batch * max_len
+            for k in ("reuse_hits", "reused_tokens", "dedup_blocks",
+                      "cow_forks", "committed_blocks"):
+                out[k] = stats.get(k, 0)
+    return out
 
 
 def main() -> None:
@@ -94,10 +163,18 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="BENCH_prefill.json")
     ap.add_argument("--against", default="",
-                    help="previous BENCH_prefill.json to diff against "
-                         "(informational; never fails)")
+                    help="previous BENCH_prefill.json to diff against: "
+                         "structural fields exact, timing fields within "
+                         "--tolerance, exit 1 past the threshold")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="relative timing drift that fails the diff "
+                         "(0.5 = 50%%)")
     ap.add_argument("--chunk", type=int, default=64)
     ap.add_argument("--interleave", type=int, default=2)
+    ap.add_argument("--study-only", action="store_true",
+                    help="run only the paged-KV multi-turn study and gate "
+                         "its invariants (>= 90%% turn-2 chunks skipped, "
+                         "sessions retained > slots) — the CI smoke")
     args = ap.parse_args()
 
     d = 64 if args.quick else 128
@@ -105,6 +182,16 @@ def main() -> None:
                       d_model=d, n_layers=4, n_heads=4, n_kv_heads=4,
                       d_ff=4 * d, max_seq=256, dtype="float32",
                       param_dtype="float32", attn_chunk=256, remat=False)
+    if args.study_only:
+        study = paged_kv_study(cfg, args.quick)
+        print(f"paged_kv_study,reduction={study['turn2_chunk_reduction']:.3f},"
+              f"skipped={study['turn2_chunks_skipped']},"
+              f"sessions={study['sessions_retained']}/{study['slots']} slots,"
+              f"paged_tok_per_s={study['paged']['tok_per_s']:.1f},"
+              f"dense_tok_per_s={study['dense']['tok_per_s']:.1f}")
+        ok = (study["turn2_chunk_reduction"] >= 0.90
+              and study["sessions_retained"] > study["slots"])
+        sys.exit(0 if ok else 1)
     n_req = 8 if args.quick else 16
     max_new = 8 if args.quick else 16
     mk = lambda pc: ServeConfig(batch=4, max_len=256, prefill_chunk=pc,
@@ -116,8 +203,14 @@ def main() -> None:
         "backend": jax.default_backend(),
         "monolithic": _serve(cfg, mk(0), n_req, max_new),
         "chunked": _serve(cfg, mk(args.chunk), n_req, max_new),
+        "paged_kv_study": paged_kv_study(cfg, args.quick),
         "generated_unix": time.time(),
     }
+    study = report["paged_kv_study"]
+    print(f"paged_kv_study,reduction={study['turn2_chunk_reduction']:.3f},"
+          f"sessions={study['sessions_retained']}/{study['slots']} slots,"
+          f"paged_tok_per_s={study['paged']['tok_per_s']:.1f},"
+          f"dense_tok_per_s={study['dense']['tok_per_s']:.1f}")
     for side in ("monolithic", "chunked"):
         r = report[side]
         print(f"bench_prefill,{side},tok_per_s={r['tok_per_s']:.1f},"
@@ -125,15 +218,15 @@ def main() -> None:
               f"p95_ttft_s={r['p95_ttft_s']:.4f},"
               f"p95_itl_s={r['p95_itl_s']:.5f},"
               f"traces={r['chunk_traces']}")
+    status = 0
     if args.against:
-        try:
-            with open(args.against) as f:
-                _print_diff(json.load(f), report)
-        except (OSError, json.JSONDecodeError) as e:
-            print(f"bench_prefill_diff,skipped: {e}")
+        from benchmarks.bench_diff import check_against
+        status = check_against(args.against, report, args.tolerance,
+                               "bench_prefill_diff")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")
+    sys.exit(status)
 
 
 if __name__ == "__main__":

@@ -97,6 +97,35 @@ class ControllerConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    """Paged KV pool for the slot-refill serve path (DESIGN.md §10).
+
+    Replaces the per-slot dense ``max_len`` KV buffers with a global block
+    pool + per-slot block tables, so resident capacity is a function of
+    *tokens resident* rather than slots × max_len: committed full blocks are
+    deduplicated through a hash trie (shared system prompts and resumed
+    session history admit by reference instead of re-prefilling), and
+    diverging reuse is copy-on-write forked.
+    """
+
+    block_size: int = 16    # tokens per pool block; must divide
+                            # ServeConfig.max_len, and (when chunked prefill
+                            # is on) divide prefill_chunk so trie-aligned
+                            # reuse lands on chunk boundaries
+    pool_blocks: int = 0    # total pool blocks INCLUDING the two reserved
+                            # blocks (null + trash); 0 = auto-size to the
+                            # dense equivalent: batch * max_len/block_size
+                            # + 2 — same pool bytes as the per-slot dense
+                            # buffers it replaces
+    prefix_cache: bool = True   # hash-trie admission of committed blocks
+                                # (off: the pool still pages, but every
+                                # prompt re-prefills from scratch)
+    max_sessions: int = 64  # LRU cap on retained session chains; a retained
+                            # session pins its blocks against eviction until
+                            # the session itself is evicted
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                  # dense | moe | hybrid | xlstm | vlm | encdec
@@ -155,6 +184,12 @@ class ModelConfig:
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
     kv_cache_dtype: str = "bfloat16"   # "int8": quantized KV (scales factored)
+    paged_attn_kernel: bool = False    # paged decode attention through the
+                                       # pallas page-gather kernel
+                                       # (kernels/paged_attn.py) instead of
+                                       # the jnp gather path; the jnp path
+                                       # is the bitwise reference
+                                       # (DESIGN.md §10)
 
     # execution
     max_seq: int = 4096

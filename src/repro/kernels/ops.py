@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels import sign_pack as _sign_pack
 from repro.kernels import predict as _predict
+from repro.kernels import paged_attn as _paged
 from repro.kernels import sparse_mlp_fused as _fused
 
 
@@ -185,6 +186,48 @@ def fused_sparse_mlp_chunk(x: jax.Array,
         group_size=group_size, activation=activation,
         fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
         interpret=interp, groups_per_step=groups_per_step, block_rows=bt)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    table: jax.Array, lengths: jax.Array,
+                    k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None, *,
+                    softcap: float = 0.0, window: int = 0,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Paged decode attention over KV-pool pages (DESIGN.md §10):
+    q (B, H, hd) × pages (N, block, K, hd) + table (B, nbps) + lengths (B,)
+    -> normalized context (B, H, hd) f32.  int8 pools (factored scales) and
+    shapes the kernel can't hold resident run the dense gather oracle."""
+    interp = _resolve_interpret(interpret)
+    if k_scale is not None or k_pages.dtype == jnp.int8:
+        return ref.paged_attention_ref(q, k_pages, v_pages, table, lengths,
+                                       k_scale, v_scale, softcap=softcap,
+                                       window=window)
+    try:
+        _paged.check_tiling(k_pages.shape[0], k_pages.shape[1],
+                            k_pages.shape[2], k_pages.shape[3],
+                            k_pages.dtype.itemsize, q.shape[1])
+    except ValueError:   # degenerate/oversized pool: explicit -> oracle
+        return ref.paged_attention_ref(q, k_pages, v_pages, table, lengths,
+                                       softcap=softcap, window=window)
+    return _paged.paged_attention(q, k_pages, v_pages, table, lengths,
+                                  softcap=softcap, window=window,
+                                  interpret=interp)
+
+
+def paged_kv_write(pages: jax.Array, vals: jax.Array, blocks: jax.Array,
+                   offsets: jax.Array, *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Scatter one row per slot into pool pages (the paged decode's KV
+    write); bitwise-equal to the jnp scatter oracle."""
+    interp = _resolve_interpret(interpret)
+    try:
+        _paged.check_tiling(pages.shape[0], pages.shape[1], 1, 1,
+                            pages.dtype.itemsize, 1)
+    except ValueError:
+        return ref.paged_kv_write_ref(pages, vals, blocks, offsets)
+    return _paged.paged_kv_write(pages, vals, blocks, offsets,
+                                 interpret=interp)
 
 
 class BlockPlan(NamedTuple):

@@ -141,3 +141,67 @@ def fused_sparse_mlp_chunk_ref(x: jax.Array,
                                   activation=activation,
                                   fatrelu_threshold=fatrelu_threshold)
     return y, tel
+
+
+# ------------------------------------------------------- paged attention --
+
+_NEG_INF = -1e30     # matches layers/attention.py NEG_INF (mask parity)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        table: jax.Array, lengths: jax.Array,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None, *,
+                        softcap: float = 0.0, window: int = 0) -> jax.Array:
+    """Dense oracle for kernels.paged_attn.paged_attention: gather the pool
+    pages into the per-slot dense (B, S, K, hd) view, then run the decode
+    softmax at full cache width — the identical operation sequence as
+    ``layers.attention.decode_attend_partial`` + normalize, so it is pinned
+    BITWISE against the dense per-slot decode path (stale lanes in recycled
+    pages sit behind the NEG_INF mask with softmax weight exactly +0.0 —
+    the kv_pad-to-width denominator argument, DESIGN.md §9/§10).  int8
+    pools pass the factored per-(B,S,K) scales."""
+    b, h, hd = q.shape
+    n, bs, kvh, _ = k_pages.shape
+    nbps = table.shape[1]
+    s_max = nbps * bs
+    rep = h // kvh
+    kk = k_pages[table].reshape(b, s_max, kvh, hd)
+    vv = v_pages[table].reshape(b, s_max, kvh, hd)
+    qg = q.reshape(b, kvh, rep, hd)
+    qg = qg.astype(jnp.bfloat16 if kk.dtype == jnp.int8 else kk.dtype)
+    s = jnp.einsum("bkrh,btkh->bkrt", qg, kk,
+                   preferred_element_type=jnp.float32)
+    # constants folded in python, matching the kernel (a chained
+    # (s*scale)/softcap invites per-graph simplifier drift)
+    if softcap > 0.0:
+        s = jnp.tanh(s * ((hd ** -0.5) / softcap)) * softcap
+    else:
+        s = s * (hd ** -0.5)
+    if k_scale is not None:
+        ks = k_scale[table].reshape(b, s_max, kvh)
+        s = s * ks.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    kvp = jnp.arange(s_max, dtype=jnp.int32)
+    mask = kvp[None, :] <= lengths[:, None]
+    if window > 0:
+        mask &= (lengths[:, None] - kvp[None, :]) < window
+    s = jnp.where(mask[:, None, None, :], s, _NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    if v_scale is not None:
+        vs = v_scale[table].reshape(b, s_max, kvh)
+        pv = p * vs.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        o = jnp.einsum("bkrt,btkh->bkrh", pv.astype(jnp.bfloat16), vv,
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bkrt,btkh->bkrh", p.astype(vv.dtype), vv,
+                       preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(b, h, hd)
+
+
+def paged_kv_write_ref(pages: jax.Array, vals: jax.Array, blocks: jax.Array,
+                       offsets: jax.Array) -> jax.Array:
+    """Oracle for kernels.paged_attn.paged_kv_write (one scatter)."""
+    return pages.at[blocks, offsets].set(vals.astype(pages.dtype))

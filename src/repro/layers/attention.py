@@ -32,6 +32,9 @@ class AttentionConfig:
     causal: bool = True
     cross: bool = False             # K/V from encoder states
     d_kv_input: int = 0             # encoder width for cross-attn (0 => d_model)
+    paged_kernel: bool = False      # paged decode via the pallas page-gather
+                                    # kernel (kernels/paged_attn.py); False =
+                                    # the jnp gather path (bitwise reference)
 
 
 def init_attention(key: jax.Array, cfg: AttentionConfig,
@@ -369,6 +372,122 @@ def decode_attend(params: dict, x: jax.Array, cfg: AttentionConfig,
 
 def q_pos_sentinel(s_max: int, cache_len: jax.Array) -> jax.Array:
     return jnp.int32(s_max) + cache_len + 1
+
+
+# ---------------------------------------------------------- paged decode ---
+#
+# Paged KV pool (DESIGN.md §10): the per-layer cache is a global block pool
+# with leaves (N, block, K, hd) instead of per-slot (B, max_len, K, hd); a
+# per-slot block table (B, max_len/block) maps each slot's logical sequence
+# blocks onto pool blocks.  The decode step scatters the new token's K/V
+# into the owning pool block, gathers the table back into the dense per-slot
+# view, and runs the IDENTICAL attention math as ``decode_attend`` — same
+# shapes, same reduction order, so greedy tokens and telemetry are bitwise
+# equal to the dense path.  Stale content in recycled pool blocks sits on
+# masked lanes only: after the NEG_INF mask its softmax weight is exactly
+# +0.0, so it contributes nothing (the same kv_pad-to-width denominator
+# argument chunked prefill uses, DESIGN.md §9).
+
+def paged_update_kv(pool: dict, k_new: jax.Array, v_new: jax.Array,
+                    table: jax.Array, cache_len: jax.Array) -> dict:
+    """Scatter one token per slot into the pool: (B,1,K,hd) K/V at per-slot
+    position ``cache_len`` lands in block ``table[b, pos//block]`` at row
+    ``pos % block``.  Slots parked on a shared write-off block (the
+    scheduler points dead/pending slots' whole table row there) collide —
+    harmless, that block is never gathered for a live slot."""
+    idx = jnp.asarray(cache_len).astype(jnp.int32)        # (B,)
+    bs = pool["k"].shape[1]
+    blk = jnp.take_along_axis(table, (idx // bs)[:, None], axis=1)[:, 0]
+    off = idx % bs
+
+    def put(buf, upd):
+        return buf.at[blk, off].set(upd[:, 0].astype(buf.dtype))
+
+    out = dict(pool)
+    if pool["k"].dtype == jnp.int8:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        out["k"] = put(pool["k"], kq)
+        out["v"] = put(pool["v"], vq)
+        out["k_scale"] = put(pool["k_scale"], ks)
+        out["v_scale"] = put(pool["v_scale"], vs)
+        return out
+    out["k"] = put(pool["k"], k_new)
+    out["v"] = put(pool["v"], v_new)
+    return out
+
+
+def paged_gather_kv(pool: dict, table: jax.Array) -> dict:
+    """Gather per-slot dense views from the pool: leaves (N, block, ...) +
+    table (B, nbps) -> (B, nbps*block, ...) — the exact shapes the dense
+    decode attends, so downstream math is operation-for-operation the
+    per-slot path."""
+    b, nbps = table.shape
+
+    def take(buf):
+        g = buf[table]                                    # (B, nbps, bs, ...)
+        return g.reshape((b, nbps * buf.shape[1]) + buf.shape[2:])
+
+    return {k: take(v) for k, v in pool.items()}
+
+
+def paged_decode_attend(params: dict, x: jax.Array, cfg: AttentionConfig,
+                        pool: dict, cache_len: jax.Array,
+                        table: jax.Array) -> tuple:
+    """Single-token decode against a paged KV pool. x: (B, 1, d); ``pool``
+    holds this layer's block-pool leaves; ``table`` (B, nbps) int32;
+    ``cache_len`` (B,) per-slot lengths (the slot-refill layout — paged
+    serving always runs per-slot).  Returns (out (B,1,d), new_pool).
+    Bitwise-identical to ``decode_attend`` on the per-slot dense cache
+    holding the same live tokens (see module comment)."""
+    from repro.layers.rope import apply_rope
+    from repro.sharding import rules as R
+    cl = jnp.asarray(cache_len)
+    if cl.ndim != 1:
+        raise ValueError("paged decode runs per-slot: cache_len must be (B,)")
+    pos = cl[:, None]
+    q, k, v = _project_qkv(params, x, cfg)
+    if not cfg.cross:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    if (cfg.paged_kernel and pool["k"].dtype != jnp.int8
+            and R.current_mesh() is None):
+        # pallas page-gather route (kernels/paged_attn.py): scatter + attend
+        # straight off the pool pages, no dense gather materialized.  Bitwise
+        # against the jnp path below (pinned in tests); int8 pools and mesh
+        # runs stay on the jnp path (scale epilogue / GSPMD placement live
+        # there).
+        from repro.kernels import ops
+        bs = pool["k"].shape[1]
+        blk = jnp.take_along_axis(table, (cl // bs)[:, None], axis=1)[:, 0]
+        off = cl % bs
+        new_pool = dict(pool)
+        new_pool["k"] = ops.paged_kv_write(pool["k"], k[:, 0], blk, off)
+        new_pool["v"] = ops.paged_kv_write(pool["v"], v[:, 0], blk, off)
+        ctx = ops.paged_attention(q[:, 0], new_pool["k"], new_pool["v"],
+                                  table, cl, softcap=cfg.softcap,
+                                  window=cfg.window)
+        b = x.shape[0]
+        out = (ctx.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
+               @ params["wo"].astype(x.dtype))
+        return out, new_pool
+    pool = paged_update_kv(pool, k, v, table, cl)
+    dense = paged_gather_kv(pool, table)
+    # pin the gathered view to the dense cache's layout (S over 'model') so
+    # the mesh path partitions the attention dots exactly like the per-slot
+    # cache would — placement parity is what keeps tokens bitwise on the 2D
+    # mesh (DESIGN.md §8/§10); no-op without a mesh
+    dense = {kk: (R.shard_kv_cache(vv) if kk in ("k", "v")
+                  else R.shard_kv_scale(vv)) for kk, vv in dense.items()}
+    s_max = dense["k"].shape[1]
+    kv_positions = jnp.arange(s_max)
+    live = kv_positions <= cl[:, None]
+    sent = q_pos_sentinel(s_max, cl)
+    kvp = jnp.where(live, kv_positions, sent[:, None])
+    o, l, m = decode_attend_partial(q, dense["k"], dense["v"], cfg, kvp,
+                                    cl, dense.get("k_scale"),
+                                    dense.get("v_scale"))
+    return finalize_decode(o, l, params, x.dtype, cfg), pool
 
 
 def chunk_attend(params: dict, x: jax.Array, cfg: AttentionConfig,

@@ -38,6 +38,7 @@ def attn_cfg(cfg: ModelConfig, window: int = 0, cross: bool = False,
         window=window,
         cross=cross,
         d_kv_input=d_kv_input,
+        paged_kernel=cfg.paged_attn_kernel,
     )
 
 

@@ -199,12 +199,14 @@ def _block_fwd(blk, x, cfg: ModelConfig, positions, window, aux,
 
 
 def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
-                  lora=None, collect_stats: bool = False):
+                  lora=None, collect_stats: bool = False, block_table=None):
     """One transformer block, single-token decode with KV cache.
 
     Returns ``(x, cache, stats)``; ``stats`` is the MLP telemetry pytree
     (``SM.MLP_STAT_KEYS`` scalars) when ``collect_stats`` else ``None``.
     MoE blocks report zero stats (expert routing is its own control loop).
+    ``block_table`` switches the attention onto the paged KV pool (``cache``
+    is then this layer's pool leaves, DESIGN.md §10).
     """
     from repro.core import sparse_mlp as SM
     h = C.norm_apply(cfg, blk["ln1"], x)
@@ -214,7 +216,11 @@ def _block_decode(blk, x, cfg: ModelConfig, cache, cache_len, window, alpha,
         attn_params = dict(attn_params)
         attn_params["wq"] = attn_params["wq"] + (
             lora["lora_a"] @ lora["lora_b_q"]).astype(attn_params["wq"].dtype)
-    h, cache = A.decode_attend(attn_params, h, acfg, cache, cache_len)
+    if block_table is not None:
+        h, cache = A.paged_decode_attend(attn_params, h, acfg, cache,
+                                         cache_len, block_table)
+    else:
+        h, cache = A.decode_attend(attn_params, h, acfg, cache, cache_len)
     if cfg.post_block_norm:
         h = C.norm_apply(cfg, blk["ln1_post"], h)
     x = x + h
@@ -419,11 +425,16 @@ def _seed_cache(kv, max_len, cfg: ModelConfig):
 
 
 def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len,
-                        alphas=None, collect_stats: bool = False):
+                        alphas=None, collect_stats: bool = False,
+                        block_table=None):
     """``alphas``: optional traced override of the static schedule — either
     (n_layers,) per-layer or (n_layers, B) per-layer-per-slot (SLA tiers,
     DESIGN.md §5).  The serve-path controller's adapted values enter here
-    without retracing (the static path embeds them as constants)."""
+    without retracing (the static path embeds them as constants).
+    ``block_table`` (B, nbps): paged-KV mode — ``caches`` leaves are then
+    layer-stacked pool blocks (L, N, block, K, hd) instead of per-slot
+    dense buffers (DESIGN.md §10); the table is closed over by the scan
+    body (shared by every layer)."""
     windows = _windows(cfg)
     p = len(windows)
     if alphas is None:
@@ -446,7 +457,8 @@ def _dense_stack_decode(params, x, cfg: ModelConfig, caches, cache_len,
                 cache = jax.tree.map(lambda a: a[j], cache_g)
                 x, cache, st = _block_decode(blk, x, cfg, cache, cache_len,
                                              windows[j], al[j],
-                                             collect_stats=collect_stats)
+                                             collect_stats=collect_stats,
+                                             block_table=block_table)
                 new_caches.append(cache)
                 if collect_stats:
                     stats.append(st)
@@ -758,6 +770,26 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, max_len: int):
 # recurrent state has no offset splice; they stay on monolithic prefill).
 CHUNK_PREFILL_FAMILIES = ("dense", "moe")
 
+# Families whose caches are pure per-layer KV and can live in the paged
+# block pool (DESIGN.md §10); hybrid/xlstm recurrent state has no block
+# layout and keeps dense per-slot buffers.
+PAGED_KV_FAMILIES = ("dense", "moe")
+
+
+def init_kv_pool(cfg: ModelConfig, n_blocks: int, block_size: int) -> dict:
+    """Zero paged-KV block pool: the ``init_caches`` tree with every KV
+    leaf's (batch, max_len) dims replaced by (n_blocks, block_size) —
+    leaves (L, N, block, K, hd) (+ (L, N, block, K) int8 scales), shared by
+    every slot through per-slot block tables (DESIGN.md §10)."""
+    if cfg.family not in PAGED_KV_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV pool supports {PAGED_KV_FAMILIES}, not "
+            f"{cfg.family!r}")
+    tpl = init_caches(cfg, 1, block_size)
+    return jax.tree.map(
+        lambda a: jnp.zeros((a.shape[0], n_blocks) + a.shape[2:], a.dtype),
+        tpl)
+
 
 def prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
                   caches: dict, offset: jax.Array, valid: jax.Array, *,
@@ -856,7 +888,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 caches: dict, cache_len: jax.Array, *,
-                alphas=None, collect_stats: bool = False):
+                alphas=None, collect_stats: bool = False,
+                block_table=None):
     """One decode step. token: (B, 1) -> (logits (B, V), new caches).
 
     ``cache_len``: scalar shared length, or (B,) per-slot lengths — the
@@ -885,10 +918,14 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     """
     x = _embed_in(params, cfg, token)
     stats = None
+    if block_table is not None and cfg.family not in PAGED_KV_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV decode supports {PAGED_KV_FAMILIES}, not "
+            f"{cfg.family!r} (recurrent state has no block layout)")
     if cfg.family in ("dense", "moe"):
         x, caches, stats = _dense_stack_decode(params, x, cfg, caches,
                                                cache_len, alphas,
-                                               collect_stats)
+                                               collect_stats, block_table)
     elif cfg.family == "hybrid":
         x, caches, stats = _hybrid_decode(params, x, cfg, caches, cache_len,
                                           alphas, collect_stats)

@@ -1,0 +1,276 @@
+"""Host-side paged KV pool manager: block allocation, prefix-cache trie,
+sessions, copy-on-write forking and eviction (DESIGN.md §10).
+
+The device side is a global block pool per layer — leaves ``(L, N, block,
+...)`` (``models/lm.py:init_kv_pool``) — indexed by per-slot block tables
+``(B, nbps)``; this module owns everything about those tables that is pure
+host bookkeeping:
+
+* **Reserved blocks.**  Block 0 (``NULL``) stays all-zeros and is the
+  gather target of every unallocated table lane (a zero page reads exactly
+  like the dense path's zero-initialized cache).  Block 1 (``TRASH``) is
+  the write-off target: dead and mid-prefill slots point their whole table
+  row at it, so the decode step's unconditional KV scatter lands somewhere
+  harmless.  TRASH is never gathered for a live position.
+
+* **Refcounts.**  ``refcount[b]`` counts logical holders — slot table rows
+  and session chains.  The trie itself holds no reference: a committed
+  block at refcount 0 parks in an LRU of evictable-but-matchable blocks
+  (still admitting reuse until the allocator reclaims it).
+
+* **Prefix trie.**  Committed blocks are keyed by a rolling chain hash
+  (salt ‖ parent-hash ‖ block tokens), so matching is a dict walk over
+  FULL blocks — position is implicit in the chain depth, and the salt
+  carries everything besides tokens that determines block content (the
+  sparse-prefill alpha vector, when sparse prefill is enabled).  Only
+  blocks whose content came from *prefill chunks of this request* are ever
+  committed: decode-origin KV is NOT bitwise-equal to prefill KV for the
+  same tokens (different reduction shapes), so reply-region blocks live
+  only in session chains, where the reuse oracle is *continuation* of the
+  same cache rather than re-prefill.
+
+* **Sessions.**  ``session_id -> (chain, history tokens, SLA tier)``.  A
+  retained session pins its blocks (incl. the decode-written partial tail)
+  against eviction and makes the tier sticky across turns.  Sessions are
+  LRU-capped and LRU-evicted when the allocator runs dry.
+
+* **Copy-on-write.**  ``ensure_writable`` is the write-path invariant: a
+  block about to be scattered into must be exclusively owned and
+  uncommitted; shared or committed blocks are forked to a fresh block
+  first (the caller copies or rewrites the content).  The serve path hits
+  this every time a matched prefix extends past the chunk-aligned reuse
+  boundary: those blocks are re-run — adopted for writing — and fork off
+  the pinned originals.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+
+class KVPool:
+    """Bookkeeping for one device block pool (``n_blocks`` total, including
+    the two reserved blocks)."""
+
+    NULL = 0
+    TRASH = 1
+    _RESERVED = 2
+
+    def __init__(self, n_blocks: int, block_size: int,
+                 max_sessions: int = 64, prefix_cache: bool = True):
+        if n_blocks < self._RESERVED + 1:
+            raise ValueError(
+                f"pool needs > {self._RESERVED} blocks (null + trash + at "
+                f"least one allocatable); got {n_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self.max_sessions = int(max_sessions)
+        self.prefix_cache = bool(prefix_cache)
+        self.refcount = np.zeros(n_blocks, np.int32)
+        self._free: list[int] = list(range(n_blocks - 1, self._RESERVED - 1,
+                                           -1))  # pop() -> lowest id first
+        self._trie: dict[bytes, int] = {}        # chain hash -> block id
+        self._hash_of: dict[int, bytes] = {}     # committed id -> hash
+        # committed blocks at refcount 0: matchable until reclaimed, evicted
+        # oldest-parked first
+        self._lru: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()
+        self.sessions: collections.OrderedDict[str, dict] = \
+            collections.OrderedDict()
+        self.stats = collections.Counter()
+
+    # ------------------------------------------------------------ hashing --
+    def block_hashes(self, salt: bytes, tokens: np.ndarray) -> list[bytes]:
+        """Rolling chain hash per FULL block of ``tokens``; partial tails
+        are not hashable (they can't be trie-committed)."""
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        out: list[bytes] = []
+        parent = b""
+        for j in range(len(tokens) // self.block_size):
+            blk = tokens[j * self.block_size:(j + 1) * self.block_size]
+            parent = hashlib.sha1(salt + parent + blk.tobytes()).digest()
+            out.append(parent)
+        return out
+
+    # --------------------------------------------------------- allocation --
+    def alloc(self) -> int:
+        """A fresh exclusively-owned block (refcount 1).  Reclaims parked
+        committed blocks, then evicts LRU sessions; raises when the pool is
+        truly full of live references."""
+        while not self._free:
+            if self._lru:
+                bid, _ = self._lru.popitem(last=False)
+                self._uncommit(bid)
+                self._free.append(bid)
+                self.stats["evicted_blocks"] += 1
+            elif self.sessions:
+                self._evict_session()
+            else:
+                raise RuntimeError(
+                    f"KV pool exhausted: {self.n_blocks} blocks all hold "
+                    "live references (grow PagedKVConfig.pool_blocks or "
+                    "admit fewer concurrent requests)")
+        bid = self._free.pop()
+        assert self.refcount[bid] == 0
+        self.refcount[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        if bid < self._RESERVED:
+            return
+        if self.refcount[bid] == 0 and bid in self._lru:
+            del self._lru[bid]       # revived from the evictable park
+        self.refcount[bid] += 1
+
+    def decref(self, bid: int) -> None:
+        if bid < self._RESERVED:
+            return
+        if self.refcount[bid] <= 0:
+            raise RuntimeError(f"decref of unreferenced block {bid}")
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            if bid in self._hash_of:
+                self._lru[bid] = None     # committed: park, stay matchable
+            else:
+                self._free.append(bid)
+
+    release = decref
+
+    def ensure_writable(self, bid: int) -> tuple[int, Optional[int]]:
+        """Write-path invariant (COW): returns ``(writable_id, src)``.
+        ``src is None`` means ``bid`` was already exclusively owned and
+        uncommitted — write in place.  Otherwise a fresh fork was
+        allocated, ``bid``'s reference dropped, and the caller must copy
+        (or fully rewrite) the page content from ``src``."""
+        if bid >= self._RESERVED and self.refcount[bid] == 1 \
+                and bid not in self._hash_of:
+            return bid, None
+        fresh = self.alloc()
+        self.decref(bid)
+        self.stats["cow_forks"] += 1
+        return fresh, bid
+
+    # -------------------------------------------------------- prefix trie --
+    def match_prefix(self, salt: bytes, tokens: np.ndarray) -> list[int]:
+        """Longest committed chain matching ``tokens``' full blocks."""
+        if not self.prefix_cache:
+            return []
+        ids: list[int] = []
+        for h in self.block_hashes(salt, tokens):
+            bid = self._trie.get(h)
+            if bid is None:
+                break
+            ids.append(bid)
+        return ids
+
+    def commit_chain(self, hashes: list[bytes], ids: list[int],
+                     owned_from: int = 0) -> list[int]:
+        """Commit a slot's prefill-origin full blocks into the trie,
+        left-to-right, deduplicating against existing entries.  ``ids[j]``
+        must be referenced by the caller; on dedupe the duplicate's
+        reference moves to the canonical block and the canonical id is
+        returned in its place.  ``owned_from``: blocks below this index
+        were *adopted* (already committed or session-pinned) and are passed
+        through untouched.  Commitment stops at the first uncommitted
+        parent gap (a chain with a decode-origin hole is unreachable by
+        any future walk, so committing past it would only leak trie
+        entries)."""
+        out = list(ids)
+        if not self.prefix_cache:
+            return out
+        chained = True   # parent continuity: walkable from the root
+        for j, (h, bid) in enumerate(zip(hashes, ids)):
+            if j < owned_from:
+                chained = chained and (self._hash_of.get(bid) == h)
+                continue
+            if not chained:
+                break
+            have = self._trie.get(h)
+            if have is not None and have != bid:
+                self.incref(have)
+                self.decref(bid)
+                self.stats["dedup_blocks"] += 1
+                out[j] = have
+            elif have is None:
+                self._trie[h] = bid
+                self._hash_of[bid] = h
+        return out
+
+    def _uncommit(self, bid: int) -> None:
+        h = self._hash_of.pop(bid, None)
+        if h is not None and self._trie.get(h) == bid:
+            del self._trie[h]
+
+    # ------------------------------------------------------------ sessions --
+    def lookup_session(self, sid: Optional[str]) -> Optional[dict]:
+        if sid is None or sid not in self.sessions:
+            return None
+        self.sessions.move_to_end(sid)          # LRU bump
+        return self.sessions[sid]
+
+    def store_session(self, sid: str, chain: list[int], history: np.ndarray,
+                      tier: str) -> None:
+        """Retain a finished request's chain under ``sid`` (references
+        transfer from the caller).  Replacing an existing session releases
+        the old chain; the LRU cap evicts the oldest sessions."""
+        old = self.sessions.pop(sid, None)
+        self.sessions[sid] = {
+            "chain": [int(b) for b in chain],
+            "history": np.asarray(history, np.int32).copy(),
+            "tier": tier,
+        }
+        if old is not None:
+            for b in old["chain"]:
+                self.decref(b)
+        while len(self.sessions) > self.max_sessions:
+            self._evict_session()
+
+    def drop_session(self, sid: str) -> None:
+        old = self.sessions.pop(sid, None)
+        if old is not None:
+            for b in old["chain"]:
+                self.decref(b)
+
+    def _evict_session(self) -> None:
+        sid, sess = self.sessions.popitem(last=False)
+        for b in sess["chain"]:
+            self.decref(b)
+        self.stats["evicted_sessions"] += 1
+
+    # ------------------------------------------------------------- metrics --
+    def snapshot(self) -> dict:
+        """Counters + occupancy for benchmarks and tests."""
+        return {
+            "n_blocks": self.n_blocks,
+            "free_blocks": len(self._free),
+            "parked_blocks": len(self._lru),
+            "committed_blocks": len(self._hash_of),
+            "live_refs": int((self.refcount > 0).sum()),
+            "sessions": len(self.sessions),
+            **{k: int(v) for k, v in self.stats.items()},
+        }
+
+    def check_invariants(self) -> None:
+        """Debug/test guard: reserved blocks unreferenced and uncommitted,
+        every block in exactly one of {free, parked, referenced}."""
+        assert self.refcount[self.NULL] == 0 and self.refcount[self.TRASH] == 0
+        assert self.NULL not in self._hash_of and \
+            self.TRASH not in self._hash_of
+        free = set(self._free)
+        parked = set(self._lru)
+        assert not (free & parked)
+        for b in range(self._RESERVED, self.n_blocks):
+            rc = int(self.refcount[b])
+            if b in free:
+                assert rc == 0 and b not in self._hash_of
+            elif b in parked:
+                assert rc == 0 and b in self._hash_of
+            else:
+                assert rc > 0, f"leaked block {b}"
+        for h, b in self._trie.items():
+            assert self._hash_of.get(b) == h

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (DEFAULT_SLA_TIERS, ControllerConfig,
-                                ModelConfig, SLATier)
+                                ModelConfig, PagedKVConfig, SLATier)
 # Alpha column for a dead (drained) slot — and, since the chunked-prefill
 # scheduler, for a slot mid-prefill and for pad tokens inside a prefill
 # chunk: margin = N_neg - alpha*N_pos with a huge negative alpha is positive
@@ -46,6 +46,7 @@ from repro.models.common import greedy_sample
 from repro.runtime.controller import (AlphaController, DistributedController,
                                       aggregate_tier_stats, restore_controller,
                                       save_controller)
+from repro.runtime.kv_pool import KVPool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,18 @@ class ServeConfig:
     # snapshot is written after every serve() drain (and on demand via
     # ``Server.save_controller``).  Empty = no persistence.
     controller_ckpt: str = ""
+    # ---- paged KV pool (DESIGN.md §10) ----------------------------------
+    # Replace the per-slot dense max_len KV buffers with a global block
+    # pool + per-slot block tables: resident bytes follow tokens resident
+    # instead of slots × max_len, committed prompt blocks are shared
+    # through a prefix trie (repeated system prompts admit by reference),
+    # and Request.session_id retains a finished request's chain for
+    # multi-turn continuation.  Requires the slot-refill scheduler and a
+    # family in the model module's PAGED_KV_FAMILIES; block_size must
+    # divide max_len (and prefill_chunk must be a block multiple when
+    # chunked prefill is on).  None keeps the dense per-slot caches —
+    # the bitwise reference the paged path is pinned against.
+    paged_kv: Optional[PagedKVConfig] = None
 
 
 @dataclasses.dataclass
@@ -100,6 +113,12 @@ class Request:
     prompt: np.ndarray           # (prompt_len,)
     max_new: int = 32
     sla: str = "balanced"        # ServeConfig.sla_tiers entry
+    session_id: Optional[str] = None  # paged serving: retain this request's
+                                 # KV chain under the id; a later request
+                                 # with the same id whose prompt extends the
+                                 # stored history admits by reference
+                                 # (prefix reuse) and inherits the session's
+                                 # SLA tier (sticky; DESIGN.md §10)
     out: Optional[np.ndarray] = None
     latency_s: float = 0.0       # admission -> last token (wall clock,
                                  # INCLUDES queue wait — the documented
@@ -210,14 +229,22 @@ class Server:
             return self.mod.prefill(params, cfg, tokens, *extra,
                                     max_len=scfg.max_len)
 
-        def _decode(params, tok, caches, length):
+        # the trailing ``table`` argument selects the paged-pool decode
+        # (DESIGN.md §10): the paged serve path always passes it and the
+        # dense path never does, so each mode still compiles exactly one
+        # trace of its decode step.  The kwarg is only forwarded when a
+        # table is present — non-LM model modules (vlm, encdec) don't
+        # accept it and never run paged.
+        def _decode(params, tok, caches, length, table=None):
+            kw = {} if table is None else {"block_table": table}
             logits, caches = self.mod.decode_step(params, cfg, tok, caches,
-                                                  length)
+                                                  length, **kw)
             return greedy_sample(logits), caches
 
-        def _decode_alphas(params, tok, caches, length, alphas):
+        def _decode_alphas(params, tok, caches, length, alphas, table=None):
+            kw = {} if table is None else {"block_table": table}
             logits, caches = self.mod.decode_step(params, cfg, tok, caches,
-                                                  length, alphas=alphas)
+                                                  length, alphas=alphas, **kw)
             return greedy_sample(logits), caches
 
         self.prefill_fn = jax.jit(_prefill)
@@ -262,6 +289,69 @@ class Server:
                 # consume the precomputed encoder states
                 self.encode_fn = jax.jit(
                     lambda p, f: self.mod.encode(p, cfg, f))
+
+        # ---- paged KV pool (DESIGN.md §10) --------------------------------
+        # Device side: one global block pool per layer (leaves
+        # (L, N, block, ...)) shared by every slot, gathered/scattered
+        # through per-slot block tables.  Host side: the KVPool manager
+        # (allocation, prefix trie, sessions, COW).  Both persist across
+        # serve() calls so sessions resume and committed prefixes keep
+        # admitting by reference.
+        self.kv_pool: Optional[KVPool] = None
+        self._pool = None
+        self.prefill_chunks_run = 0       # admission chunks executed
+        self.prefill_chunks_skipped = 0   # admission chunks saved by reuse
+        if scfg.paged_kv is not None:
+            pk = scfg.paged_kv
+            pfams = getattr(model_mod, "PAGED_KV_FAMILIES", ())
+            if not scfg.slot_refill:
+                raise ValueError("paged_kv needs the slot-refill scheduler "
+                                 "(slot_refill=True; DESIGN.md §10)")
+            if cfg.family not in pfams:
+                raise ValueError(
+                    f"paged_kv: family {cfg.family!r} has no paged decode "
+                    f"path (supported: {pfams})")
+            if pk.block_size < 1 or scfg.max_len % pk.block_size:
+                raise ValueError(
+                    f"paged_kv.block_size={pk.block_size} must be positive "
+                    f"and divide max_len={scfg.max_len}")
+            if scfg.prefill_chunk and scfg.prefill_chunk % pk.block_size:
+                raise ValueError(
+                    f"prefill_chunk={scfg.prefill_chunk} must be a multiple "
+                    f"of paged_kv.block_size={pk.block_size} so trie-aligned "
+                    "reuse lands on chunk boundaries (DESIGN.md §10)")
+            nbps = scfg.max_len // pk.block_size
+            n_blocks = pk.pool_blocks or scfg.batch * nbps + KVPool._RESERVED
+            self._nbps = nbps
+            self.kv_pool = KVPool(n_blocks, pk.block_size,
+                                  max_sessions=pk.max_sessions,
+                                  prefix_cache=pk.prefix_cache)
+            self._pool = model_mod.init_kv_pool(cfg, n_blocks, pk.block_size)
+
+            bs_ = pk.block_size
+
+            # seed: gather adopted blocks into a batch-1 dense scratch (the
+            # chunked-prefill layout) — non-reused lanes point at the NULL
+            # block, whose zeros read exactly like init_caches
+            def _seed(pool, tab):
+                def leaf(p):
+                    g = p[:, tab]                       # (L, nbps, bs, ...)
+                    return g.reshape((p.shape[0], 1, nbps * bs_)
+                                     + p.shape[3:])
+                return jax.tree.map(leaf, pool)
+
+            # commit: scatter a finished batch-1 prefill into the pool —
+            # the table holds this slot's owned block ids at owned lanes
+            # and TRASH elsewhere (reused lanes must not be rewritten;
+            # TRASH collisions are harmless, it is never gathered live)
+            def _commit(pool, one, tab):
+                def leaf(p, o):
+                    upd = o.reshape((o.shape[0], nbps, bs_) + o.shape[3:])
+                    return p.at[:, tab].set(upd.astype(p.dtype))
+                return jax.tree.map(leaf, pool, one)
+
+            self.seed_fn = jax.jit(_seed)
+            self.commit_fn = jax.jit(_commit)
 
         # ---- adaptive-alpha controller wiring (DESIGN.md §4/§5) ----------
         # The controller lives across generate()/serve() calls so adaptation
@@ -337,11 +427,12 @@ class Server:
         self._trace_counts: collections.Counter = collections.Counter()
 
         def make_ctrl(cfg_b, cap_key):
-            def _decode_ctrl(params, tok, caches, length, alphas):
+            def _decode_ctrl(params, tok, caches, length, alphas,
+                             table=None):
                 self._trace_counts[cap_key] += 1   # trace-time side effect
                 logits, caches, stats = self.mod.decode_step(
                     params, cfg_b, tok, caches, length, alphas=alphas,
-                    collect_stats=True)
+                    collect_stats=True, block_table=table)
                 return greedy_sample(logits), caches, stats
             return jax.jit(_decode_ctrl)
 
@@ -410,10 +501,10 @@ class Server:
         audit_cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, strategy="masked"))
 
-        def _decode_audit(params, tok, caches, length, alphas):
+        def _decode_audit(params, tok, caches, length, alphas, table=None):
             logits, caches, stats = self.mod.decode_step(
                 params, audit_cfg, tok, caches, length, alphas=alphas,
-                collect_stats=True)
+                collect_stats=True, block_table=table)
             return greedy_sample(logits), caches, stats
 
         self.decode_audit_fn = jax.jit(_decode_audit)
@@ -424,7 +515,7 @@ class Server:
         a no-op single-device."""
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
-    def _put_slots(self, tok, lengths, alphas=None):
+    def _put_slots(self, tok, lengths, alphas=None, table=None):
         """Per-step slot arrays onto the mesh, batch-slot dim partitioned
         over the 'data' axis (DESIGN.md §8): tokens (B, 1), cache lengths
         (B,), and the (L, B) alpha matrix each land pre-sharded so the
@@ -433,13 +524,20 @@ class Server:
         mesh."""
         jt, jl = jnp.asarray(tok), jnp.asarray(lengths)
         ja = None if alphas is None else jnp.asarray(alphas)
+        jtab = None if table is None else jnp.asarray(table)
         if self._slot_sh is not None:
             tok_sh, len_sh, a_sh = self._slot_sh
             jt = jax.device_put(jt, tok_sh)
             jl = jax.device_put(jl, len_sh)
             if ja is not None:
                 ja = jax.device_put(ja, a_sh)
-        return jt, jl, ja
+            if jtab is not None:
+                # block tables are slot arrays: (B, nbps) batch-slot dim
+                # over 'data', like the tokens (DESIGN.md §8/§10)
+                jtab = jax.device_put(jtab, tok_sh)
+        if table is None:
+            return jt, jl, ja
+        return jt, jl, ja, jtab
 
     def save_controller(self, step: Optional[int] = None) -> Optional[int]:
         """Checkpoint the controller state (no-op without
@@ -526,7 +624,8 @@ class Server:
             self._active_cap = max(self._bucket_fns)
         return self._active_cap
 
-    def _warm_bucket_ladder(self, tok, caches, lengths, alphas) -> None:
+    def _warm_bucket_ladder(self, tok, caches, lengths, alphas,
+                            table=None) -> None:
         """Trace+compile every capacity bucket's decode step up front with
         the serve loop's real shapes (results discarded — caches are pure
         values, nothing advances).  One-time cost so the controller's first
@@ -536,8 +635,11 @@ class Server:
             self._warmed_buckets = True
             return
         for fn in self._bucket_fns.values():
-            fn(self.params, jnp.asarray(tok), caches, jnp.asarray(lengths),
-               jnp.asarray(alphas))
+            args = (self.params, jnp.asarray(tok), caches,
+                    jnp.asarray(lengths), jnp.asarray(alphas))
+            if table is not None:
+                args += (jnp.asarray(table),)
+            fn(*args)
         self._warmed_buckets = True
 
     def maybe_adapt_capacity(self) -> bool:
@@ -635,6 +737,82 @@ class Server:
             return self._pad_layers(ctl.slot_alphas(np.asarray([t])))[:, 0]
         return (self._pad_layers(ctl.alphas())
                 + self._tier_offsets[t]).astype(np.float32)
+
+    def _prefill_salt(self, t: int) -> bytes:
+        """Trie hash salt: everything besides the tokens that determines a
+        prefill-origin block's content.  Dense prefill is a pure function
+        of the tokens — empty salt.  Sparse prefill skips MLP rows by the
+        per-layer alpha vector, so the (tier- and controller-dependent)
+        prefill alphas fold in: a committed block only matches a request
+        that would have prefilled it bitwise-identically (DESIGN.md §10)."""
+        sp = self.cfg.sparse
+        if not (sp.enabled and sp.sparse_prefill
+                and not (sp.tp_shards or sp.dp_shards)):
+            return b""
+        return np.asarray(self._prefill_alphas(t), np.float32).tobytes()
+
+    def _match_reuse(self, r: Request, t: int, plen: int) -> dict:
+        """Longest admissible-by-reference prefix for a paged admission
+        (DESIGN.md §10).  Two candidate sources, best coverage wins:
+
+        * the request's own session chain — valid over decode-written
+          reply KV too, because the reuse semantics there are
+          *continuation* of the retained cache (salt-free: the suffix
+          chunks run with current alphas either way);
+        * the prefix trie of committed prompt blocks (salt-checked: a hit
+          guarantees the block's content is bitwise what this request's
+          own prefill would have produced).
+
+        The reuse boundary is chunk-aligned and always leaves the final
+        chunk to re-run: it produces the first-token logits, and rewrites
+        its (matched) blocks bitwise-identically.  Matched full blocks
+        past the boundary come back as ``cow_ids`` — place() adopts them
+        for writing, forking the shared originals (copy-on-write)."""
+        pool = self.kv_pool
+        pc = self.scfg.prefill_chunk
+        bs = pool.block_size
+        prompt = np.asarray(r.prompt, np.int32)
+        salt = self._prefill_salt(t)
+        meta: dict = {"adopted": 0, "ids": [], "cow_ids": [],
+                      "hashes": pool.block_hashes(salt, prompt)}
+        if not (pool.prefix_cache and pc and self._chunk_prefill):
+            return meta
+        ids: list[int] = []
+        sess = pool.lookup_session(r.session_id) if r.session_id else None
+        if sess is not None:
+            hist = sess["history"]
+            n = min(plen, len(hist))
+            eq = prompt[:n] == hist[:n]
+            m = n if eq.all() else int(np.argmax(~eq))
+            ids = sess["chain"][: m // bs]
+        tids = pool.match_prefix(salt, prompt)
+        if len(tids) > len(ids):
+            ids = tids
+        if not ids:
+            return meta
+        # final chunk always re-runs: cap at the last chunk boundary below
+        # plen, then align the adoption down to whole chunks
+        r_max = ((plen - 1) // pc) * pc
+        nb_re = (min(len(ids) * bs, r_max) // pc) * (pc // bs)
+        for b in ids[:nb_re]:
+            pool.incref(b)
+        meta["adopted"] = nb_re
+        meta["ids"] = ids[:nb_re]
+        meta["cow_ids"] = ids[nb_re:]
+        if nb_re:
+            pool.stats["reuse_hits"] += 1
+            pool.stats["reused_blocks"] += nb_re
+            pool.stats["reused_tokens"] += nb_re * bs
+        return meta
+
+    def paged_stats(self) -> dict:
+        """Pool occupancy/reuse counters + admission chunk accounting
+        (empty without ``ServeConfig.paged_kv``)."""
+        if self.kv_pool is None:
+            return {}
+        return {**self.kv_pool.snapshot(),
+                "prefill_chunks_run": self.prefill_chunks_run,
+                "prefill_chunks_skipped": self.prefill_chunks_skipped}
 
     def _slot_extra(self, i: int, extra: tuple) -> tuple:
         """Per-slot extra model inputs for a chunked prefill: batch-1 slices
@@ -740,7 +918,15 @@ class Server:
         t_adm = time.perf_counter()   # admission: latency clocks start HERE
         for r in requests:
             self._tier_of(r)
+            # reset EVERY serve-set stamp, not just t_admit: Request objects
+            # are mutated in place during serve(), so a re-served object
+            # would otherwise leak the previous run's t_start/t_end/ttft
+            # into this run's report (stale t_end > 0 even counts it as
+            # served before its slot ever finishes)
             r.t_admit = t_adm
+            r.t_start = r.t_end = 0.0
+            r.queue_wait_s = r.ttft_s = r.latency_s = 0.0
+            r.out = None
             if len(r.prompt) + r.max_new > self.scfg.max_len:
                 raise ValueError(
                     f"request {r.uid}: prompt {len(r.prompt)} + max_new "
@@ -825,7 +1011,19 @@ class Server:
         done: list[Request] = []
         legacy = self._uniform_alpha_serve(requests)
 
-        caches = self.mod.init_caches(self.cfg, B, scfg.max_len)
+        paged = self.kv_pool is not None
+        pool_mgr = self.kv_pool
+        if paged:
+            # the device pool persists across serve() calls (sessions and
+            # committed prefixes keep admitting by reference); ``caches``
+            # aliases it for the loop and is written back at the end
+            caches = self._pool
+            bs_, nbps = pool_mgr.block_size, self._nbps
+            table = np.full((B, nbps), KVPool.TRASH, np.int32)
+            slot_meta: list[Optional[dict]] = [None] * B
+        else:
+            caches = self.mod.init_caches(self.cfg, B, scfg.max_len)
+            table = None
         extra = tuple(self.extra.values())
         tok = np.zeros((B, 1), np.int32)
         lengths = np.zeros(B, np.int32)
@@ -855,13 +1053,48 @@ class Server:
             # old dequeue-relative clock silently excluded the queue wait)
             r.latency_s = r.t_end - (r.t_admit if r.t_admit else r.t_start)
             done.append(r)
+            if paged:
+                _release_slot(i, r)
             slot_req[i] = None
             active[i] = False
 
+        def _release_slot(i: int, r: Request) -> None:
+            """Retire slot i's block-table row (DESIGN.md §10): commit this
+            request's prefill-origin full prompt blocks into the trie
+            (dedup against existing chains), then either retain the whole
+            chain — prompt AND decode-written reply blocks, incl. the
+            partial tail — under the request's session, or release every
+            reference (committed blocks park in the evictable LRU, decode
+            blocks free immediately)."""
+            meta = slot_meta[i]
+            written = int(lengths[i])          # prompt + decoded-token KV
+            n_chain = -(-written // bs_) if written else 0
+            chain = [int(table[i, j]) for j in range(n_chain)]
+            # full prompt blocks are prefill-origin — trie-committable;
+            # decode-origin KV is NOT bitwise re-prefill content, so it
+            # stays session-only (module docstring of runtime/kv_pool.py)
+            n_prompt_full = meta["plen"] // bs_
+            chain[:n_prompt_full] = pool_mgr.commit_chain(
+                meta["hashes"][:n_prompt_full], chain[:n_prompt_full],
+                owned_from=meta["adopted"])
+            sid = r.session_id
+            if sid is not None:
+                hist = np.concatenate(
+                    [np.asarray(r.prompt, np.int32),
+                     np.asarray(slot_out[i], np.int32)])[:written]
+                tier = self.scfg.sla_tiers[meta["tier"]].name
+                pool_mgr.store_session(sid, chain, hist, tier)
+            else:
+                for b in chain:
+                    pool_mgr.release(b)
+            table[i, :] = KVPool.TRASH
+            slot_meta[i] = None
+
         def place(i: int, r: Request, first: int, plen: int, t: int,
-                  one) -> None:
+                  one, meta: Optional[dict] = None) -> None:
             """Activate slot i with a finished prefill: splice the batch-1
-            caches, seed the token/length/tier columns, stamp TTFT."""
+            caches (dense) or scatter them into owned pool blocks (paged),
+            seed the token/length/tier columns, stamp TTFT."""
             nonlocal caches, alpha_mat
             now = time.perf_counter()
             r.ttft_s = now - (r.t_admit if r.t_admit else r.t_start)
@@ -871,7 +1104,39 @@ class Server:
             lengths[i] = plen
             tier_idx[i] = t
             active[i] = True
-            caches = self.splice_fn(caches, one, jnp.int32(i))
+            if paged:
+                meta = meta or {"adopted": 0, "ids": [],
+                                "hashes": pool_mgr.block_hashes(
+                                    self._prefill_salt(t),
+                                    np.asarray(r.prompt, np.int32))}
+                nb_re = meta["adopted"]
+                nb_prompt = -(-plen // bs_)
+                # matched blocks past the chunk-aligned reuse boundary are
+                # re-run, so they are adopted for WRITING: shared/pinned
+                # originals fork (copy-on-write) — no device copy needed,
+                # the commit scatter below fully rewrites every owned
+                # block (bitwise-identically for the matched ones)
+                extra_ids = meta.get("cow_ids", [])
+                owned = []
+                for j in range(nb_re, nb_prompt):
+                    k = j - nb_re
+                    if k < len(extra_ids):
+                        pool_mgr.incref(extra_ids[k])
+                        wid, _src = pool_mgr.ensure_writable(extra_ids[k])
+                        owned.append(wid)
+                    else:
+                        owned.append(pool_mgr.alloc())
+                wt = np.full(nbps, KVPool.TRASH, np.int32)
+                wt[nb_re:nb_prompt] = owned
+                caches = self.commit_fn(caches, one, jnp.asarray(wt))
+                table[i, :nb_re] = meta["ids"][:nb_re]
+                table[i, nb_re:nb_prompt] = owned
+                table[i, nb_prompt:] = KVPool.TRASH
+                meta["plen"] = plen
+                meta["tier"] = t
+                slot_meta[i] = meta
+            else:
+                caches = self.splice_fn(caches, one, jnp.int32(i))
             alpha_mat = None              # slot composition changed
 
         def admit(i: int) -> None:
@@ -883,6 +1148,15 @@ class Server:
             nonlocal caches
             while queue:
                 r = queue.popleft()
+                if paged:
+                    sess = pool_mgr.lookup_session(r.session_id)
+                    if sess is not None:
+                        # session-sticky SLA: the stored tier binds every
+                        # turn of the conversation to one point on the
+                        # accuracy/sparsity curve (and, under a per-tier
+                        # controller, to one adapted alpha vector) — the
+                        # per-session controller state (DESIGN.md §10)
+                        r.sla = sess["tier"]
                 t = self._tier_of(r)      # queue pre-validated in serve()
                 plen = len(r.prompt)
                 now = time.perf_counter()
@@ -893,13 +1167,28 @@ class Server:
                     padded = -(-plen // pc) * pc
                     toks = np.zeros((1, padded), np.int32)
                     toks[0, :plen] = np.asarray(r.prompt, np.int32)
-                    pending[i] = {
+                    st = {
                         "req": r, "tier": t, "tokens": toks, "off": 0,
                         "plen": plen,
                         "caches": self.mod.init_caches(self.cfg, 1,
                                                        scfg.max_len),
                         "extra": self._slot_extra(i, extra),
                     }
+                    if paged:
+                        st["meta"] = self._match_reuse(r, t, plen)
+                        m = st["meta"]
+                        if m["adopted"]:
+                            # admit by reference: seed the scratch with the
+                            # adopted blocks and start chunking at the
+                            # reuse boundary — the skipped chunks' work is
+                            # exactly what the pool already holds
+                            st["off"] = m["adopted"] * bs_
+                            seed = np.zeros(nbps, np.int32)   # NULL lanes
+                            seed[:m["adopted"]] = m["ids"][:m["adopted"]]
+                            st["caches"] = self.seed_fn(caches,
+                                                        jnp.asarray(seed))
+                            self.prefill_chunks_skipped += st["off"] // pc
+                    pending[i] = st
                     return
                 prompt = jnp.asarray(
                     np.asarray(r.prompt, np.int32)[None, :])
@@ -941,21 +1230,37 @@ class Server:
                         logits, st["caches"] = out
                     st["off"] += pc
                     budget -= 1
+                    self.prefill_chunks_run += 1
                     if st["off"] >= st["tokens"].shape[1]:
                         first = int(np.asarray(greedy_sample(logits))[0])
                         del pending[i]
                         place(i, r, first, st["plen"], st["tier"],
-                              st["caches"])
+                              st["caches"], meta=st.get("meta"))
                         if r.max_new <= 1:
                             finish(i)
                             admit(i)   # refill: may re-enter pending
+
+        def ensure_write_blocks() -> None:
+            """Before a decode step, every live slot's write position
+            (``lengths[i]``) must land in a block the slot exclusively
+            owns: allocate on first touch of each block (TRASH lanes are
+            the dead/pending write-off and the unallocated tail)."""
+            for i in range(B):
+                if not active[i]:
+                    continue
+                j = int(lengths[i]) // bs_
+                if table[i, j] == KVPool.TRASH:
+                    table[i, j] = pool_mgr.alloc()
 
         for i in range(B):
             admit(i)
         if (ctl is not None and scfg.warm_buckets
                 and not self._warmed_buckets and active.any()):
+            if paged:
+                ensure_write_blocks()
             self._warm_bucket_ladder(tok, caches, lengths,
-                              self._slot_alpha_matrix(tier_idx, active))
+                              self._slot_alpha_matrix(tier_idx, active),
+                              table=table if paged else None)
         while active.any() or pending:
             if pending:
                 # interleave admissions with decode: ≤ prefill_interleave
@@ -964,6 +1269,8 @@ class Server:
                 advance_prefill(scfg.prefill_interleave)
                 if not active.any():
                     continue     # nothing decoding yet — keep prefilling
+            if paged:
+                ensure_write_blocks()
             if ctl is not None:
                 audit = ctl.is_audit_step()
                 # between-step capacity-bucket switch: a host dict lookup
@@ -973,22 +1280,41 @@ class Server:
                 fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
                 # rebuilt per step: the controller adapts between steps
                 alphas = self._slot_alpha_matrix(tier_idx, active)
-                jt, jl, ja = self._put_slots(tok, lengths, alphas)
-                ntok, caches, stats = fn(self.params, jt, caches, jl, ja)
+                if paged:
+                    jt, jl, ja, jtab = self._put_slots(tok, lengths, alphas,
+                                                       table)
+                    ntok, caches, stats = fn(self.params, jt, caches, jl,
+                                             ja, jtab)
+                else:
+                    jt, jl, ja = self._put_slots(tok, lengths, alphas)
+                    ntok, caches, stats = fn(self.params, jt, caches, jl, ja)
                 self._observe_step(stats, tier_idx, active, audit)
             elif legacy and active.all():
                 # uniform schedule, every slot live: the seed decode jit
                 # (bit-identical path; no alpha plumbing at all)
-                jt, jl, _ = self._put_slots(tok, lengths)
-                ntok, caches = self.decode_fn(self.params, jt, caches, jl)
+                if paged:
+                    jt, jl, _, jtab = self._put_slots(tok, lengths,
+                                                      table=table)
+                    ntok, caches = self.decode_fn(self.params, jt, caches,
+                                                  jl, jtab)
+                else:
+                    jt, jl, _ = self._put_slots(tok, lengths)
+                    ntok, caches = self.decode_fn(self.params, jt, caches,
+                                                  jl)
             else:
                 # static alphas change only at refill boundaries — cache the
                 # matrix; dead slots are neutralized out of the union
                 if alpha_mat is None:
                     alpha_mat = self._slot_alpha_matrix(tier_idx, active)
-                jt, jl, ja = self._put_slots(tok, lengths, alpha_mat)
-                ntok, caches = self.decode_alpha_fn(
-                    self.params, jt, caches, jl, ja)
+                if paged:
+                    jt, jl, ja, jtab = self._put_slots(tok, lengths,
+                                                       alpha_mat, table)
+                    ntok, caches = self.decode_alpha_fn(
+                        self.params, jt, caches, jl, ja, jtab)
+                else:
+                    jt, jl, ja = self._put_slots(tok, lengths, alpha_mat)
+                    ntok, caches = self.decode_alpha_fn(
+                        self.params, jt, caches, jl, ja)
             ntok = np.asarray(ntok)
             refill = []
             for i in range(B):
@@ -1006,6 +1332,10 @@ class Server:
                     self.maybe_adapt_capacity()  # re-jit (DESIGN.md §4)
                     for i in refill:
                         admit(i)
+        if paged:
+            # the pool outlives the drain: sessions + committed prefixes
+            # admit by reference in later serve() calls (DESIGN.md §10)
+            self._pool = caches
         return done
 
 
@@ -1016,7 +1346,12 @@ def throughput_report(requests: list[Request]) -> dict:
     co-resident request and deflate tok/s by ~the batch factor), plus
     per-request latency percentiles."""
     toks = sum(len(r.out) for r in requests if r.out is not None)
-    served = [r for r in requests if r.t_end > 0.0]
+    # served = completion stamped and consistent: a half-stamped request
+    # (hand-built, or aborted mid-serve) would otherwise poison the
+    # wall-clock window.  t_start may legitimately be 0.0 (clock origin),
+    # so the gate is on t_end, not both endpoints.
+    served = [r for r in requests
+              if r.t_end > 0.0 and r.t_end >= r.t_start]
     wall = (max(r.t_end for r in served) - min(r.t_start for r in served)
             if served else 0.0)
     lats = sorted(r.latency_s for r in served)
@@ -1032,8 +1367,12 @@ def throughput_report(requests: list[Request]) -> dict:
         # would report the max as p95 for every n <= 20)
         rank = math.ceil(round(q * len(vals), 9))
         return vals[min(len(vals) - 1, max(0, rank - 1))]
+    # an empty/instant window reports an exact 0.0 rate — never NaN, never
+    # the absurd toks/1e-9 spike the old clamp produced for zero-duration
+    # (e.g. all-cache-hit or hand-stamped) queues
     return {"requests": len(requests), "tokens": toks,
-            "total_s": wall, "tok_per_s": toks / max(wall, 1e-9),
+            "total_s": wall,
+            "tok_per_s": float(toks / wall) if wall > 0.0 else 0.0,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
             "p50_latency_s": pct(lats, 0.5), "p95_latency_s": pct(lats, 0.95),
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
