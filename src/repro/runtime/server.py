@@ -766,8 +766,9 @@ class Server:
         The reuse boundary is chunk-aligned and always leaves the final
         chunk to re-run: it produces the first-token logits, and rewrites
         its (matched) blocks bitwise-identically.  Matched full blocks
-        past the boundary come back as ``cow_ids`` — place() adopts them
-        for writing, forking the shared originals (copy-on-write)."""
+        past the boundary come back as ``cow_ids`` — a reference is taken
+        on them HERE, and place() adopts them for writing, forking the
+        shared originals (copy-on-write)."""
         pool = self.kv_pool
         pc = self.scfg.prefill_chunk
         bs = pool.block_size
@@ -794,7 +795,14 @@ class Server:
         # plen, then align the adoption down to whole chunks
         r_max = ((plen - 1) // pc) * pc
         nb_re = (min(len(ids) * bs, r_max) // pc) * (pc // bs)
-        for b in ids[:nb_re]:
+        # reference EVERY matched block now — adopted AND cow candidates.
+        # cow_ids are not consumed until place() runs after the whole
+        # chunked prefill; un-refed, any eviction cascade in that window
+        # (pool alloc for another slot, store_session) could reclaim a
+        # parked or session-evicted candidate onto the free list and
+        # re-issue it, leaving a stale id here that place() would adopt
+        # while another slot exclusively owns the block
+        for b in ids:
             pool.incref(b)
         meta["adopted"] = nb_re
         meta["ids"] = ids[:nb_re]
@@ -1009,10 +1017,23 @@ class Server:
         ctl = self.controller
         queue = collections.deque(requests)
         done: list[Request] = []
-        legacy = self._uniform_alpha_serve(requests)
 
         paged = self.kv_pool is not None
         pool_mgr = self.kv_pool
+        if paged:
+            # resolve session-sticky SLA tiers BEFORE the uniform-alpha
+            # fast-path check below: deciding `legacy` from the *declared*
+            # tiers would route a zero-offset (e.g. default 'balanced')
+            # turn-2 request whose session is sticky on a non-zero tier
+            # down the no-alphas decode jit, silently dropping the stored
+            # tier (DESIGN.md §10).  Sessions stored mid-serve can only
+            # inherit tiers already resolved here, so the check stays
+            # sound for same-queue multi-turn traffic too.
+            for r in requests:
+                sess = pool_mgr.lookup_session(r.session_id)
+                if sess is not None:
+                    r.sla = sess["tier"]
+        legacy = self._uniform_alpha_serve(requests)
         if paged:
             # the device pool persists across serve() calls (sessions and
             # committed prefixes keep admitting by reference); ``caches``
@@ -1115,13 +1136,18 @@ class Server:
                 # re-run, so they are adopted for WRITING: shared/pinned
                 # originals fork (copy-on-write) — no device copy needed,
                 # the commit scatter below fully rewrites every owned
-                # block (bitwise-identically for the matched ones)
+                # block (bitwise-identically for the matched ones).  The
+                # reference on each cow_id was taken back in _match_reuse
+                # (stale-id race guard); ensure_writable consumes it either
+                # way — kept as the table-row ref in place, or decref'd on
+                # fork.  _match_reuse only returns cow_ids for matched full
+                # prompt blocks, so len(cow_ids) <= nb_prompt - nb_re and
+                # this loop consumes every held reference.
                 extra_ids = meta.get("cow_ids", [])
                 owned = []
                 for j in range(nb_re, nb_prompt):
                     k = j - nb_re
                     if k < len(extra_ids):
-                        pool_mgr.incref(extra_ids[k])
                         wid, _src = pool_mgr.ensure_writable(extra_ids[k])
                         owned.append(wid)
                     else:
@@ -1345,13 +1371,15 @@ def throughput_report(requests: list[Request]) -> dict:
     summing per-request latencies would count each decode step once per
     co-resident request and deflate tok/s by ~the batch factor), plus
     per-request latency percentiles."""
-    toks = sum(len(r.out) for r in requests if r.out is not None)
     # served = completion stamped and consistent: a half-stamped request
     # (hand-built, or aborted mid-serve) would otherwise poison the
     # wall-clock window.  t_start may legitimately be 0.0 (clock origin),
     # so the gate is on t_end, not both endpoints.
     served = [r for r in requests
               if r.t_end > 0.0 and r.t_end >= r.t_start]
+    # tokens counted over the SAME served set that defines the window: an
+    # unstamped request's tokens fall outside it and would inflate tok/s
+    toks = sum(len(r.out) for r in served if r.out is not None)
     wall = (max(r.t_end for r in served) - min(r.t_start for r in served)
             if served else 0.0)
     lats = sorted(r.latency_s for r in served)

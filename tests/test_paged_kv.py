@@ -522,6 +522,76 @@ class TestPrefixReuse:
         [want] = fresh.serve([Request(uid=1, prompt=pb, max_new=4)])
         np.testing.assert_array_equal(rb.out, want.out)
 
+    def test_cow_candidates_referenced_at_match_time(self):
+        """Race regression: _match_reuse must take a reference on its COW
+        candidates, not just the adopted blocks.  cow_ids are consumed by
+        place() only after the whole chunked prefill, and an eviction
+        cascade inside that window (another slot's alloc, store_session)
+        could otherwise reclaim a parked candidate onto the free list and
+        re-issue it — place() would then adopt a block another slot
+        exclusively owns (stale id -> alloc AssertionError or silent
+        cross-request KV corruption)."""
+        rng = np.random.default_rng(20)
+        scfg = paged_scfg(16, max_len=128)
+        srv = Server(lm, CFG, scfg, params_for(CFG))
+        p1 = rng.integers(0, CFG.vocab, 40)       # 5 full blocks (bs=8)
+        srv.serve([Request(uid=0, prompt=p1, max_new=3)])
+        pool = srv.kv_pool
+        # no session: the committed prompt blocks are parked at refcount 0
+        r2 = Request(uid=1, prompt=p1, max_new=3)  # plen 40, boundary 32:
+        meta = srv._match_reuse(r2, srv._tier_of(r2), len(r2.prompt))
+        held = list(meta["ids"]) + list(meta["cow_ids"])
+        assert meta["adopted"] == 4 and len(meta["cow_ids"]) == 1
+        for b in held:                 # every matched block referenced NOW
+            assert pool.refcount[b] >= 1, (b, held)
+        # drain the allocator dry (it reclaims parked blocks, then raises):
+        # none of the held blocks may be re-issued out from under the match
+        grabbed = []
+        with pytest.raises(RuntimeError, match="exhausted"):
+            while True:
+                grabbed.append(pool.alloc())
+        assert not set(grabbed) & set(held), (grabbed, held)
+        for b in grabbed + held:
+            pool.release(b)
+        pool.check_invariants()
+
+    def test_sticky_tier_disables_uniform_alpha_fast_path(self):
+        """A turn-2 request declaring the zero-offset default tier while
+        its session is sticky on 'quality' must NOT decode via the legacy
+        no-alphas jit: the fast-path check sees the resolved (sticky)
+        tiers, so the stored tier's alpha offset actually reaches the
+        decode step — tokens match a from-scratch quality serve."""
+        rng = np.random.default_rng(21)
+        cfg = sparse_cfg("masked")
+        scfg = paged_scfg(16, max_len=128)
+        srv = Server(lm, cfg, scfg, params_for(cfg))
+        p1 = rng.integers(0, cfg.vocab, 40)
+        [r1] = srv.serve([Request(uid=0, prompt=p1, max_new=6,
+                                  sla="quality", session_id="s0")])
+        p2 = np.concatenate([p1, r1.out, rng.integers(0, cfg.vocab, 5)])
+        legacy_calls = []
+        orig_decode = srv.decode_fn
+        srv.decode_fn = lambda *a: (legacy_calls.append(1),
+                                    orig_decode(*a))[1]
+        r2 = Request(uid=1, prompt=p2, max_new=4, session_id="s0")
+        [r2] = srv.serve([r2])        # declared 'balanced' (zero offset)
+        assert r2.sla == "quality"
+        assert not legacy_calls, \
+            "sticky non-zero tier decoded via the no-alphas fast path"
+        srv.kv_pool.check_invariants()
+        # adopted blocks are prefill-origin: from-scratch is the oracle
+        fresh = Server(lm, cfg, scfg, params_for(cfg))
+        [want] = fresh.serve([Request(uid=1, prompt=p2, max_new=4,
+                                      sla="quality")])
+        np.testing.assert_array_equal(r2.out, want.out)
+        # control: session-free zero-offset requests (both slots live —
+        # the fast path needs every slot active) still take the legacy jit
+        srv.serve([Request(uid=2, prompt=rng.integers(0, cfg.vocab, 9),
+                           max_new=3),
+                   Request(uid=3, prompt=rng.integers(0, cfg.vocab, 7),
+                           max_new=3)])
+        assert legacy_calls
+
     def test_sessions_exceed_dense_slot_capacity(self):
         """The pool retains more concurrent sessions than the dense layout
         has slots: dense per-slot buffers hold batch conversations total;
@@ -554,12 +624,15 @@ class TestThroughputReportGuards:
     def test_half_stamped_requests_excluded(self):
         # hand-built / aborted requests must not poison the wall-clock
         # window with 0.0 starts (the old NaN / toks-per-nanosecond spike)
+        # — and their tokens fall OUTSIDE that window, so the rate counts
+        # only the served set's tokens, not every out != None straggler
         r_ok = Request(uid=0, prompt=np.arange(3), out=np.arange(4),
                        t_start=10.0, t_end=12.0, latency_s=2.0)
         r_half = Request(uid=1, prompt=np.arange(3), out=np.arange(4))
         rep = throughput_report([r_ok, r_half])
         assert rep["total_s"] == 2.0
-        assert rep["tok_per_s"] == pytest.approx(8 / 2.0)
+        assert rep["tokens"] == 4
+        assert rep["tok_per_s"] == pytest.approx(4 / 2.0)
         for v in rep.values():
             assert np.isfinite(v)
 
