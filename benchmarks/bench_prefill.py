@@ -22,6 +22,13 @@ and chunked prefill interleaved with decode — and reports:
                         retained vs dense slot capacity, paged vs dense
                         tok/s.  ``--study-only`` runs just this and
                         gates the two invariants (the tier-1 CI smoke).
+* overload_study      — fault-tolerant serving under ~2x pool
+                        oversubscription (DESIGN.md §11): shed rate,
+                        preemption count, admissions deferred, and
+                        virtual-clock p95 latency, with the
+                        survivors-bitwise acceptance bar gated hard
+                        (non-zero exit when a pressured survivor's
+                        tokens diverge from the unpressured run).
 
 CPU wall-clock is a trend proxy, not TPU time.  ``--against`` diffs a
 previous run (the nightly compares against the committed seed) through
@@ -43,6 +50,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, PagedKVConfig
 from repro.models import lm
+from repro.runtime.faults import FaultInjector
 from repro.runtime.server import Request, Server, ServeConfig, \
     throughput_report
 
@@ -158,6 +166,77 @@ def paged_kv_study(cfg, quick: bool) -> dict:
     return out
 
 
+def overload_study(cfg, quick: bool) -> dict:
+    """Fault-tolerant serving under ~2x pool oversubscription
+    (DESIGN.md §11).
+
+    A mixed-tier queue whose total KV working set is ~2x the paged pool
+    runs with admission control, deadlines, and tier-aware preemption on,
+    under the deterministic virtual clock (one tick per scheduler
+    iteration), so every reported number is exact: outcome counters and
+    the oversubscription ratio are gated exactly by the nightly diff,
+    and the virtual latency percentiles are tick-multiples, not CPU
+    noise.  The hard acceptance bar rides along as ``survivors_bitwise``:
+    every request the pressured server completes must emit bitwise the
+    tokens of an unpressured (big-pool, no-deadline) run.
+    """
+    n_req = 6 if quick else 8
+    batch, max_len, bs, max_new = 4, 64, 8, 8
+    rng = np.random.default_rng(7)
+    plens = [int(p) for p in rng.integers(12, 40, size=n_req)]
+    prompts = [rng.integers(0, cfg.vocab, size=p) for p in plens]
+    slas = ["latency", "balanced", "quality"]
+    # every third request carries a tight deadline so the study always
+    # exercises the shed path, not just preemption
+    deadlines = [0.6 if i % 3 == 2 else 0.0 for i in range(n_req)]
+    demand = sum(-(-(p + max_new) // bs) for p in plens)
+    pool = -(-demand // 2)          # ~2x oversubscribed
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+    def mk_reqs(with_deadlines):
+        return [Request(uid=i, prompt=prompts[i], max_new=max_new,
+                        sla=slas[i % len(slas)],
+                        deadline_s=deadlines[i] if with_deadlines else 0.0)
+                for i in range(n_req)]
+
+    def mk_server(pool_blocks):
+        scfg = ServeConfig(
+            batch=batch, max_len=max_len,
+            paged_kv=PagedKVConfig(block_size=bs, pool_blocks=pool_blocks),
+            preempt=True, default_deadline_s=100.0)
+        return Server(lm, cfg, scfg, params)
+
+    ref_srv = mk_server(demand + 4 * batch)    # headroom: never pressured
+    ref = {r.uid: np.asarray(r.out)
+           for r in ref_srv.serve(mk_reqs(with_deadlines=False))}
+
+    srv = mk_server(pool)
+    srv.attach_faults(FaultInjector(seed=0, virtual_clock=True,
+                                    tick_s=0.05))
+    done = srv.serve(mk_reqs(with_deadlines=True))
+    rep = throughput_report(done)
+    bitwise = all(np.array_equal(np.asarray(r.out), ref[r.uid])
+                  for r in done if r.outcome == "completed")
+    stats = srv.paged_stats()
+    out = {"pool_blocks": pool, "demand_blocks": demand,
+           "oversubscription": round(demand / pool, 4),
+           "requests": n_req,
+           "completed": rep["completed"], "shed": rep["shed"],
+           "shed_rate": rep["shed_rate"],
+           "preempted": rep["preempted"],
+           "preemptions": rep["preemptions"],
+           "admissions_deferred": stats["admissions_deferred"],
+           "survivors_bitwise": bool(bitwise),
+           "terminal_outcomes": all(r.outcome in ("completed", "shed")
+                                    for r in done),
+           "p95_latency_virtual_s": rep["p95_latency_s"],
+           "p95_ttft_virtual_s": rep["p95_ttft_s"]}
+    for k, v in rep.items():
+        if k.startswith("shed_") and k != "shed_rate":
+            out[k] = v
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -204,8 +283,16 @@ def main() -> None:
         "monolithic": _serve(cfg, mk(0), n_req, max_new),
         "chunked": _serve(cfg, mk(args.chunk), n_req, max_new),
         "paged_kv_study": paged_kv_study(cfg, args.quick),
+        "overload_study": overload_study(cfg, args.quick),
         "generated_unix": time.time(),
     }
+    ov = report["overload_study"]
+    print(f"overload_study,oversub={ov['oversubscription']:.2f},"
+          f"shed_rate={ov['shed_rate']:.3f},"
+          f"preemptions={ov['preemptions']},"
+          f"deferred={ov['admissions_deferred']},"
+          f"p95_latency_virtual_s={ov['p95_latency_virtual_s']:.2f},"
+          f"survivors_bitwise={ov['survivors_bitwise']}")
     study = report["paged_kv_study"]
     print(f"paged_kv_study,reduction={study['turn2_chunk_reduction']:.3f},"
           f"sessions={study['sessions_retained']}/{study['slots']} slots,"
@@ -219,10 +306,15 @@ def main() -> None:
               f"p95_itl_s={r['p95_itl_s']:.5f},"
               f"traces={r['chunk_traces']}")
     status = 0
+    if not (ov["survivors_bitwise"] and ov["terminal_outcomes"]):
+        print("overload_study,FAIL,survivors must be bitwise and every "
+              "outcome terminal")
+        status = 1
     if args.against:
         from benchmarks.bench_diff import check_against
-        status = check_against(args.against, report, args.tolerance,
-                               "bench_prefill_diff")
+        status = max(status, check_against(args.against, report,
+                                           args.tolerance,
+                                           "bench_prefill_diff"))
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")

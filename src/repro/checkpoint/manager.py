@@ -137,12 +137,18 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, tree_like: dict, step: Optional[int] = None,
-                shardings: Optional[dict] = None) -> tuple[dict, dict]:
+                shardings: Optional[dict] = None,
+                strict_shapes: bool = True) -> tuple[dict, dict]:
         """Restore into the structure of ``tree_like``.
 
         ``shardings``: optional pytree of NamedShardings for the CURRENT mesh
         — this is the elastic path: leaves are placed with jax.device_put
         onto the new topology regardless of the saving topology.
+        ``strict_shapes=False`` lets a leaf whose saved shape differs from
+        ``tree_like``'s pass through at the SAVED shape (host-resident
+        only: a mismatched leaf with a sharding is still an error) — the
+        caller is declaring it will reshape, e.g. the elastic-restart
+        shard-EMA remap in ``runtime.controller.restore_controller``.
         Returns (tree, extra).
         """
         self.wait()
@@ -173,8 +179,9 @@ class CheckpointManager:
                 import ml_dtypes
                 arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dt)))
             if tuple(arr.shape) != tuple(jnp.shape(like)):
-                raise ValueError(f"shape mismatch at {want_paths[i]}: "
-                                 f"{arr.shape} vs {jnp.shape(like)}")
+                if strict_shapes or sh is not None:
+                    raise ValueError(f"shape mismatch at {want_paths[i]}: "
+                                     f"{arr.shape} vs {jnp.shape(like)}")
             arr = arr.astype(like.dtype)
             new_leaves.append(jax.device_put(arr, sh) if sh is not None
                               else jnp.asarray(arr))

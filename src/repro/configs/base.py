@@ -27,6 +27,11 @@ class SLATier:
     name: str
     alpha_offset: float = 0.0   # added to every layer's schedule alpha
     target_scale: float = 1.0   # multiplies ControllerConfig.target_density
+    # Preemption rank under pool pressure (DESIGN.md §11): LOWER priority is
+    # parked first when the scheduler must relieve exhaustion, and only
+    # strictly-lower tiers may be preempted on behalf of a deadline-pressed
+    # queue head.  Ties break on fewest emitted tokens (least sunk work).
+    priority: int = 1
 
     def target(self, base_density: float) -> float:
         return float(min(1.0, max(1e-3, base_density * self.target_scale)))
@@ -36,9 +41,9 @@ class SLATier:
 # in counts of (alpha-1)*N_pos, so small d needs large offsets); paper-scale
 # models would use offsets in the 0.01-0.05 band (§V-B).
 DEFAULT_SLA_TIERS: tuple = (
-    SLATier("latency", alpha_offset=-0.25, target_scale=0.6),
-    SLATier("balanced"),
-    SLATier("quality", alpha_offset=0.25, target_scale=1.4),
+    SLATier("latency", alpha_offset=-0.25, target_scale=0.6, priority=0),
+    SLATier("balanced", priority=1),
+    SLATier("quality", alpha_offset=0.25, target_scale=1.4, priority=2),
 )
 
 

@@ -20,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.base import ControllerConfig
+from repro.configs.base import ControllerConfig, PagedKVConfig
 from repro.configs.registry import arch_names, get_config, reduced_config
 from repro.launch.mesh import make_mesh
 from repro.launch.specs import model_module
@@ -134,6 +134,33 @@ def main() -> None:
                     help="extend sign-bit sparse prediction to prefill "
                          "chunks (one chunk-union selection per chunk; "
                          "requires --prefill-chunk)")
+    # paged KV pool + overload handling (DESIGN.md §10-11)
+    ap.add_argument("--paged-kv", type=int, default=0, metavar="BLOCK",
+                    help="enable the paged KV pool with this block size in "
+                         "tokens (0 = dense per-slot caches); prefix reuse, "
+                         "sessions, and preemption all need the pool")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="total pool blocks (0 = auto-size to exactly fit "
+                         "--batch x --max-len; smaller values oversubscribe "
+                         "the pool, exercising eviction and preemption)")
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="admission control: requests beyond this queue "
+                         "depth are shed immediately with outcome "
+                         "shed/queue_depth (0 = unbounded)")
+    ap.add_argument("--default-deadline", type=float, default=0.0,
+                    help="seconds from admission before an un-deadlined "
+                         "request is shed (0 = none); per-request "
+                         "Request.deadline_s overrides")
+    ap.add_argument("--preempt", action="store_true",
+                    help="tier-aware preemption under pool pressure: park "
+                         "the lowest-priority slot's blocks in the prefix "
+                         "trie and requeue it (resume re-admits by "
+                         "reference) instead of failing the serve; "
+                         "requires --paged-kv")
+    ap.add_argument("--pressure-gate", type=float, default=1.0,
+                    help="defer admissions while pool pressure >= this "
+                         "fraction (1.0 = disabled; useful range "
+                         "0.8-0.95)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -184,6 +211,9 @@ def main() -> None:
                                 audit_period=args.audit_period,
                                 adapt_capacity=args.adapt_capacity,
                                 per_tier=args.per_tier)
+        paged = (PagedKVConfig(block_size=args.paged_kv,
+                               pool_blocks=args.pool_blocks)
+                 if args.paged_kv else None)
         srv = Server(mod, cfg, ServeConfig(batch=args.batch,
                                            max_len=args.max_len,
                                            max_new_tokens=args.max_new,
@@ -194,7 +224,15 @@ def main() -> None:
                                            prefill_interleave=args
                                            .prefill_interleave,
                                            controller_ckpt=args
-                                           .controller_ckpt),
+                                           .controller_ckpt,
+                                           paged_kv=paged,
+                                           max_queue_depth=args
+                                           .max_queue_depth,
+                                           default_deadline_s=args
+                                           .default_deadline,
+                                           preempt=args.preempt,
+                                           pressure_gate=args
+                                           .pressure_gate),
                      params, extra_inputs=extra, mesh=serve_mesh)
         slas = parse_sla_mix(args.sla_mix, args.requests)
         reqs = [Request(uid=i,
@@ -232,6 +270,8 @@ def main() -> None:
                 "chunk_traces": {str(k): v
                                  for k, v in srv._prefill_traces.items()},
             }
+        if args.paged_kv:
+            rep["paged"] = srv.paged_stats()
         if srv.controller is not None:
             rep["controller"] = srv.controller.report()
         print(json.dumps(rep, indent=1))

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
@@ -443,6 +444,34 @@ class AlphaController:
         self.prefill_chunks = int(meta.get("prefill_chunks", 0))
 
 
+def remap_shard_ema(ema: np.ndarray, ms_new: int) -> np.ndarray:
+    """Tile-weighted remap of per-(layer, shard) EMAs across model-shard
+    counts (elastic restart, DESIGN.md §11).
+
+    Shard ``s`` of an ``ms_old``-way split owns the neuron tile
+    ``[s/ms_old, (s+1)/ms_old)`` of each layer's ffn axis; after a regrid
+    the new shard ``t`` owns ``[t/ms_new, (t+1)/ms_new)``.  The restored
+    EMA for ``t`` is the overlap-length-weighted average of the old
+    per-tile EMAs it now covers — exact when the old stats were uniform
+    within each tile, and in every case a mean-preserving reshuffle
+    (``new.mean(-1) == old.mean(-1)`` up to float error), so capacity
+    hints and skew metrics resume from honest values instead of zeros.
+    """
+    ema = np.asarray(ema, np.float32)
+    ms_old = ema.shape[-1]
+    if ms_old == ms_new:
+        return ema.copy()
+    # W[t, s] = |tile_t_new ∩ tile_s_old| / |tile_t_new|; rows sum to 1.
+    lo_new = np.arange(ms_new, dtype=np.float64)[:, None] / ms_new
+    hi_new = lo_new + 1.0 / ms_new
+    lo_old = np.arange(ms_old, dtype=np.float64)[None, :] / ms_old
+    hi_old = lo_old + 1.0 / ms_old
+    overlap = np.clip(np.minimum(hi_new, hi_old)
+                      - np.maximum(lo_new, lo_old), 0.0, None)
+    w = (overlap * ms_new).astype(np.float32)            # (ms_new, ms_old)
+    return np.einsum("ls,ts->lt", ema, w)
+
+
 class DistributedController:
     """Mesh-serving wrapper around :class:`AlphaController` (DESIGN.md §8).
 
@@ -465,7 +494,10 @@ class DistributedController:
       its own bucket instead of forcing a global C/ms everywhere.
 
     The controller also records the semantic ``(data, model)`` topology it
-    served, so a checkpoint restored onto a different grid is rejected.
+    served; a checkpoint restored onto a different grid is absorbed by
+    remapping the per-(layer, shard) EMAs with a tile-overlap-weighted
+    average (elastic restart, :func:`remap_shard_ema`) instead of being
+    rejected.
     Everything else — update law, tiers, audit cadence, capacity hints,
     persistence — delegates to the wrapped controller, so the server drives
     both through one interface.
@@ -481,6 +513,7 @@ class DistributedController:
         self.shard_union_ema = np.zeros(
             (inner.num_layers, self.n_shards), np.float32)
         self._shard_steps = 0
+        self.stats_regrids = 0   # elastic restarts absorbed (DESIGN.md §11)
 
     # delegated interface (the exact surface runtime.server drives)
     def __getattr__(self, name):
@@ -577,21 +610,36 @@ class DistributedController:
         return tree, meta
 
     def load_state_dict(self, tree: dict, meta: dict) -> None:
-        saved = (int(meta.get("n_shards", self.n_shards)),
-                 int(meta.get("n_data_shards", self.n_data_shards)))
-        if saved != (self.n_shards, self.n_data_shards):
-            raise ValueError(
-                "controller checkpoint (data, model) topology mismatch: "
-                f"saved {(saved[1], saved[0])} vs configured "
-                f"{(self.n_data_shards, self.n_shards)}")
+        saved_ms = int(meta.get("n_shards", self.n_shards))
+        saved_ds = int(meta.get("n_data_shards", self.n_data_shards))
+        regrid = (saved_ms, saved_ds) != (self.n_shards, self.n_data_shards)
         tree = dict(tree)
         shard_ema = tree.pop("shard_density_ema", None)
         union_ema = tree.pop("shard_union_ema", None)
         self.inner.load_state_dict(tree, meta)
-        if shard_ema is not None:
-            self.shard_density_ema = np.asarray(shard_ema, np.float32)
-        if union_ema is not None:
-            self.shard_union_ema = np.asarray(union_ema, np.float32)
+        # Elastic restart (DESIGN.md §11): a checkpoint from a different
+        # (data, model) grid is remapped, not rejected.  The inner state
+        # (alphas, EMAs, integrators) is grid-independent; only the
+        # per-(layer, shard) EMAs are tiled by ms, and remap_shard_ema
+        # re-tiles them.  The data axis carries no controller state (batch
+        # shards all feed the same (L, B) aggregation), so ds changes are
+        # free.
+        for name, arr in (("shard_density_ema", shard_ema),
+                          ("shard_union_ema", union_ema)):
+            if arr is None:
+                continue
+            arr = np.asarray(arr, np.float32)
+            if arr.shape != (self.inner.num_layers, saved_ms):
+                raise ValueError(
+                    f"controller checkpoint {name} shape {arr.shape} != "
+                    f"({self.inner.num_layers}, {saved_ms})")
+            setattr(self, name, remap_shard_ema(arr, self.n_shards))
+        if regrid:
+            warnings.warn(
+                "elastic restart: controller checkpoint from (data, model) "
+                f"grid {(saved_ds, saved_ms)} remapped onto "
+                f"{(self.n_data_shards, self.n_shards)}", stacklevel=2)
+            self.stats_regrids += 1
         self._shard_steps = int(meta.get("shard_steps", 0))
 
 
@@ -610,6 +658,11 @@ def restore_controller(ctl, manager, step: Optional[int] = None) -> bool:
     if step is None and manager.latest_step() is None:
         return False
     tree_like, _ = ctl.state_dict()
-    tree, meta = manager.restore(tree_like, step=step)
+    # strict_shapes=False: a DistributedController restoring across model
+    # grids presents (L, ms_new)-shaped shard-EMA leaves while the
+    # checkpoint holds (L, ms_old) — the manager passes the saved arrays
+    # through and load_state_dict remaps them (every other leaf is still
+    # shape-checked there, so corruption is caught one layer up).
+    tree, meta = manager.restore(tree_like, step=step, strict_shapes=False)
     ctl.load_state_dict(tree, meta)
     return True

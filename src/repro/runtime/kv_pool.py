@@ -51,6 +51,14 @@ from typing import Optional
 import numpy as np
 
 
+class PoolExhausted(RuntimeError):
+    """The eviction cascade (free -> parked -> sessions) ran dry: every
+    block holds a live reference.  Subclasses ``RuntimeError`` so existing
+    callers that treat exhaustion as fatal keep working; the slot-refill
+    scheduler catches this type specifically to shed or preempt instead
+    of crashing (DESIGN.md §11)."""
+
+
 class KVPool:
     """Bookkeeping for one device block pool (``n_blocks`` total, including
     the two reserved blocks)."""
@@ -111,25 +119,52 @@ class KVPool:
             elif self.sessions:
                 self._evict_session()
             else:
-                raise RuntimeError(
+                raise PoolExhausted(
                     f"KV pool exhausted: {self.n_blocks} blocks all hold "
-                    "live references (grow PagedKVConfig.pool_blocks or "
-                    "admit fewer concurrent requests)")
+                    "live references (grow PagedKVConfig.pool_blocks, "
+                    "enable ServeConfig.preempt, or admit fewer concurrent "
+                    "requests)")
         bid = self._free.pop()
         assert self.refcount[bid] == 0
         self.refcount[bid] = 1
         return bid
 
+    def pressure(self) -> float:
+        """Allocator pressure in ``[0, 1]``: the fraction of allocatable
+        blocks the cascade could NOT hand out for free (live slot/session
+        references).  Free and parked-committed blocks are both costless to
+        allocate, so only they count as headroom; session-pinned blocks are
+        reclaimable but at the price of evicting a session, which is
+        exactly the cascade stage admission control exists to avoid.
+        Monotone non-decreasing under pure consumption (alloc without
+        release)."""
+        allocatable = self.n_blocks - self._RESERVED
+        headroom = len(self._free) + len(self._lru)
+        return 1.0 - headroom / allocatable
+
+    def _check_id(self, bid: int) -> int:
+        """Reject foreign ids before they touch the refcount array: a
+        negative int would silently wrap via numpy indexing, NULL/TRASH
+        hold no references by construction, and an out-of-range id is a
+        table-corruption bug at the caller."""
+        b = int(bid)
+        if b == self.NULL or b == self.TRASH:
+            raise ValueError(
+                f"reserved block id {b} (NULL/TRASH) holds no references")
+        if not self._RESERVED <= b < self.n_blocks:
+            raise ValueError(
+                f"block id {b} out of range "
+                f"[{self._RESERVED}, {self.n_blocks})")
+        return b
+
     def incref(self, bid: int) -> None:
-        if bid < self._RESERVED:
-            return
+        bid = self._check_id(bid)
         if self.refcount[bid] == 0 and bid in self._lru:
             del self._lru[bid]       # revived from the evictable park
         self.refcount[bid] += 1
 
     def decref(self, bid: int) -> None:
-        if bid < self._RESERVED:
-            return
+        bid = self._check_id(bid)
         if self.refcount[bid] <= 0:
             raise RuntimeError(f"decref of unreferenced block {bid}")
         self.refcount[bid] -= 1
@@ -147,8 +182,8 @@ class KVPool:
         uncommitted — write in place.  Otherwise a fresh fork was
         allocated, ``bid``'s reference dropped, and the caller must copy
         (or fully rewrite) the page content from ``src``."""
-        if bid >= self._RESERVED and self.refcount[bid] == 1 \
-                and bid not in self._hash_of:
+        bid = self._check_id(bid)
+        if self.refcount[bid] == 1 and bid not in self._hash_of:
             return bid, None
         fresh = self.alloc()
         self.decref(bid)
@@ -252,6 +287,7 @@ class KVPool:
             "committed_blocks": len(self._hash_of),
             "live_refs": int((self.refcount > 0).sum()),
             "sessions": len(self.sessions),
+            "pressure": self.pressure(),
             **{k: int(v) for k, v in self.stats.items()},
         }
 

@@ -46,7 +46,8 @@ from repro.models.common import greedy_sample
 from repro.runtime.controller import (AlphaController, DistributedController,
                                       aggregate_tier_stats, restore_controller,
                                       save_controller)
-from repro.runtime.kv_pool import KVPool
+from repro.runtime.faults import InjectedFault
+from repro.runtime.kv_pool import KVPool, PoolExhausted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +106,33 @@ class ServeConfig:
     # chunked prefill is on).  None keeps the dense per-slot caches —
     # the bitwise reference the paged path is pinned against.
     paged_kv: Optional[PagedKVConfig] = None
+    # ---- overload robustness (DESIGN.md §11) ----------------------------
+    # Admission control: serve() accepts at most this many queued requests;
+    # the excess is recorded shed ("queue_depth") up front instead of
+    # deepening an unbounded backlog.  0 = unbounded.
+    max_queue_depth: int = 0
+    # Fills Request.deadline_s for requests that declare none (0 = no
+    # deadline).  Expired requests shed — queued, mid-prefill or resident —
+    # with whatever tokens they already emitted.
+    default_deadline_s: float = 0.0
+    # Tier-aware preemption (needs paged_kv): on pool exhaustion — and on
+    # deadline pressure at the queue head — the lowest-priority victim's
+    # prompt blocks park in the prefix trie (evictable yet matchable, so
+    # resume re-admits them by reference) and the request requeues.  Off,
+    # pool exhaustion stays the legacy hard PoolExhausted.
+    preempt: bool = False
+    # KVPool.pressure() at or above which slot refills defer (admission
+    # backpressure): new admissions above the gate would only feed the
+    # eviction cascade.  Never defers when nothing is resident, so the
+    # scheduler always makes progress.  1.0 disables the gate (the
+    # default: gating changes admission interleaving, which under a
+    # controller changes telemetry — it must be an explicit choice);
+    # 0.8-0.95 is the useful overload range.
+    pressure_gate: float = 1.0
+    # Per-request preemption cap: past it the victim sheds ("pool") instead
+    # of requeueing — the livelock guard for a pool too small to ever hold
+    # the request (it would otherwise thrash park/resume forever).
+    max_preemptions: int = 4
 
 
 @dataclasses.dataclass
@@ -130,6 +158,17 @@ class Request:
     t_end: float = 0.0           # perf_counter at completion
     queue_wait_s: float = 0.0    # admission -> dequeue
     ttft_s: float = 0.0          # admission -> first token emitted
+    deadline_s: float = 0.0      # SLA deadline relative to admission
+                                 # (serve() entry); 0 = none.  Unset, it is
+                                 # filled from ServeConfig.default_deadline_s.
+                                 # Past it the request sheds at the next
+                                 # scheduler boundary (DESIGN.md §11)
+    outcome: str = ""            # terminal scheduler outcome: "completed" |
+                                 # "shed" ("" = never served)
+    shed_reason: str = ""        # for shed outcomes: "deadline" | "pool" |
+                                 # "queue_depth" | "fault"
+    preemptions: int = 0         # times parked + requeued before the
+                                 # terminal outcome (DESIGN.md §11)
 
 
 def _splice_slot(full, one, slot):
@@ -186,6 +225,20 @@ class Server:
                 raise ValueError(
                     f"prefill_interleave={scfg.prefill_interleave} must be "
                     ">= 1 (chunks per decode-loop iteration)")
+        if scfg.preempt and scfg.paged_kv is None:
+            raise ValueError(
+                "ServeConfig.preempt needs the paged KV pool (paged_kv): "
+                "preemption parks the victim's block chain in the prefix "
+                "trie so resume re-admits by reference (DESIGN.md §11)")
+        if not 0.0 < scfg.pressure_gate <= 1.0:
+            raise ValueError(
+                f"pressure_gate={scfg.pressure_gate} must be in (0, 1]")
+        if scfg.max_queue_depth < 0 or scfg.default_deadline_s < 0.0 \
+                or scfg.max_preemptions < 1:
+            raise ValueError(
+                "max_queue_depth/default_deadline_s must be >= 0 and "
+                f"max_preemptions >= 1; got {scfg.max_queue_depth}/"
+                f"{scfg.default_deadline_s}/{scfg.max_preemptions}")
         if mesh is not None:
             from repro.sharding import rules as RR
             from repro.sharding import sparse as SSP
@@ -301,6 +354,11 @@ class Server:
         self._pool = None
         self.prefill_chunks_run = 0       # admission chunks executed
         self.prefill_chunks_skipped = 0   # admission chunks saved by reuse
+        # ---- overload accounting + fault injection (DESIGN.md §11) -------
+        self.faults = None                # runtime.faults.FaultInjector
+        self.preempt_count = 0            # victims parked + requeued
+        self.shed_count = 0               # terminal sheds (all reasons)
+        self.admissions_deferred = 0      # refills held back by the gate
         if scfg.paged_kv is not None:
             pk = scfg.paged_kv
             pfams = getattr(model_mod, "PAGED_KV_FAMILIES", ())
@@ -321,12 +379,8 @@ class Server:
                     f"of paged_kv.block_size={pk.block_size} so trie-aligned "
                     "reuse lands on chunk boundaries (DESIGN.md §10)")
             nbps = scfg.max_len // pk.block_size
-            n_blocks = pk.pool_blocks or scfg.batch * nbps + KVPool._RESERVED
             self._nbps = nbps
-            self.kv_pool = KVPool(n_blocks, pk.block_size,
-                                  max_sessions=pk.max_sessions,
-                                  prefix_cache=pk.prefix_cache)
-            self._pool = model_mod.init_kv_pool(cfg, n_blocks, pk.block_size)
+            self._init_paged_state()
 
             bs_ = pk.block_size
 
@@ -375,25 +429,6 @@ class Server:
             if cfg.family == "xlstm":
                 raise ValueError("xlstm has no SparseInfer MLP decode path; "
                                  "controller unsupported")
-            tiers = scfg.sla_tiers if scfg.controller.per_tier else None
-            # NOTE: gather no longer blocks per-tier control — since PR 4 it
-            # reports TRUE per-slot realized density (the token's predicted
-            # groups that made the union selection), same contract as the
-            # pallas kernel's in-kernel counter (DESIGN.md §4/§5).
-            # pallas emits the false-negative proxy natively every step:
-            # no masked-path audit dispatches at all (DESIGN.md §4)
-            self.controller = AlphaController(
-                scfg.controller, cfg.sparse.alpha_schedule(),
-                self._n_controlled_layers(), tiers=tiers,
-                native_fn=cfg.sparse.strategy == "pallas")
-            if cfg.sparse.tp_shards:
-                # sharded strategies (mesh or emulated) ride per-shard
-                # realized densities + union demands along the telemetry:
-                # wrap for skew diagnosis, per-shard bucket hints and the
-                # key strip before aggregation
-                self.controller = DistributedController(
-                    self.controller, cfg.sparse.tp_shards,
-                    n_data_shards=max(1, cfg.sparse.dp_shards or 1))
             self._build_controller_fns()
         # ---- controller persistence (DESIGN.md §8) -----------------------
         if cfg.sparse.tp_shards and cfg.sparse.strategy == "pallas":
@@ -404,13 +439,105 @@ class Server:
             self._check_shard_grids((cfg.sparse.shard_capacity(cfg.d_ff),)
                                     * ms)
         self._ckpt_mgr = None
-        if scfg.controller_ckpt and self.controller is not None:
+        if scfg.controller_ckpt and scfg.controller.enabled \
+                and cfg.sparse.enabled:
             from repro.checkpoint.manager import CheckpointManager
             self._ckpt_mgr = CheckpointManager(scfg.controller_ckpt)
-            if restore_controller(self.controller, self._ckpt_mgr):
-                # restored union/density EMAs immediately steer the bucket
-                # ladder: the first _select_bucket call uses them
-                self._select_bucket()
+        self._init_controller_state()
+        self._cfg0 = self.cfg   # pristine config; reset() restores it
+
+    def _init_controller_state(self) -> None:
+        """Fresh controller state — construction and :meth:`reset` share
+        this, so a reset server's controller is bitwise a new server's."""
+        cfg, scfg = self.cfg, self.scfg
+        if not (scfg.controller.enabled and cfg.sparse.enabled):
+            self.controller = None
+            return
+        tiers = scfg.sla_tiers if scfg.controller.per_tier else None
+        # NOTE: gather no longer blocks per-tier control — since PR 4 it
+        # reports TRUE per-slot realized density (the token's predicted
+        # groups that made the union selection), same contract as the
+        # pallas kernel's in-kernel counter (DESIGN.md §4/§5).
+        # pallas emits the false-negative proxy natively every step:
+        # no masked-path audit dispatches at all (DESIGN.md §4)
+        ctl = AlphaController(
+            scfg.controller, cfg.sparse.alpha_schedule(),
+            self._n_controlled_layers(), tiers=tiers,
+            native_fn=cfg.sparse.strategy == "pallas")
+        if cfg.sparse.tp_shards:
+            # sharded strategies (mesh or emulated) ride per-shard
+            # realized densities + union demands along the telemetry:
+            # wrap for skew diagnosis, per-shard bucket hints and the
+            # key strip before aggregation
+            ctl = DistributedController(
+                ctl, cfg.sparse.tp_shards,
+                n_data_shards=max(1, cfg.sparse.dp_shards or 1))
+        self.controller = ctl
+        self._active_cap = self._initial_cap
+        if self._ckpt_mgr is not None and restore_controller(ctl,
+                                                             self._ckpt_mgr):
+            # restored union/density EMAs immediately steer the bucket
+            # ladder: the first _select_bucket call uses them
+            self._select_bucket()
+
+    def _init_paged_state(self) -> None:
+        """Fresh host pool manager + device block pool — construction and
+        :meth:`reset` share this (the jitted seed/commit/decode fns are
+        pure and survive resets untouched)."""
+        pk = self.scfg.paged_kv
+        n_blocks = (pk.pool_blocks
+                    or self.scfg.batch * self._nbps + KVPool._RESERVED)
+        self.kv_pool = KVPool(n_blocks, pk.block_size,
+                              max_sessions=pk.max_sessions,
+                              prefix_cache=pk.prefix_cache)
+        self._pool = self.mod.init_kv_pool(self.cfg, n_blocks, pk.block_size)
+
+    def reset(self) -> None:
+        """Serve-abort recovery (DESIGN.md §11): restore every piece of
+        cross-serve mutable state — controller (+ its checkpoint restore),
+        KV pool manager and device pool, capacity bucket, counters — to
+        its fresh-construction value, so the next serve() on this server
+        is bitwise-identical to one on a newly built server.  serve()
+        invokes this automatically when the scheduler raises; jitted
+        executables are pure functions and are kept."""
+        if self.cfg is not self._cfg0:
+            # maybe_adapt_capacity re-jitted toward a hint mid-serve:
+            # restore the pristine config and its executables
+            self.cfg = self._cfg0
+            if self.scfg.controller.enabled and self.cfg.sparse.enabled:
+                self._build_controller_fns()
+        self._init_controller_state()
+        if self.scfg.paged_kv is not None:
+            self._init_paged_state()
+        self.prefill_chunks_run = 0
+        self.prefill_chunks_skipped = 0
+        self.preempt_count = 0
+        self.shed_count = 0
+        self.admissions_deferred = 0
+
+    # ------------------------------------------------ fault plumbing (§11) --
+    def attach_faults(self, injector) -> None:
+        """Install a ``runtime.faults.FaultInjector``: its armed points
+        fire via ``_fault`` and, with ``virtual_clock``, the scheduler's
+        entire notion of time (deadlines, stamps, queue waits) comes from
+        ``injector.now()`` advanced one tick per loop iteration — overload
+        runs become deterministic functions of scheduling decisions."""
+        self.faults = injector
+
+    def _now(self) -> float:
+        f = self.faults
+        if f is not None and f.virtual_clock:
+            return f.now()
+        return time.perf_counter()
+
+    def _tick(self) -> None:
+        f = self.faults
+        if f is not None and f.virtual_clock:
+            f.tick()
+
+    def _fault(self, point: str, uid: Optional[int] = None) -> None:
+        if self.faults is not None:
+            self.faults.check(point, uid)
 
     def _build_controller_fns(self) -> None:
         """(Re)build the stats-collecting decode jits against the CURRENT
@@ -497,6 +624,7 @@ class Server:
                     "runs without buckets (DESIGN.md §2)", stacklevel=2)
             self._bucket_fns[0] = make_ctrl(cfg, 0)
             self._active_cap = 0
+        self._initial_cap = self._active_cap   # reset() restores this
 
         audit_cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, strategy="masked"))
@@ -820,7 +948,10 @@ class Server:
             return {}
         return {**self.kv_pool.snapshot(),
                 "prefill_chunks_run": self.prefill_chunks_run,
-                "prefill_chunks_skipped": self.prefill_chunks_skipped}
+                "prefill_chunks_skipped": self.prefill_chunks_skipped,
+                "preemptions": self.preempt_count,
+                "shed": self.shed_count,
+                "admissions_deferred": self.admissions_deferred}
 
     def _slot_extra(self, i: int, extra: tuple) -> tuple:
         """Per-slot extra model inputs for a chunked prefill: batch-1 slices
@@ -923,7 +1054,7 @@ class Server:
         # validate the whole queue BEFORE any work: a bad request must not
         # abort a half-served batch (and the chunked path would otherwise
         # silently clamp oversized cache writes)
-        t_adm = time.perf_counter()   # admission: latency clocks start HERE
+        t_adm = self._now()           # admission: latency clocks start HERE
         for r in requests:
             self._tier_of(r)
             # reset EVERY serve-set stamp, not just t_admit: Request objects
@@ -935,15 +1066,38 @@ class Server:
             r.t_start = r.t_end = 0.0
             r.queue_wait_s = r.ttft_s = r.latency_s = 0.0
             r.out = None
+            r.outcome = r.shed_reason = ""
+            r.preemptions = 0
+            if r.deadline_s <= 0.0 and self.scfg.default_deadline_s > 0.0:
+                r.deadline_s = self.scfg.default_deadline_s
             if len(r.prompt) + r.max_new > self.scfg.max_len:
                 raise ValueError(
                     f"request {r.uid}: prompt {len(r.prompt)} + max_new "
                     f"{r.max_new} exceeds max_len {self.scfg.max_len}")
+        # bounded queue depth (DESIGN.md §11): overflow sheds NOW, before
+        # any compute — the client sees the rejection immediately instead
+        # of a deadline miss after minutes in a hopeless backlog
+        overflow: list[Request] = []
+        mqd = self.scfg.max_queue_depth
+        if mqd and len(requests) > mqd:
+            requests, overflow = requests[:mqd], requests[mqd:]
+            for r in overflow:
+                r.outcome, r.shed_reason = "shed", "queue_depth"
+                r.out = np.zeros(0, np.int32)
+            self.shed_count += len(overflow)
         if self.scfg.slot_refill:
-            with self._mesh_ctx():
-                done = self._serve_slot_refill(requests)
+            try:
+                with self._mesh_ctx():
+                    done = self._serve_slot_refill(requests)
+            except Exception:
+                # serve-abort recovery (DESIGN.md §11): the scheduler died
+                # mid-drain with slots/pool/controller half-mutated — reset
+                # to fresh-construction state so the NEXT serve is sound,
+                # then let the caller see the original failure
+                self.reset()
+                raise
             self.save_controller()  # persistence point (DESIGN.md §8)
-            return done
+            return done + overflow
         # chunk composition is deterministic, so padded-chunk overflow
         # (chunk-max prompt + chunk-max budget) is also checkable up front
         pc = self.scfg.prefill_chunk
@@ -957,10 +1111,14 @@ class Server:
                 raise ValueError(
                     f"chunk {c0 // self.scfg.batch}: padded prompt + chunk "
                     f"max_new = {need} exceeds max_len {self.scfg.max_len}")
-        with self._mesh_ctx():
-            done = self._serve_chunked(requests)
+        try:
+            with self._mesh_ctx():
+                done = self._serve_chunked(requests)
+        except Exception:
+            self.reset()
+            raise
         self.save_controller()
-        return done
+        return done + overflow
 
     def _serve_chunked(self, requests: list[Request]) -> list[Request]:
         """Legacy scheduler: fixed chunks of scfg.batch run to completion
@@ -977,7 +1135,7 @@ class Server:
         done: list[Request] = []
         while queue:
             chunk, queue = queue[:self.scfg.batch], queue[self.scfg.batch:]
-            t0 = time.perf_counter()
+            t0 = self._now()
             plen = max(len(r.prompt) for r in chunk)
             if self.scfg.prefill_chunk:
                 # pad the batch's prompt length up to the chunk ladder: the
@@ -992,9 +1150,10 @@ class Server:
                 prompts[i, plen - len(r.prompt):] = r.prompt
             max_new = max(r.max_new for r in chunk)
             gen = self.generate(prompts, max_new)
-            t1 = time.perf_counter()
+            t1 = self._now()
             for i, r in enumerate(chunk):
                 r.out = gen[i, :r.max_new]
+                r.outcome = "completed"
                 r.t_start, r.t_end = t0, t1
                 r.queue_wait_s = t0 - r.t_admit if r.t_admit else 0.0
                 # admission -> last token (the documented latency contract;
@@ -1017,6 +1176,10 @@ class Server:
         ctl = self.controller
         queue = collections.deque(requests)
         done: list[Request] = []
+        # victim ordering for preemption/shedding (DESIGN.md §11): lowest
+        # tier priority first, then fewest emitted tokens (least sunk
+        # work), then slot index — fully deterministic
+        prio = np.asarray([t.priority for t in scfg.sla_tiers], np.int64)
 
         paged = self.kv_pool is not None
         pool_mgr = self.kv_pool
@@ -1069,7 +1232,8 @@ class Server:
         def finish(i: int) -> None:
             r = slot_req[i]
             r.out = np.asarray(slot_out[i][: r.max_new], np.int32)
-            r.t_end = time.perf_counter()
+            r.outcome = "completed"
+            r.t_end = self._now()
             # admission -> last token (the documented latency contract; the
             # old dequeue-relative clock silently excluded the queue wait)
             r.latency_s = r.t_end - (r.t_admit if r.t_admit else r.t_start)
@@ -1079,14 +1243,113 @@ class Server:
             slot_req[i] = None
             active[i] = False
 
-        def _release_slot(i: int, r: Request) -> None:
+        # ---- overload handling (DESIGN.md §11) ---------------------------
+        # admission back-off latch: set when a placement failed on pool
+        # exhaustion with resident work to wait for, cleared by any
+        # block-release event (finish/shed/preempt/kill).  While set, no
+        # admission is attempted — the alternative (equal-tier admission
+        # preemption) ping-pongs: each admitted request parks the other
+        # until both burn their preemption budget and shed, where simply
+        # waiting completes everything serially.
+        pool_wait = [False]
+
+        def _expired(r: Request, now: float) -> bool:
+            return (r.deadline_s > 0.0 and r.t_admit > 0.0
+                    and now - r.t_admit > r.deadline_s)
+
+        def _shed(r: Request, reason: str, toks=None) -> None:
+            """Terminal shed: returned to the caller with whatever tokens
+            it emitted, excluded from served throughput (t_end stays 0)."""
+            r.outcome, r.shed_reason = "shed", reason
+            r.out = np.asarray(toks if toks is not None else [], np.int32)
+            self.shed_count += 1
+            done.append(r)
+
+        def _clear_slot(i: int) -> None:
+            nonlocal alpha_mat
+            slot_req[i] = None
+            slot_out[i] = []
+            active[i] = False
+            alpha_mat = None              # slot composition changed
+
+        def _shed_slot(i: int, reason: str) -> None:
+            r = slot_req[i]
+            if paged:
+                _release_slot(i, r, store=False)
+            _shed(r, reason, toks=slot_out[i])
+            _clear_slot(i)
+
+        def _preempt_slot(i: int) -> None:
+            """Tier-aware preemption: park slot i's prompt blocks in the
+            prefix trie (refcount 0 + committed = evictable yet matchable,
+            so resume re-admits them by reference at zero re-prefill
+            cost), free its decode-origin blocks, requeue the request.
+            Emitted tokens are discarded and re-decoded on resume — greedy
+            decode is deterministic, so under a per-slot-exact strategy
+            (masked; gather when the union adds no neurons) the resumed
+            output is bitwise the uninterrupted one; keeping the tokens
+            and re-prefilling them would NOT be (decode-origin KV is not
+            bitwise prefill KV — kv_pool module docstring).  A
+            request past ``max_preemptions`` sheds instead: the livelock
+            guard for a pool that can never hold it."""
+            r = slot_req[i]
+            if r.preemptions >= scfg.max_preemptions:
+                _shed_slot(i, "pool")
+                return
+            _release_slot(i, r, store=False)
+            r.preemptions += 1
+            r.outcome = "preempted"       # transient; terminal on finish/shed
+            self.preempt_count += 1
+            _clear_slot(i)
+            queue.append(r)
+
+        def _relieve(exclude: Optional[int] = None,
+                     max_prio: Optional[int] = None) -> bool:
+            """Free pool headroom by preempting the victim-ordered
+            lowest-priority active slot.  ``exclude`` (the slot needing
+            the block) is only chosen when it is the sole candidate —
+            preempting it is then correct: the pool cannot currently hold
+            it, and requeueing beats crashing.  ``max_prio`` (admission
+            relief) restricts victims to STRICTLY lower priority: an
+            incoming request may displace cheaper work but never a peer —
+            equal tiers wait their turn (see ``pool_wait``)."""
+            cands = [j for j in range(B) if active[j] and j != exclude
+                     and slot_meta[j] is not None
+                     and (max_prio is None or prio[tier_idx[j]] < max_prio)]
+            if (not cands and max_prio is None and exclude is not None
+                    and active[exclude] and slot_meta[exclude] is not None):
+                cands = [exclude]
+            if not cands:
+                return False
+            victim = min(cands, key=lambda j: (prio[tier_idx[j]],
+                                               len(slot_out[j]), j))
+            _preempt_slot(victim)
+            return True
+
+        def _kill_pending(i: int, reason: str) -> None:
+            """Abort a mid-prefill admission (deadline expiry or injected
+            slot death): drop the references _match_reuse took — adopted
+            AND unconsumed cow candidates — discard the scratch, shed."""
+            pool_wait[0] = False
+            st = pending.pop(i)
+            m = st.get("meta")
+            if paged and m is not None:
+                for b in m["ids"] + m.get("cow_ids", []):
+                    pool_mgr.release(b)
+            _shed(st["req"], reason)
+
+        def _release_slot(i: int, r: Request, store: bool = True) -> None:
             """Retire slot i's block-table row (DESIGN.md §10): commit this
             request's prefill-origin full prompt blocks into the trie
             (dedup against existing chains), then either retain the whole
             chain — prompt AND decode-written reply blocks, incl. the
             partial tail — under the request's session, or release every
             reference (committed blocks park in the evictable LRU, decode
-            blocks free immediately)."""
+            blocks free immediately).  ``store=False`` (preemption and
+            shedding) never stores the session: the turn is incomplete —
+            but the prompt blocks still commit, which is exactly what
+            makes a preempted request's resume admit by reference."""
+            pool_wait[0] = False          # headroom released below
             meta = slot_meta[i]
             written = int(lengths[i])          # prompt + decoded-token KV
             n_chain = -(-written // bs_) if written else 0
@@ -1099,7 +1362,7 @@ class Server:
                 meta["hashes"][:n_prompt_full], chain[:n_prompt_full],
                 owned_from=meta["adopted"])
             sid = r.session_id
-            if sid is not None:
+            if store and sid is not None:
                 hist = np.concatenate(
                     [np.asarray(r.prompt, np.int32),
                      np.asarray(slot_out[i], np.int32)])[:written]
@@ -1112,12 +1375,14 @@ class Server:
             slot_meta[i] = None
 
         def place(i: int, r: Request, first: int, plen: int, t: int,
-                  one, meta: Optional[dict] = None) -> None:
+                  one, meta: Optional[dict] = None) -> bool:
             """Activate slot i with a finished prefill: splice the batch-1
             caches (dense) or scatter them into owned pool blocks (paged),
-            seed the token/length/tier columns, stamp TTFT."""
+            seed the token/length/tier columns, stamp TTFT.  Returns False
+            when the pool could not hold the request even after preemption
+            relief — the request is shed and the slot left empty."""
             nonlocal caches, alpha_mat
-            now = time.perf_counter()
+            now = self._now()
             r.ttft_s = now - (r.t_admit if r.t_admit else r.t_start)
             slot_req[i] = r
             slot_out[i] = [first]
@@ -1145,13 +1410,52 @@ class Server:
                 # this loop consumes every held reference.
                 extra_ids = meta.get("cow_ids", [])
                 owned = []
-                for j in range(nb_re, nb_prompt):
+                j = nb_re
+                while j < nb_prompt:
                     k = j - nb_re
-                    if k < len(extra_ids):
-                        wid, _src = pool_mgr.ensure_writable(extra_ids[k])
-                        owned.append(wid)
-                    else:
-                        owned.append(pool_mgr.alloc())
+                    try:
+                        if k < len(extra_ids):
+                            # raises BEFORE consuming the held reference:
+                            # ensure_writable allocs the fork first, so a
+                            # PoolExhausted here leaves extra_ids[k] intact
+                            wid, _src = pool_mgr.ensure_writable(
+                                extra_ids[k])
+                        else:
+                            wid = pool_mgr.alloc()
+                    except PoolExhausted:
+                        if not scfg.preempt:
+                            raise         # legacy hard failure preserved
+                        # slot i is mid-placement (no meta yet, nothing
+                        # releasable) — it must never be its own victim;
+                        # admission relief only displaces STRICTLY lower
+                        # tiers (peers wait, see pool_wait)
+                        if _relieve(exclude=i, max_prio=int(prio[t])):
+                            continue      # headroom freed; retry this block
+                        # can't fit now: roll back every reference this
+                        # placement holds — blocks owned so far, unconsumed
+                        # cow candidates, and the adopted ids never written
+                        # into the table
+                        for b in owned:
+                            pool_mgr.release(b)
+                        for b in extra_ids[k:]:
+                            pool_mgr.release(b)
+                        for b in meta["ids"]:
+                            pool_mgr.release(b)
+                        table[i, :] = KVPool.TRASH
+                        _clear_slot(i)
+                        if active.any() or pending:
+                            # resident work will release blocks: park at
+                            # the queue HEAD (FIFO order preserved) and
+                            # latch admissions off until a release event
+                            queue.appendleft(r)
+                            pool_wait[0] = True
+                        else:
+                            # nothing resident to wait for — the pool
+                            # simply cannot hold this request: shed
+                            _shed(r, "pool")
+                        return False
+                    owned.append(wid)
+                    j += 1
                 wt = np.full(nbps, KVPool.TRASH, np.int32)
                 wt[nb_re:nb_prompt] = owned
                 caches = self.commit_fn(caches, one, jnp.asarray(wt))
@@ -1164,6 +1468,7 @@ class Server:
             else:
                 caches = self.splice_fn(caches, one, jnp.int32(i))
             alpha_mat = None              # slot composition changed
+            return True
 
         def admit(i: int) -> None:
             """Fill slot i from the queue.  With chunked prefill the slot
@@ -1173,7 +1478,21 @@ class Server:
             one trace per distinct prompt length."""
             nonlocal caches
             while queue:
+                if pool_wait[0]:
+                    return        # exhaustion latch: wait for a release
+                if (paged and scfg.pressure_gate < 1.0
+                        and (active.any() or pending)
+                        and pool_mgr.pressure() >= scfg.pressure_gate):
+                    # admission backpressure (DESIGN.md §11): above the
+                    # gate a refill would only feed the eviction cascade —
+                    # defer until resident work drains.  Never defers when
+                    # nothing is resident, so progress is guaranteed.
+                    self.admissions_deferred += 1
+                    return
                 r = queue.popleft()
+                if _expired(r, self._now()):
+                    _shed(r, "deadline")  # expired while queued
+                    continue
                 if paged:
                     sess = pool_mgr.lookup_session(r.session_id)
                     if sess is not None:
@@ -1185,7 +1504,7 @@ class Server:
                         r.sla = sess["tier"]
                 t = self._tier_of(r)      # queue pre-validated in serve()
                 plen = len(r.prompt)
-                now = time.perf_counter()
+                now = self._now()
                 r.t_start = now           # dequeue: service starts
                 r.queue_wait_s = now - r.t_admit if r.t_admit else 0.0
                 if self._chunk_prefill:
@@ -1219,9 +1538,17 @@ class Server:
                 prompt = jnp.asarray(
                     np.asarray(r.prompt, np.int32)[None, :])
                 ex = tuple(e[i:i + 1] for e in extra)
-                logits, one = self.prefill_fn(self.params, prompt, *ex)
+                try:
+                    self._fault("prefill", r.uid)
+                    logits, one = self.prefill_fn(self.params, prompt, *ex)
+                except InjectedFault:
+                    _shed(r, "fault")     # injected slot death mid-prefill
+                    continue
                 first = int(np.asarray(greedy_sample(logits))[0])
-                place(i, r, first, plen, t, one)
+                if not place(i, r, first, plen, t, one):
+                    if pool_wait[0]:
+                        return    # backpressure latched: stop admitting
+                    continue      # shed on pool exhaustion; try the next
                 if r.max_new <= 1:
                     finish(i)     # prefill alone satisfied it; keep draining
                     continue
@@ -1238,6 +1565,15 @@ class Server:
                         break
                     st = pending[i]
                     r = st["req"]
+                    try:
+                        self._fault("prefill", r.uid)
+                    except InjectedFault:
+                        # injected mid-prefill slot death: the admission
+                        # dies cleanly (references dropped, request shed)
+                        # and the slot refills from the queue
+                        _kill_pending(i, "fault")
+                        admit(i)
+                        continue
                     chunk_toks = jnp.asarray(
                         st["tokens"][:, st["off"]:st["off"] + pc])
                     al = jnp.asarray(self._prefill_alphas(st["tier"]))
@@ -1260,9 +1596,11 @@ class Server:
                     if st["off"] >= st["tokens"].shape[1]:
                         first = int(np.asarray(greedy_sample(logits))[0])
                         del pending[i]
-                        place(i, r, first, st["plen"], st["tier"],
-                              st["caches"], meta=st.get("meta"))
-                        if r.max_new <= 1:
+                        if not place(i, r, first, st["plen"], st["tier"],
+                                     st["caches"], meta=st.get("meta")):
+                            admit(i)   # requeued/shed; admit() no-ops
+                            #            while the exhaustion latch holds
+                        elif r.max_new <= 1:
                             finish(i)
                             admit(i)   # refill: may re-enter pending
 
@@ -1270,13 +1608,22 @@ class Server:
             """Before a decode step, every live slot's write position
             (``lengths[i]``) must land in a block the slot exclusively
             owns: allocate on first touch of each block (TRASH lanes are
-            the dead/pending write-off and the unallocated tail)."""
+            the dead/pending write-off and the unallocated tail).  Under
+            ``preempt``, exhaustion here preempts the lowest-priority
+            victim instead of raising — possibly the needing slot itself,
+            whose loop then exits with nothing to write (DESIGN.md §11).
+            Terminates: every retry preempts (or sheds) one active slot."""
             for i in range(B):
                 if not active[i]:
                     continue
                 j = int(lengths[i]) // bs_
-                if table[i, j] == KVPool.TRASH:
-                    table[i, j] = pool_mgr.alloc()
+                while active[i] and table[i, j] == KVPool.TRASH:
+                    try:
+                        table[i, j] = pool_mgr.alloc()
+                    except PoolExhausted:
+                        if not scfg.preempt:
+                            raise     # legacy hard failure preserved
+                        _relieve(exclude=i)  # slot i active => a victim exists
 
         for i in range(B):
             admit(i)
@@ -1287,7 +1634,44 @@ class Server:
             self._warm_bucket_ladder(tok, caches, lengths,
                               self._slot_alpha_matrix(tier_idx, active),
                               table=table if paged else None)
-        while active.any() or pending:
+        # queue can be non-empty with every slot idle (admissions deferred
+        # by the pressure gate, or slots freed by shed/preempt): the loop
+        # runs until all three drain.  Each iteration either decodes,
+        # prefills, admits, or sheds — and the virtual clock ticks
+        # regardless — so it always terminates.
+        while active.any() or pending or queue:
+            self._tick()
+            now = self._now()
+            # deadline enforcement (DESIGN.md §11): resident and
+            # mid-prefill requests past their deadline shed with whatever
+            # they already emitted (queued ones shed at dequeue in admit)
+            for i in range(B):
+                if active[i] and _expired(slot_req[i], now):
+                    _shed_slot(i, "deadline")
+            for i in [j for j in sorted(pending)
+                      if _expired(pending[j]["req"], now)]:
+                _kill_pending(i, "deadline")
+            # deadline-pressure preemption: the queue HEAD has burned half
+            # its deadline waiting and a strictly-lower-priority victim is
+            # resident — park the victim so the urgent request admits into
+            # the freed slot on this very iteration (FIFO head first)
+            if scfg.preempt and queue:
+                h = queue[0]
+                if (h.deadline_s > 0.0 and h.t_admit > 0.0
+                        and now - h.t_admit >= 0.5 * h.deadline_s):
+                    cands = [j for j in range(B) if active[j]
+                             and prio[tier_idx[j]] < prio[self._tier_of(h)]]
+                    if cands:
+                        _preempt_slot(min(
+                            cands, key=lambda j: (prio[tier_idx[j]],
+                                                  len(slot_out[j]), j)))
+            # refill empty slots: covers deferred admissions retrying as
+            # pressure drops, and slots freed by shed/preempt above (the
+            # post-decode refill below covers normal completions)
+            if queue and not pool_wait[0]:
+                for i in range(B):
+                    if slot_req[i] is None and i not in pending:
+                        admit(i)
             if pending:
                 # interleave admissions with decode: ≤ prefill_interleave
                 # chunks per iteration so a long admission never stalls the
@@ -1295,8 +1679,14 @@ class Server:
                 advance_prefill(scfg.prefill_interleave)
                 if not active.any():
                     continue     # nothing decoding yet — keep prefilling
+            if not active.any():
+                continue         # deferred/shed everything this pass
             if paged:
                 ensure_write_blocks()
+                if not active.any():
+                    continue     # exhaustion relief preempted every slot
+            self._fault("decode")   # armed decode faults are FATAL: they
+            #                         abort serve() and exercise reset()
             if ctl is not None:
                 audit = ctl.is_audit_step()
                 # between-step capacity-bucket switch: a host dict lookup
@@ -1395,10 +1785,27 @@ def throughput_report(requests: list[Request]) -> dict:
         # would report the max as p95 for every n <= 20)
         rank = math.ceil(round(q * len(vals), 9))
         return vals[min(len(vals) - 1, max(0, rank - 1))]
+    # overload outcomes (DESIGN.md §11): every request the scheduler
+    # touched ends "completed" or "shed" (with a reason); preemptions
+    # count park+requeue events — a preempted-then-completed request
+    # appears in both "completed" and "preempted"
+    n_shed = sum(1 for r in requests if r.outcome == "shed")
+    shed_reasons: dict = {}
+    for r in requests:
+        if r.outcome == "shed" and r.shed_reason:
+            k = f"shed_{r.shed_reason}"   # flat numeric keys: every report
+            shed_reasons[k] = shed_reasons.get(k, 0) + 1   # value is scalar
     # an empty/instant window reports an exact 0.0 rate — never NaN, never
     # the absurd toks/1e-9 spike the old clamp produced for zero-duration
     # (e.g. all-cache-hit or hand-stamped) queues
     return {"requests": len(requests), "tokens": toks,
+            "completed": sum(1 for r in requests
+                             if r.outcome == "completed"),
+            "shed": n_shed,
+            "shed_rate": float(n_shed / len(requests)) if requests else 0.0,
+            **shed_reasons,
+            "preempted": sum(1 for r in requests if r.preemptions > 0),
+            "preemptions": sum(r.preemptions for r in requests),
             "total_s": wall,
             "tok_per_s": float(toks / wall) if wall > 0.0 else 0.0,
             "mean_latency_s": float(np.mean(lats)) if lats else 0.0,

@@ -1,0 +1,431 @@
+"""Fault-tolerant serving under pressure (DESIGN.md §11).
+
+Chaos suite for the slot-refill scheduler's overload machinery, driven by
+the deterministic fault injector (runtime/faults.py):
+
+- the ISSUE acceptance scenario: a 2x-oversubscribed KV pool with a mixed
+  SLA-tier queue, preemption on — every request ends ``completed`` or
+  ``shed`` (zero uncaught errors), at least one preemption fires, and the
+  greedy tokens of every survivor are BITWISE an unpressured big-pool run;
+- forced exhaustion via ``FaultInjector.hold_blocks`` (hostile co-tenant);
+- deadline expiry for queued, resident, and mid-prefill requests, and
+  deadline-pressure preemption of strictly-lower tiers for the queue head;
+- injected mid-prefill slot death (monolithic and chunked) shedding just
+  the dying request;
+- injected decode faults aborting serve() -> ``Server.reset()`` -> a
+  fresh serve on the SAME server object is bitwise a fresh server's;
+- admission control: queue-depth shed and the pool-pressure gate;
+- elastic restart at the server level is covered in test_distributed.py
+  (controller checkpoint regrid remap);
+- the nightly ``-m chaos`` matrix: randomized seeds x pool sizes x fault
+  mixes, asserting the terminal-outcome / bitwise-survivor invariants
+  hold everywhere.
+
+Everything runs on the virtual clock — shed and preemption counts are
+pure functions of scheduling decisions, reproducible across hosts.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import PagedKVConfig
+from repro.models import lm
+from repro.runtime.faults import FaultInjector, InjectedFault
+from repro.runtime.kv_pool import KVPool, PoolExhausted
+from repro.runtime.server import (Request, Server, ServeConfig,
+                                  throughput_report)
+from test_paged_kv import CFG, make_requests, outs, params_for, sparse_cfg
+
+jax.config.update("jax_platform_name", "cpu")
+
+PLENS = (17, 21, 19, 23, 15, 22)
+SLAS = ("latency", "quality", "balanced", "quality", "balanced", "latency")
+
+
+def chaos_scfg(pool_blocks, **kw):
+    kw.setdefault("preempt", True)
+    kw.setdefault("default_deadline_s", 100.0)
+    kw.setdefault("prefill_interleave", 8)
+    return ServeConfig(batch=2, max_len=64,
+                       paged_kv=PagedKVConfig(block_size=8,
+                                              pool_blocks=pool_blocks),
+                       **kw)
+
+
+def fresh_requests(rng_seed=0, max_new=6, plens=PLENS, slas=SLAS):
+    rng = np.random.default_rng(rng_seed)
+    return make_requests(rng, list(plens), max_new=max_new,
+                         slas=list(slas[: len(plens)]))
+
+
+def clone(reqs):
+    return [dataclasses.replace(r) for r in reqs]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # masked, deliberately: its decode is exactly per-slot — every neuron
+    # computed, per-slot predicted masks applied — so greedy tokens are
+    # independent of slot composition and the pressured-vs-unpressured
+    # bitwise bar is well-defined.  Union-gather decode is composition-
+    # DEPENDENT by design (the batch union computes neighbors' neurons,
+    # whose true activations are nonzero), so under preemption its tokens
+    # can legitimately differ from an unpressured run without any
+    # corruption; the scheduler invariants themselves are strategy-blind.
+    return sparse_cfg("masked")
+
+
+@pytest.fixture(scope="module")
+def baseline(cfg):
+    """Unpressured big-pool reference tokens (pool auto-sized to fit)."""
+    srv = Server(lm, cfg, chaos_scfg(0, preempt=False,
+                                     default_deadline_s=0.0),
+                 params_for(cfg))
+    return outs(srv.serve(clone(fresh_requests())))
+
+
+def assert_terminal_and_bitwise(done, baseline, n_requests):
+    assert len(done) == n_requests
+    assert all(r.outcome in ("completed", "shed") for r in done)
+    assert all(r.shed_reason for r in done if r.outcome == "shed")
+    for r in done:
+        if r.outcome == "completed":
+            np.testing.assert_array_equal(
+                np.asarray(r.out), baseline[r.uid],
+                err_msg=f"uid={r.uid} diverged under pressure")
+
+
+class TestOverloadAcceptance:
+    """The ISSUE acceptance bar, tier-1."""
+
+    def test_2x_oversubscribed_pool_mixed_tiers(self, cfg, baseline):
+        # demand ~18 blocks (6 requests x ~3); grant 9 (7 allocatable)
+        srv = Server(lm, cfg, chaos_scfg(8), params_for(cfg))
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True))
+        done = srv.serve(clone(fresh_requests()))
+        assert_terminal_and_bitwise(done, baseline, len(PLENS))
+        rep = throughput_report(done)
+        assert rep["preemptions"] >= 1
+        assert rep["completed"] + rep["shed"] == len(PLENS)
+        assert rep["completed"] >= 1
+        srv.kv_pool.check_invariants()
+
+    def test_preempted_resume_adopts_parked_prefix(self, cfg):
+        """A parked victim's prompt blocks stay committed in the trie;
+        with headroom (deadline-pressure preemption, not exhaustion) its
+        resume re-admits them BY REFERENCE — prefill chunks skipped —
+        and still emits bitwise the uninterrupted run's tokens."""
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=0, prompt=rng.integers(0, CFG.vocab, 17),
+                        max_new=40, sla="latency"),
+                Request(uid=1, prompt=rng.integers(0, CFG.vocab, 15),
+                        max_new=40, sla="latency"),
+                Request(uid=2, prompt=rng.integers(0, CFG.vocab, 33),
+                        max_new=8, sla="quality", deadline_s=1.2)]
+        mk = lambda: Server(lm, cfg, chaos_scfg(24, prefill_chunk=8,
+                                                prefill_interleave=2),
+                            params_for(cfg))
+        ref = outs(mk().serve(clone([dataclasses.replace(r, deadline_s=0.0)
+                                     for r in reqs])))
+        srv = mk()
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True,
+                                        tick_s=0.02))
+        done = srv.serve(clone(reqs))
+        preempted = [r for r in done if r.preemptions > 0
+                     and r.outcome == "completed"]
+        assert preempted, "queue-head deadline pressure must park a victim"
+        assert srv.paged_stats()["prefill_chunks_skipped"] >= 1
+        for r in done:
+            if r.outcome == "completed":
+                np.testing.assert_array_equal(np.asarray(r.out), ref[r.uid])
+        srv.kv_pool.check_invariants()
+
+    def test_chunked_prefill_same_invariants(self, cfg, baseline):
+        srv = Server(lm, cfg, chaos_scfg(8, prefill_chunk=8,
+                                         prefill_interleave=2),
+                     params_for(cfg))
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True))
+        done = srv.serve(clone(fresh_requests()))
+        assert_terminal_and_bitwise(done, baseline, len(PLENS))
+        srv.kv_pool.check_invariants()
+
+    def test_legacy_exhaustion_still_raises_without_preempt(self, cfg):
+        srv = Server(lm, cfg, chaos_scfg(6, preempt=False), params_for(cfg))
+        with pytest.raises(PoolExhausted):
+            srv.serve(clone(fresh_requests()))
+
+
+class TestForcedExhaustion:
+    def test_hostile_block_holder(self, cfg, baseline):
+        """hold_blocks pins pool headroom through the public allocator —
+        the scheduler preempts/sheds around the squatter, and completes
+        everything once the blocks come back."""
+        srv = Server(lm, cfg, chaos_scfg(0), params_for(cfg))
+        fi = FaultInjector(seed=0, virtual_clock=True)
+        srv.attach_faults(fi)
+        total = srv.kv_pool.n_blocks - KVPool._RESERVED
+        assert fi.hold_blocks(srv.kv_pool, total - 7) == total - 7
+        done = srv.serve(clone(fresh_requests()))
+        assert_terminal_and_bitwise(done, baseline, len(PLENS))
+        assert fi.release_blocks() == total - 7
+        srv.kv_pool.check_invariants()
+        # pressure relieved: the same queue now completes in full
+        done2 = srv.serve(clone(fresh_requests()))
+        assert all(r.outcome == "completed" for r in done2)
+        assert_terminal_and_bitwise(done2, baseline, len(PLENS))
+
+    def test_total_squat_sheds_everything(self, cfg):
+        srv = Server(lm, cfg, chaos_scfg(0), params_for(cfg))
+        fi = FaultInjector(seed=0, virtual_clock=True)
+        srv.attach_faults(fi)
+        fi.hold_blocks(srv.kv_pool, srv.kv_pool.n_blocks)
+        done = srv.serve(clone(fresh_requests()))
+        assert all(r.outcome == "shed" and r.shed_reason == "pool"
+                   for r in done)
+        fi.release_blocks()
+        srv.kv_pool.check_invariants()
+
+
+class TestDeadlines:
+    def test_tight_deadlines_shed_with_partial_output(self, cfg, baseline):
+        reqs = [dataclasses.replace(r,
+                                    deadline_s=(0.02 if r.uid % 2 else 0.0))
+                for r in fresh_requests()]
+        srv = Server(lm, cfg, chaos_scfg(0), params_for(cfg))
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True,
+                                        tick_s=0.05))
+        done = srv.serve(reqs)
+        shed = {r.uid for r in done if r.outcome == "shed"}
+        assert shed and all(uid % 2 for uid in shed)
+        for r in done:
+            if r.outcome == "shed":
+                assert r.shed_reason == "deadline" and r.t_end == 0.0
+            else:
+                np.testing.assert_array_equal(np.asarray(r.out),
+                                              baseline[r.uid])
+
+    def test_default_deadline_applies_to_undeadlined(self, cfg):
+        srv = Server(lm, cfg, chaos_scfg(0, default_deadline_s=0.01),
+                     params_for(cfg))
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True,
+                                        tick_s=1.0))
+        done = srv.serve(clone(fresh_requests()))
+        assert any(r.outcome == "shed" and r.shed_reason == "deadline"
+                   for r in done)
+        assert all(r.deadline_s == 0.01 for r in done)
+
+    def test_deadline_pressure_preempts_lower_tier(self, cfg):
+        """A quality request burning half its deadline in the queue parks
+        a resident latency-tier victim, admits into the freed slot, and
+        completes; the victim resumes and still matches the unpressured
+        run bitwise."""
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=0, prompt=rng.integers(0, CFG.vocab, 17),
+                        max_new=40, sla="latency"),
+                Request(uid=1, prompt=rng.integers(0, CFG.vocab, 15),
+                        max_new=40, sla="latency"),
+                Request(uid=2, prompt=rng.integers(0, CFG.vocab, 23),
+                        max_new=12, sla="quality", deadline_s=1.2)]
+        mk = lambda: Server(lm, cfg, chaos_scfg(0), params_for(cfg))
+        ref = outs(mk().serve(clone([dataclasses.replace(r, deadline_s=0.0)
+                                     for r in reqs])))
+        srv = mk()
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True,
+                                        tick_s=0.02))
+        done = srv.serve(clone(reqs))
+        assert srv.preempt_count >= 1
+        by_uid = {r.uid: r for r in done}
+        assert by_uid[2].outcome == "completed"
+        victims = [r for r in done if r.preemptions > 0]
+        assert victims and all(r.sla == "latency" for r in victims)
+        for r in done:
+            assert r.outcome == "completed"
+            np.testing.assert_array_equal(np.asarray(r.out), ref[r.uid])
+        srv.kv_pool.check_invariants()
+
+
+class TestInjectedFaults:
+    def test_prefill_fault_sheds_only_target(self, cfg, baseline):
+        srv = Server(lm, cfg, chaos_scfg(0), params_for(cfg))
+        fi = FaultInjector(seed=0, virtual_clock=True)
+        srv.attach_faults(fi)
+        fi.arm("prefill", uid=2, times=1)
+        done = srv.serve(clone(fresh_requests()))
+        by_uid = {r.uid: r for r in done}
+        assert by_uid[2].outcome == "shed"
+        assert by_uid[2].shed_reason == "fault"
+        for uid, r in by_uid.items():
+            if uid != 2:
+                assert r.outcome == "completed"
+                np.testing.assert_array_equal(np.asarray(r.out),
+                                              baseline[uid])
+        assert fi.fired["prefill"] == 1
+        srv.kv_pool.check_invariants()
+
+    def test_chunked_prefill_fault_drops_references(self, cfg, baseline):
+        srv = Server(lm, cfg, chaos_scfg(0, prefill_chunk=8,
+                                         prefill_interleave=2),
+                     params_for(cfg))
+        fi = FaultInjector(seed=0, virtual_clock=True)
+        srv.attach_faults(fi)
+        fi.arm("prefill", uid=3, after=1, times=1)   # dies mid-prompt
+        done = srv.serve(clone(fresh_requests()))
+        by_uid = {r.uid: r for r in done}
+        assert by_uid[3].outcome == "shed"
+        assert by_uid[3].shed_reason == "fault"
+        survivors = {u: np.asarray(r.out) for u, r in by_uid.items()
+                     if r.outcome == "completed"}
+        for uid, toks in survivors.items():
+            np.testing.assert_array_equal(toks, baseline[uid])
+        srv.kv_pool.check_invariants()     # no leaked scratch references
+
+    def test_decode_fault_aborts_then_reset_serves_bitwise(self, cfg,
+                                                           baseline):
+        """Satellite (b): serve-abort -> reset() -> the SAME server object
+        serves a fresh queue bitwise-identically to a fresh server."""
+        srv = Server(lm, cfg, chaos_scfg(0), params_for(cfg))
+        fi = FaultInjector(seed=0, virtual_clock=True)
+        srv.attach_faults(fi)
+        fi.arm("decode", after=2, times=1)
+        with pytest.raises(InjectedFault):
+            srv.serve(clone(fresh_requests()))
+        srv.faults = None                  # fault source detached
+        got = outs(srv.serve(clone(fresh_requests())))
+        assert set(got) == set(baseline)
+        for uid in got:
+            np.testing.assert_array_equal(got[uid], baseline[uid])
+        srv.kv_pool.check_invariants()
+
+    def test_reset_restores_paged_and_counter_state(self, cfg):
+        srv = Server(lm, cfg, chaos_scfg(9), params_for(cfg))
+        fi = FaultInjector(seed=0, virtual_clock=True)
+        srv.attach_faults(fi)
+        fi.arm("decode", after=1, times=1)
+        with pytest.raises(InjectedFault):
+            srv.serve(clone(fresh_requests()))
+        # reset() ran on the error path: pool rebuilt, counters zeroed
+        assert srv.kv_pool.snapshot()["live_refs"] == 0
+        assert srv.preempt_count == 0 and srv.shed_count == 0
+        assert srv.admissions_deferred == 0
+        srv.kv_pool.check_invariants()
+
+
+class TestAdmissionControl:
+    def test_queue_depth_shed(self, cfg, baseline):
+        srv = Server(lm, cfg, chaos_scfg(0, max_queue_depth=3),
+                     params_for(cfg))
+        done = srv.serve(clone(fresh_requests()))
+        by_uid = {r.uid: r for r in done}
+        for uid in range(3):
+            assert by_uid[uid].outcome == "completed"
+            np.testing.assert_array_equal(np.asarray(by_uid[uid].out),
+                                          baseline[uid])
+        for uid in range(3, len(PLENS)):
+            assert by_uid[uid].outcome == "shed"
+            assert by_uid[uid].shed_reason == "queue_depth"
+            assert len(by_uid[uid].out) == 0
+        rep = throughput_report(done)
+        assert rep["shed_queue_depth"] == len(PLENS) - 3
+
+    def test_pressure_gate_defers_admissions(self, cfg, baseline):
+        srv = Server(lm, cfg, chaos_scfg(9, pressure_gate=0.4),
+                     params_for(cfg))
+        srv.attach_faults(FaultInjector(seed=0, virtual_clock=True))
+        done = srv.serve(clone(fresh_requests()))
+        assert srv.admissions_deferred >= 1
+        assert_terminal_and_bitwise(done, baseline, len(PLENS))
+
+    def test_invalid_overload_config_rejected(self, cfg):
+        with pytest.raises(ValueError):
+            Server(lm, cfg, ServeConfig(batch=2, max_len=64, preempt=True),
+                   params_for(cfg))           # preempt needs paged_kv
+        for bad in ({"pressure_gate": 0.0}, {"pressure_gate": 1.5},
+                    {"max_queue_depth": -1}, {"default_deadline_s": -1.0},
+                    {"max_preemptions": 0}):
+            with pytest.raises(ValueError):
+                Server(lm, cfg, chaos_scfg(0, **bad), params_for(cfg))
+
+
+class TestFaultInjectorUnit:
+    def test_virtual_clock_starts_past_zero_and_ticks(self):
+        fi = FaultInjector(virtual_clock=True, tick_s=0.25)
+        assert fi.now() == 1.0             # 0.0 means "never stamped"
+        fi.tick()
+        fi.advance(0.5)
+        assert fi.now() == pytest.approx(1.75)
+
+    def test_arm_after_times_and_uid_filtering(self):
+        fi = FaultInjector()
+        fi.arm("prefill", uid=7, after=1, times=2)
+        fi.check("prefill", uid=3)         # wrong uid: not even counted
+        fi.check("prefill", uid=7)         # eligible pass 1: skipped
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                fi.check("prefill", uid=7)
+        fi.check("prefill", uid=7)         # exhausted
+        assert fi.fired["prefill"] == 2
+
+    def test_probabilistic_arm_is_seed_deterministic(self):
+        def run(seed):
+            fi = FaultInjector(seed=seed)
+            fi.arm("decode", times=-1, prob=0.3)
+            fired = []
+            for i in range(40):
+                try:
+                    fi.check("decode")
+                    fired.append(0)
+                except InjectedFault:
+                    fired.append(1)
+            return fired
+        a, b = run(5), run(5)
+        assert a == b and 0 < sum(a) < 40
+        assert run(6) != a
+
+    def test_hold_and_release_roundtrip(self):
+        p = KVPool(8, 4)
+        fi = FaultInjector()
+        assert fi.hold_blocks(p, 99) == 6  # clamped at capacity
+        assert p.pressure() == 1.0
+        assert fi.release_blocks(2) == 2
+        assert fi.release_blocks() == 4
+        assert p.pressure() == 0.0
+        p.check_invariants()
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+class TestChaosMatrix:
+    """Nightly sweep: randomized overload x fault mixes.  The invariants —
+    terminal outcomes everywhere, zero uncaught errors, bitwise survivors
+    — must hold for EVERY cell."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    @pytest.mark.parametrize("pool_blocks", [6, 8, 10, 0])
+    def test_randomized_overload(self, cfg, baseline, seed, pool_blocks):
+        rng = np.random.default_rng(1000 + seed)
+        srv = Server(lm, cfg,
+                     chaos_scfg(pool_blocks,
+                                prefill_chunk=int(rng.choice([0, 8])),
+                                prefill_interleave=2,
+                                max_queue_depth=int(rng.choice([0, 5])),
+                                pressure_gate=float(rng.choice([1.0, 0.8]))),
+                     params_for(cfg))
+        fi = FaultInjector(seed=seed, virtual_clock=True,
+                           tick_s=float(rng.choice([0.01, 0.05])))
+        srv.attach_faults(fi)
+        if rng.random() < 0.5:
+            fi.arm("prefill", times=1, after=int(rng.integers(0, 3)))
+        held = 0
+        if pool_blocks == 0 and rng.random() < 0.5:
+            held = fi.hold_blocks(srv.kv_pool, int(rng.integers(2, 8)))
+        reqs = fresh_requests(rng_seed=0)
+        if rng.random() < 0.5:
+            for r in reqs:
+                r.deadline_s = float(rng.choice([0.0, 2.0]))
+        done = srv.serve(clone(reqs))
+        assert_terminal_and_bitwise(done, baseline, len(PLENS))
+        if held:
+            fi.release_blocks()
+        srv.kv_pool.check_invariants()

@@ -26,7 +26,8 @@ from repro.launch.mesh import make_mesh
 from repro.models import lm
 from repro.runtime import distributed as DD
 from repro.runtime.controller import (AlphaController, DistributedController,
-                                      restore_controller, save_controller)
+                                      remap_shard_ema, restore_controller,
+                                      save_controller)
 from repro.runtime.server import Request, Server, ServeConfig
 
 jax.config.update("jax_platform_name", "cpu")
@@ -658,42 +659,100 @@ class TestControllerPersistence:
                               AlphaSchedule(), 2)
         assert not restore_controller(ctl, CheckpointManager(str(tmp_path)))
 
-    def test_topology_mismatch_rejected(self, tmp_path):
+    def test_topology_regrid_remaps_shard_emas(self, tmp_path):
+        """Elastic restart (DESIGN.md §11): a checkpoint from a different
+        model-shard count is ABSORBED — per-(layer, shard) EMAs are
+        remapped by tile-overlap-weighted average (mean-preserving), not
+        rejected — with a warning recording the regrid."""
         from repro.checkpoint.manager import CheckpointManager
         from repro.core.predictor import AlphaSchedule
         cc = ControllerConfig(enabled=True)
         ctl = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
                                     MS)
+        ctl.shard_density_ema = np.tile(
+            np.linspace(0.1, 0.4, MS, dtype=np.float32), (2, 1))
+        ctl.shard_union_ema = np.tile(
+            np.linspace(0.5, 0.8, MS, dtype=np.float32), (2, 1))
+        ctl._shard_steps = 7
         mgr = CheckpointManager(str(tmp_path))
         save_controller(ctl, mgr)
         ctl2 = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
                                      2)
-        with pytest.raises(ValueError):
-            restore_controller(ctl2, mgr)
+        with pytest.warns(UserWarning, match="elastic restart"):
+            assert restore_controller(ctl2, mgr)
+        assert ctl2.stats_regrids == 1
+        assert ctl2._shard_steps == 7
+        assert ctl2.shard_density_ema.shape == (2, 2)
+        # MS -> 2 halves the tiles: each new shard averages adjacent pairs
+        np.testing.assert_allclose(
+            ctl2.shard_density_ema,
+            ctl.shard_density_ema.reshape(2, 2, MS // 2).mean(-1),
+            rtol=1e-6)
+        # mean-preserving: skew metrics and capacity hints resume honestly
+        np.testing.assert_allclose(ctl2.shard_density_ema.mean(-1),
+                                   ctl.shard_density_ema.mean(-1), rtol=1e-6)
+        np.testing.assert_allclose(ctl2.shard_union_ema.mean(-1),
+                                   ctl.shard_union_ema.mean(-1), rtol=1e-6)
+        # the inner (grid-independent) state transferred untouched
+        np.testing.assert_array_equal(ctl2.alphas(), ctl.alphas())
 
-    def test_2d_topology_mismatch_rejected(self, tmp_path):
-        """Satellite: a checkpoint from one (data, model) grid is rejected
-        on any DIFFERENT grid — wrong model-shard count OR wrong
-        data-shard count, even with the model axis matching."""
+    def test_2d_topology_regrid_remaps_and_converges(self, tmp_path):
+        """Elastic restart across (data, model) grids: every regrid of a
+        2xMS checkpoint restores (warning + remap), a matching grid
+        restores silently, and controllers resumed on DIFFERENT grids
+        adapt to the same alpha targets when fed the same telemetry —
+        the inner update law is grid-independent (ISSUE acceptance)."""
         from repro.checkpoint.manager import CheckpointManager
         from repro.core.predictor import AlphaSchedule
-        cc = ControllerConfig(enabled=True)
+        cc = ControllerConfig(enabled=True, target_density=0.3)
         ctl = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
                                     MS, n_data_shards=2)
+        ctl.shard_density_ema = np.tile(
+            np.linspace(0.1, 0.4, MS, dtype=np.float32), (2, 1))
         mgr = CheckpointManager(str(tmp_path))
         save_controller(ctl, mgr)
-        for ms, ds, pat in ((MS, 1, "topology"), (MS, 4, "topology"),
-                            (2, 2, "mismatch")):
-            # a wrong model-shard count fails the tree-shape check first;
-            # a wrong data-shard count reaches the explicit topology check
-            bad = DistributedController(
+        resumed = []
+        for ms, ds in ((MS, 1), (MS, 4), (2, 2), (1, 4)):
+            new = DistributedController(
                 AlphaController(cc, AlphaSchedule(), 2), ms,
                 n_data_shards=ds)
-            with pytest.raises(ValueError, match=pat):
-                restore_controller(bad, mgr)
-        ok = DistributedController(AlphaController(cc, AlphaSchedule(), 2),
-                                   MS, n_data_shards=2)
-        assert restore_controller(ok, mgr)
+            with pytest.warns(UserWarning, match="elastic restart"):
+                assert restore_controller(new, mgr)
+            assert new.stats_regrids == 1
+            assert new.shard_density_ema.shape == (2, ms)
+            np.testing.assert_allclose(
+                new.shard_density_ema.mean(-1),
+                ctl.shard_density_ema.mean(-1), rtol=1e-6)
+            resumed.append(new)
+        # the SAME grid restores silently, without a regrid
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ok = DistributedController(
+                AlphaController(cc, AlphaSchedule(), 2), MS,
+                n_data_shards=2)
+            assert restore_controller(ok, mgr)
+        assert ok.stats_regrids == 0
+        # convergence: identical telemetry -> identical adapted alphas
+        stats = {k: np.full((2,), 0.45, np.float32)
+                 for k in MLP_STAT_KEYS}
+        for _ in range(16):
+            for c in resumed:
+                c.observe(stats)
+        for c in resumed[1:]:
+            np.testing.assert_array_equal(c.alphas(), resumed[0].alphas())
+
+    def test_remap_shard_ema_identity_and_uneven(self):
+        ema = np.arange(8, dtype=np.float32).reshape(2, 4)
+        same = remap_shard_ema(ema, 4)
+        np.testing.assert_array_equal(same, ema)
+        assert same is not ema          # defensive copy
+        up = remap_shard_ema(ema, 8)    # refine: each tile splits in two
+        np.testing.assert_allclose(up, np.repeat(ema, 2, axis=1))
+        down = remap_shard_ema(ema, 1)  # collapse: global mean
+        np.testing.assert_allclose(down, ema.mean(-1, keepdims=True))
+        # uneven 4 -> 3: rows of the overlap matrix still sum to 1
+        odd = remap_shard_ema(ema, 3)
+        np.testing.assert_allclose(odd.mean(-1), ema.mean(-1), rtol=1e-6)
 
     @needs_mesh8
     def test_2d_mesh_server_restart_resumes_per_shard_state(self, tmp_path):

@@ -47,7 +47,7 @@ from repro.kernels import paged_attn as PA
 from repro.launch.mesh import make_mesh
 from repro.layers import attention as A
 from repro.models import lm
-from repro.runtime.kv_pool import KVPool
+from repro.runtime.kv_pool import KVPool, PoolExhausted
 from repro.runtime.server import (Request, Server, ServeConfig,
                                   throughput_report)
 from repro.sharding import sparse as SHS
@@ -268,6 +268,164 @@ class TestKVPool:
         assert p.refcount[blocks["s2"]] == 0
         p.drop_session("s1")
         p.drop_session("s2")
+        p.check_invariants()
+
+
+class TestKVPoolIdHardening:
+    """Satellite: every refcount entry point validates its block id —
+    reserved (NULL/TRASH), negative, and out-of-range ids raise instead of
+    silently corrupting pool state."""
+
+    @pytest.mark.parametrize("bad", [KVPool.NULL, KVPool.TRASH, -1, -7])
+    def test_reserved_and_negative_ids_rejected(self, bad):
+        p = KVPool(8, 4)
+        a = p.alloc()                    # a live block: pool is in use
+        for fn in (p.incref, p.decref, p.release):
+            with pytest.raises(ValueError):
+                fn(bad)
+        with pytest.raises(ValueError):
+            p.ensure_writable(bad)
+        p.decref(a)
+        p.check_invariants()
+
+    @pytest.mark.parametrize("bad", [8, 9, 10**9])
+    def test_out_of_range_ids_rejected(self, bad):
+        p = KVPool(8, 4)
+        for fn in (p.incref, p.decref, p.release):
+            with pytest.raises(ValueError):
+                fn(bad)
+        with pytest.raises(ValueError):
+            p.ensure_writable(bad)
+        p.check_invariants()
+
+    def test_numpy_integer_ids_accepted(self):
+        # block tables are int32 numpy rows: ids arrive as np scalars
+        p = KVPool(8, 4)
+        a = p.alloc()
+        p.incref(np.int64(a))
+        p.decref(np.int32(a))
+        p.decref(a)
+        p.check_invariants()
+
+    def test_double_free_still_raises(self):
+        p = KVPool(8, 4)
+        a = p.alloc()
+        p.decref(a)                      # uncommitted: frees
+        with pytest.raises(RuntimeError):
+            p.decref(a)                  # refcount 0: double free
+
+
+class TestKVPoolProperties:
+    """Satellite: allocator-safety properties over randomized fragmented
+    pools — real hypothesis when installed, the seeded stdlib shim in
+    tests/_hypothesis_shim.py otherwise."""
+
+    @given(st.integers(0, 2**32 - 1), st.integers(5, 24),
+           st.sampled_from([4, 8]))
+    @settings(max_examples=10, deadline=None)
+    def test_referenced_blocks_never_reclaimed(self, seed, n_blocks, bs):
+        """Whatever interleaving of alloc / incref / decref / commit /
+        ensure_writable / store_session runs, ``alloc`` never hands out a
+        block the caller still holds references to — even when it has to
+        evict parked blocks or whole sessions to satisfy the request."""
+        rng = np.random.default_rng(seed)
+        p = KVPool(n_blocks, bs, max_sessions=3)
+        held: dict = {}                  # bid -> refs WE hold
+        committed: set = set()           # a block commits at most once
+
+        def take(b, n=1):
+            held[b] = held.get(b, 0) + n
+            if held[b] == 0:
+                del held[b]
+
+        for i in range(64):
+            op = int(rng.integers(0, 7))
+            bids = list(held)
+            fresh = [b for b in bids if b not in committed]
+            if op <= 1:                              # alloc (weighted 2x)
+                try:
+                    b = p.alloc()
+                except PoolExhausted:
+                    continue
+                assert KVPool._RESERVED <= b < n_blocks
+                assert held.get(b, 0) == 0, \
+                    f"alloc returned live block {b} (held {held})"
+                committed.discard(b)     # reclaimed: contents invalidated
+                take(b)
+            elif op == 2 and bids:                   # incref
+                b = int(rng.choice(bids))
+                p.incref(b)
+                take(b)
+            elif op == 3 and bids:                   # decref
+                b = int(rng.choice(bids))
+                p.decref(b)
+                take(b, -1)
+            elif op == 4 and fresh:                  # commit (random salt)
+                b = int(rng.choice(fresh))
+                salt = bytes([int(rng.integers(0, 4))])
+                toks = rng.integers(0, 16, size=bs)
+                [c] = p.commit_chain(p.block_hashes(salt, toks), [b])
+                committed.add(c)
+                if c != b:               # dedup moved our ref
+                    take(b, -1)
+                    take(c)
+            elif op == 5 and bids:                   # session adopts refs
+                b = int(rng.choice(bids))
+                p.store_session(f"s{int(rng.integers(0, 4))}", [b],
+                                rng.integers(0, 16, size=bs), "balanced")
+                take(b, -1)
+            elif op == 6 and bids:                   # copy-on-write fork
+                b = int(rng.choice(bids))
+                try:
+                    wid, _src = p.ensure_writable(b)
+                except PoolExhausted:
+                    continue
+                if wid != b:             # forked: our ref moved to the copy
+                    take(b, -1)
+                    take(wid)
+        for b, n in held.items():
+            assert p.refcount[b] >= n
+        p.check_invariants()
+
+    @given(st.integers(0, 2**32 - 1), st.integers(5, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_pressure_monotone_under_consumption(self, seed, n_blocks):
+        """``pressure()`` stays in [0, 1], never decreases across allocs
+        (parked-block eviction included), never increases across releases,
+        and reads exactly 1.0 when ``alloc`` raises ``PoolExhausted`` —
+        the admission gate's contract (DESIGN.md §11)."""
+        rng = np.random.default_rng(seed)
+        p = KVPool(n_blocks, 4)
+        assert p.pressure() == 0.0
+        held = []
+        # fragment: park some committed chains, hold live refs to others
+        for i in range(int(rng.integers(0, n_blocks))):
+            try:
+                b = p.alloc()
+            except PoolExhausted:
+                break
+            if rng.random() < 0.5:
+                [c] = p.commit_chain(
+                    p.block_hashes(bytes([i]), np.arange(4)), [b])
+                p.decref(c)              # parked: still headroom
+            else:
+                held.append(b)
+        last = p.pressure()
+        assert 0.0 <= last <= 1.0
+        while True:                      # consume to exhaustion
+            try:
+                held.append(p.alloc())
+            except PoolExhausted:
+                assert p.pressure() == 1.0
+                break
+            cur = p.pressure()
+            assert cur >= last - 1e-12
+            last = cur
+        for b in held:                   # release: monotone back down
+            p.decref(b)
+            cur = p.pressure()
+            assert cur <= last + 1e-12
+            last = cur
         p.check_invariants()
 
 
