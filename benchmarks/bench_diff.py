@@ -81,6 +81,53 @@ def compare(old, new, rel_tol: float = 0.5, label: str = "bench_diff",
     return fails
 
 
+def summarize(report: dict, keys: tuple) -> dict:
+    """Pull a flat one-line summary out of a bench report: each entry of
+    ``keys`` is a dotted path (``"chunked.tok_per_s"``); missing paths are
+    dropped rather than raising, so history lines survive report-shape
+    evolution."""
+    out = {}
+    for path in keys:
+        node = report
+        for part in path.split("."):
+            if not isinstance(node, dict) or part not in node:
+                node = None
+                break
+            node = node[part]
+        if isinstance(node, (int, float, str, bool)):
+            out[path] = node
+    return out
+
+
+def append_history(path: str, label: str, summary: dict) -> None:
+    """Run-over-run trajectory sink (the nightly ``--append-history``
+    flag): append ONE JSON line — git sha + label + the summary metrics —
+    so perf drift is visible across runs, not just vs the committed seed.
+    The line shape matches the metrics JSONL schema (numeric ``ts``,
+    string ``kind``), so ``runtime.metrics.validate_jsonl`` gates it too."""
+    import json
+    import os
+    import subprocess
+    import time
+
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            ).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            sha = ""
+    rec = {"ts": time.time(), "kind": "bench_history", "label": label,
+           "sha": sha or "unknown"}
+    rec.update(summary)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"{label},history,appended to {path} (sha={rec['sha']})")
+
+
 def check_against(path: str, report: dict, rel_tol: float,
                   label: str) -> int:
     """Load ``path`` and compare; returns the exit status for main().

@@ -110,6 +110,9 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=0)
     ap.add_argument("--k", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--append-history", default="", metavar="PATH",
+                    help="append a one-line run summary (key metrics + "
+                         "git sha) to this JSONL trajectory file")
     args = ap.parse_args()
 
     d = args.d or (512 if args.quick else 1024)
@@ -122,6 +125,13 @@ def main() -> None:
         from benchmarks.bench_diff import check_against
         status = check_against(args.against, report, args.tolerance,
                                "bench_kernels_diff")
+    if args.append_history:
+        from benchmarks.bench_diff import append_history, summarize
+        rows = {f"cap_{row['capacity_frac']:g}.pallas_us":
+                row["wall_us"]["pallas_interpret"]
+                for row in report["buckets"]}
+        rows["backend"] = report.get("backend", "")
+        append_history(args.append_history, "bench_kernels", rows)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     for row in report["buckets"]:

@@ -3,12 +3,22 @@ per-shard capacity buckets and write BENCH_mesh2d.json for the nightly CI
 artifact (DESIGN.md §8).
 
     PYTHONPATH=src python -m benchmarks.bench_mesh --out BENCH_mesh2d.json
+
+``--against`` diffs a previous run (the nightly compares against the
+committed seed) through ``benchmarks.bench_diff``: structural fields —
+grid, mode, executable-ladder counts, bucket tuples, the controller's
+density/occupancy/skew numbers (bitwise-deterministic: tokens and
+telemetry are placement-invariant, pinned by tests/test_mesh_properties)
+— must match exactly; ``tok_per_s`` and other ``_s``-suffixed leaves
+compare with a relative tolerance.  ``--append-history`` appends a
+one-line summary (+ git sha) per run for run-over-run drift tracking.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 
 
 def main() -> None:
@@ -18,6 +28,16 @@ def main() -> None:
                     help="data x model study grid (emulated when the host "
                          "platform has fewer devices)")
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--against", default="",
+                    help="previous BENCH_mesh2d.json to diff against: "
+                         "structural fields exact, timing fields within "
+                         "--tolerance, exit 1 past the threshold")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="relative timing drift that fails the diff "
+                         "(3.0 = 300%%; CI runners vs the seed host)")
+    ap.add_argument("--append-history", default="", metavar="PATH",
+                    help="append a one-line run summary (key metrics + "
+                         "git sha) to this JSONL trajectory file")
     args = ap.parse_args()
 
     ds, ms = (int(v) for v in args.grid.split("x"))
@@ -34,9 +54,21 @@ def main() -> None:
         max_new=args.max_new, shape=(ds, ms), return_json=True)
     for row in rows:
         print(row)
+    status = 0
+    if args.against:
+        from benchmarks.bench_diff import check_against
+        status = check_against(args.against, payload, args.tolerance,
+                               "bench_mesh_diff")
+    if args.append_history:
+        from benchmarks.bench_diff import append_history, summarize
+        append_history(args.append_history, "bench_mesh2d", summarize(
+            payload, ("mode", "devices", "tok_per_s",
+                      "mean_realized_density", "executables",
+                      "shard_skew.max_skew")))
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {args.out}")
+    sys.exit(status)
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ The hard invariants are still asserted in tests/test_prefill_chunked.py.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -48,18 +49,12 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.base import ModelConfig, PagedKVConfig
+from repro.configs.base import MetricsConfig, ModelConfig, PagedKVConfig
 from repro.models import lm
 from repro.runtime.faults import FaultInjector
+from repro.runtime.metrics import nearest_rank_pct as _pct
 from repro.runtime.server import Request, Server, ServeConfig, \
     throughput_report
-
-
-def _pct(vals: list, q: float) -> float:
-    if not vals:
-        return 0.0
-    vals = sorted(vals)
-    return vals[min(len(vals) - 1, max(0, int(np.ceil(q * len(vals))) - 1))]
 
 
 def _requests(n: int, max_new: int, vocab: int, seed: int = 0):
@@ -71,9 +66,19 @@ def _requests(n: int, max_new: int, vocab: int, seed: int = 0):
                     max_new=max_new) for i in range(n)]
 
 
-def _serve(cfg, scfg, n_req, max_new):
+def _serve(cfg, scfg, n_req, max_new, mcfg=None):
+    """One warmed serve; ``mcfg`` enables the metrics hub on the server
+    and rides its histogram/watchdog snapshot along in the result (the
+    hub is closed afterwards so its process-wide retrace watchdog never
+    counts a LATER server's compiles)."""
+    if mcfg is not None:
+        scfg = dataclasses.replace(scfg, metrics=mcfg)
     srv = Server(lm, cfg, scfg, lm.init_lm(jax.random.PRNGKey(0), cfg))
-    srv.serve(_requests(2, max_new, cfg.vocab, seed=99))  # warmup traces
+    # warmup with more requests than batch slots so the slot-REFILL path
+    # traces too — the watchdog arms after this serve, and the measured
+    # chunked serve must then be retrace-free (the monolithic side still
+    # retraces per new prompt length: that's the storm being measured)
+    srv.serve(_requests(scfg.batch + 2, max_new, cfg.vocab, seed=99))
     reqs = _requests(n_req, max_new, cfg.vocab)
     t0 = time.perf_counter()
     done = srv.serve(reqs)
@@ -81,7 +86,7 @@ def _serve(cfg, scfg, n_req, max_new):
     rep = throughput_report(done)
     itls = [(r.latency_s - r.ttft_s) / max(1, len(r.out) - 1)
             for r in done if r.ttft_s > 0.0 and len(r.out) > 1]
-    return {
+    out = {
         "wall_s": wall,
         "tok_per_s": rep["tokens"] / max(wall, 1e-9),
         "p50_ttft_s": rep["p50_ttft_s"],
@@ -91,9 +96,24 @@ def _serve(cfg, scfg, n_req, max_new):
         "p95_queue_wait_s": rep["p95_queue_wait_s"],
         "chunk_traces": {str(k): v for k, v in srv._prefill_traces.items()},
     }
+    if mcfg is not None:
+        hub = srv.metrics
+        out["metrics"] = {
+            # warmup serve arms the watchdog, so this counts traces the
+            # SECOND (measured) serve performed: 0 for the chunked path,
+            # one per new prompt length for monolithic (the retrace storm
+            # the chunked executable exists to kill)
+            "retraces_post_warmup": hub.watchdog.retraces_post_warmup,
+            "decode_step_s": {"p50": hub.percentile("decode_step_s", 0.5),
+                              "p95": hub.percentile("decode_step_s", 0.95),
+                              "mean": hub.hist_mean("decode_step_s")},
+            "events": len(hub.events()),
+        }
+        hub.close()
+    return out
 
 
-def paged_kv_study(cfg, quick: bool) -> dict:
+def paged_kv_study(cfg, quick: bool, mcfg=None) -> dict:
     """Multi-turn chat over the paged KV pool vs dense re-prefill
     (DESIGN.md §10).
 
@@ -121,6 +141,8 @@ def paged_kv_study(cfg, quick: bool) -> dict:
             batch=batch, max_len=max_len, prefill_chunk=pc,
             prefill_interleave=2,
             paged_kv=PagedKVConfig(block_size=bs) if paged else None)
+        if paged and mcfg is not None:   # the CI smoke's JSONL schema gate
+            scfg = dataclasses.replace(scfg, metrics=mcfg)
         return Server(lm, cfg, scfg, params)
 
     turn1 = [Request(uid=i, prompt=np.concatenate(
@@ -163,6 +185,11 @@ def paged_kv_study(cfg, quick: bool) -> dict:
             for k in ("reuse_hits", "reused_tokens", "dedup_blocks",
                       "cow_forks", "committed_blocks"):
                 out[k] = stats.get(k, 0)
+            if mcfg is not None:
+                out["kv_pool_pressure_gauge"] = srv.metrics.gauge_value(
+                    "kv_pool_pressure")
+                srv.metrics.close()   # don't count the dense server's
+                # compiles against this hub's armed watchdog
     return out
 
 
@@ -182,6 +209,7 @@ def overload_study(cfg, quick: bool) -> dict:
     """
     n_req = 6 if quick else 8
     batch, max_len, bs, max_new = 4, 64, 8, 8
+    mcfg = MetricsConfig(enabled=True)
     rng = np.random.default_rng(7)
     plens = [int(p) for p in rng.integers(12, 40, size=n_req)]
     prompts = [rng.integers(0, cfg.vocab, size=p) for p in plens]
@@ -199,18 +227,19 @@ def overload_study(cfg, quick: bool) -> dict:
                         deadline_s=deadlines[i] if with_deadlines else 0.0)
                 for i in range(n_req)]
 
-    def mk_server(pool_blocks):
+    def mk_server(pool_blocks, metrics=None):
         scfg = ServeConfig(
             batch=batch, max_len=max_len,
             paged_kv=PagedKVConfig(block_size=bs, pool_blocks=pool_blocks),
-            preempt=True, default_deadline_s=100.0)
+            preempt=True, default_deadline_s=100.0,
+            metrics=metrics or MetricsConfig())
         return Server(lm, cfg, scfg, params)
 
     ref_srv = mk_server(demand + 4 * batch)    # headroom: never pressured
     ref = {r.uid: np.asarray(r.out)
            for r in ref_srv.serve(mk_reqs(with_deadlines=False))}
 
-    srv = mk_server(pool)
+    srv = mk_server(pool, metrics=mcfg)
     srv.attach_faults(FaultInjector(seed=0, virtual_clock=True,
                                     tick_s=0.05))
     done = srv.serve(mk_reqs(with_deadlines=True))
@@ -234,6 +263,11 @@ def overload_study(cfg, quick: bool) -> dict:
     for k, v in rep.items():
         if k.startswith("shed_") and k != "shed_rate":
             out[k] = v
+    # the hub ran the whole pressured serve on the virtual clock: its
+    # outcome counters (shed reasons, preemptions per tier, pool eviction/
+    # COW totals) are exact and diff structurally in the nightly gate
+    out["metrics_counters"] = dict(srv.metrics.snapshot()["counters"])
+    srv.metrics.close()
     return out
 
 
@@ -254,6 +288,16 @@ def main() -> None:
                     help="run only the paged-KV multi-turn study and gate "
                          "its invariants (>= 90%% turn-2 chunks skipped, "
                          "sessions retained > slots) — the CI smoke")
+    ap.add_argument("--metrics-jsonl", default="", metavar="PATH",
+                    help="write the chunked serve's structured metrics "
+                         "event stream (JSON lines; schema-gated by "
+                         "runtime.metrics.validate_jsonl in CI)")
+    ap.add_argument("--metrics-trace", default="", metavar="PATH",
+                    help="write the chunked serve's Perfetto trace_event "
+                         "JSON (nightly artifact)")
+    ap.add_argument("--append-history", default="", metavar="PATH",
+                    help="append a one-line run summary (key metrics + "
+                         "git sha) to this JSONL trajectory file")
     args = ap.parse_args()
 
     d = 64 if args.quick else 128
@@ -261,8 +305,12 @@ def main() -> None:
                       d_model=d, n_layers=4, n_heads=4, n_kv_heads=4,
                       d_ff=4 * d, max_seq=256, dtype="float32",
                       param_dtype="float32", attn_chunk=256, remat=False)
+    smoke_mcfg = MetricsConfig(enabled=True,
+                               jsonl_path=args.metrics_jsonl,
+                               trace=bool(args.metrics_trace),
+                               trace_path=args.metrics_trace)
     if args.study_only:
-        study = paged_kv_study(cfg, args.quick)
+        study = paged_kv_study(cfg, args.quick, mcfg=smoke_mcfg)
         print(f"paged_kv_study,reduction={study['turn2_chunk_reduction']:.3f},"
               f"skipped={study['turn2_chunks_skipped']},"
               f"sessions={study['sessions_retained']}/{study['slots']} slots,"
@@ -270,6 +318,20 @@ def main() -> None:
               f"dense_tok_per_s={study['dense']['tok_per_s']:.1f}")
         ok = (study["turn2_chunk_reduction"] >= 0.90
               and study["sessions_retained"] > study["slots"])
+        if args.metrics_jsonl:
+            # CI smoke gate: every line the sink produced must be schema
+            # valid (numeric ts + string kind)
+            from repro.runtime.metrics import validate_jsonl
+            n = validate_jsonl(args.metrics_jsonl)
+            print(f"metrics_jsonl,valid_lines={n},{args.metrics_jsonl}")
+        if args.append_history:
+            from benchmarks.bench_diff import append_history, summarize
+            append_history(args.append_history, "bench_prefill_study",
+                           summarize(study, ("turn2_chunk_reduction",
+                                             "turn2_chunks_skipped",
+                                             "sessions_retained",
+                                             "paged.tok_per_s",
+                                             "dense.tok_per_s")))
         sys.exit(0 if ok else 1)
     n_req = 8 if args.quick else 16
     max_new = 8 if args.quick else 16
@@ -280,9 +342,14 @@ def main() -> None:
                   "requests": n_req, "max_new": max_new,
                   "chunk": args.chunk, "interleave": args.interleave},
         "backend": jax.default_backend(),
-        "monolithic": _serve(cfg, mk(0), n_req, max_new),
-        "chunked": _serve(cfg, mk(args.chunk), n_req, max_new),
-        "paged_kv_study": paged_kv_study(cfg, args.quick),
+        # both serves run with the hub enabled (the report rides its
+        # histogram/watchdog snapshot); file sinks only on the chunked side
+        "monolithic": _serve(cfg, mk(0), n_req, max_new,
+                             mcfg=MetricsConfig(enabled=True)),
+        "chunked": _serve(cfg, mk(args.chunk), n_req, max_new,
+                          mcfg=smoke_mcfg),
+        "paged_kv_study": paged_kv_study(cfg, args.quick,
+                                         mcfg=MetricsConfig(enabled=True)),
         "overload_study": overload_study(cfg, args.quick),
         "generated_unix": time.time(),
     }
@@ -315,6 +382,16 @@ def main() -> None:
         status = max(status, check_against(args.against, report,
                                            args.tolerance,
                                            "bench_prefill_diff"))
+    if args.append_history:
+        from benchmarks.bench_diff import append_history, summarize
+        append_history(args.append_history, "bench_prefill", summarize(
+            report, ("backend",
+                     "chunked.tok_per_s", "chunked.p95_ttft_s",
+                     "chunked.p95_itl_s", "monolithic.tok_per_s",
+                     "chunked.metrics.retraces_post_warmup",
+                     "paged_kv_study.turn2_chunk_reduction",
+                     "overload_study.shed_rate",
+                     "overload_study.p95_latency_virtual_s")))
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}")

@@ -131,6 +131,40 @@ class PagedKVConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """First-class observability for the serve stack (DESIGN.md §12).
+
+    Configures ``runtime/metrics.py:MetricsHub`` — the counter/gauge/
+    histogram registry, serve-phase tracing, and structured sinks the
+    server emits into.  Disabled (the default) the hub is a strict no-op:
+    every emit method returns immediately and the serve path is
+    bitwise-identical to a metrics-free build (pinned by
+    tests/test_metrics.py).
+    """
+
+    enabled: bool = False
+    jsonl_path: str = ""        # JSONL event-stream sink ("" = in-memory
+                                # ring only; see MetricsHub.events())
+    trace: bool = False         # record Chrome/Perfetto trace events even
+                                # with no trace_path (read via trace_events())
+    trace_path: str = ""        # write trace_event JSON here on flush()
+    snapshot_path: str = ""     # write Prometheus-style exposition on flush()
+    cadence: int = 8            # publish gauge families (controller/pool/
+                                # shard state) every N decode steps — emission
+                                # is cheap but per-step gauge refresh is
+                                # redundant at EMA timescales
+    hist_max_exact: int = 2048  # histogram observations kept exact (nearest-
+                                # rank percentiles); past the cap values fold
+                                # into the fixed bucket ladder (0 = exact
+                                # forever — what throughput_report uses)
+    hist_buckets: tuple = ()    # custom bucket upper bounds (seconds);
+                                # () = metrics.DEFAULT_BUCKETS
+    watchdog: bool = True       # hook jax compile events: any post-warmup
+                                # retrace warns + counts (DESIGN.md §12)
+    events_keep: int = 4096     # in-memory ring sizes (events + trace)
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                  # dense | moe | hybrid | xlstm | vlm | encdec

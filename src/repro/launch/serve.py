@@ -20,7 +20,8 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.base import ControllerConfig, PagedKVConfig
+from repro.configs.base import (ControllerConfig, MetricsConfig,
+                                PagedKVConfig)
 from repro.configs.registry import arch_names, get_config, reduced_config
 from repro.launch.mesh import make_mesh
 from repro.launch.specs import model_module
@@ -161,6 +162,22 @@ def main() -> None:
                     help="defer admissions while pool pressure >= this "
                          "fraction (1.0 = disabled; useful range "
                          "0.8-0.95)")
+    # first-class observability (DESIGN.md §12): any sink flag enables the
+    # metrics hub; --metrics alone enables the in-memory instruments only
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the metrics hub (counters/gauges/"
+                         "histograms + retrace watchdog) without file "
+                         "sinks; implied by any --metrics-* path flag")
+    ap.add_argument("--metrics-jsonl", default="", metavar="PATH",
+                    help="append structured serve events (admissions, "
+                         "first tokens, completions, sheds, preemptions, "
+                         "bucket switches, retraces) as JSON lines")
+    ap.add_argument("--metrics-trace", default="", metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "serve phases (load in ui.perfetto.dev)")
+    ap.add_argument("--metrics-snapshot", default="", metavar="PATH",
+                    help="write a Prometheus-style text exposition of all "
+                         "instruments at each serve drain")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -214,6 +231,13 @@ def main() -> None:
         paged = (PagedKVConfig(block_size=args.paged_kv,
                                pool_blocks=args.pool_blocks)
                  if args.paged_kv else None)
+        mcfg = MetricsConfig(
+            enabled=bool(args.metrics or args.metrics_jsonl
+                         or args.metrics_trace or args.metrics_snapshot),
+            jsonl_path=args.metrics_jsonl,
+            trace=bool(args.metrics_trace),
+            trace_path=args.metrics_trace,
+            snapshot_path=args.metrics_snapshot)
         srv = Server(mod, cfg, ServeConfig(batch=args.batch,
                                            max_len=args.max_len,
                                            max_new_tokens=args.max_new,
@@ -232,7 +256,8 @@ def main() -> None:
                                            .default_deadline,
                                            preempt=args.preempt,
                                            pressure_gate=args
-                                           .pressure_gate),
+                                           .pressure_gate,
+                                           metrics=mcfg),
                      params, extra_inputs=extra, mesh=serve_mesh)
         slas = parse_sla_mix(args.sla_mix, args.requests)
         reqs = [Request(uid=i,
@@ -274,6 +299,13 @@ def main() -> None:
             rep["paged"] = srv.paged_stats()
         if srv.controller is not None:
             rep["controller"] = srv.controller.report()
+        if mcfg.enabled:
+            rep["metrics"] = srv.metrics_report()
+            rep["metrics"]["sinks"] = {
+                k: v for k, v in (("jsonl", args.metrics_jsonl),
+                                  ("trace", args.metrics_trace),
+                                  ("snapshot", args.metrics_snapshot)) if v}
+            srv.metrics.close()
         print(json.dumps(rep, indent=1))
 
     if mesh is not None:

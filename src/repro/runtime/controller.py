@@ -367,6 +367,49 @@ class AlphaController:
     def trajectory(self) -> list[dict]:
         return list(self._trajectory)
 
+    def publish_metrics(self, hub) -> None:
+        """Emit the controller's current state into a ``MetricsHub``
+        (runtime.metrics, DESIGN.md §12): per-tier realized/predicted
+        density and FN rate, per-layer alpha and density (tier-labelled
+        when tiered), plus progress gauges.  Plain gauge writes over the
+        host-side EMAs — no device sync; no-op on a disabled hub."""
+        if not getattr(hub, "enabled", False):
+            return
+        s = self.state
+        hub.set_gauge("controller_steps", s.steps)
+        hub.set_gauge("controller_audits", s.audits)
+        hub.set_gauge("prefill_chunks", self.prefill_chunks)
+        hub.set_gauge("prefill_density", float(self.prefill_ema.mean()))
+        if self.tiers:
+            for i, t in enumerate(self.tiers):
+                lt = {"tier": t.name}
+                hub.set_gauge("tier_target_density",
+                              t.target(self.cfg.target_density), **lt)
+                hub.set_gauge("tier_realized_density",
+                              float(s.density_ema[i].mean()), **lt)
+                hub.set_gauge("tier_predicted_density",
+                              float(s.predicted_ema[i].mean()), **lt)
+                hub.set_gauge("tier_fn_rate",
+                              float(s.fn_ema[i].mean()), **lt)
+                hub.set_gauge("tier_overflow",
+                              float(s.overflow_ema[i].mean()), **lt)
+                for layer in range(self.num_layers):
+                    hub.set_gauge("alpha", float(s.alphas[i, layer]),
+                                  layer=layer, **lt)
+                    hub.set_gauge("layer_density",
+                                  float(s.density_ema[i, layer]),
+                                  layer=layer, **lt)
+        else:
+            hub.set_gauge("realized_density", float(s.density_ema.mean()))
+            hub.set_gauge("predicted_density",
+                          float(s.predicted_ema.mean()))
+            hub.set_gauge("fn_rate", float(s.fn_ema.mean()))
+            hub.set_gauge("overflow", float(s.overflow_ema.mean()))
+            for layer in range(self.num_layers):
+                hub.set_gauge("alpha", float(s.alphas[layer]), layer=layer)
+                hub.set_gauge("layer_density",
+                              float(s.density_ema[layer]), layer=layer)
+
     # -------------------------------------------------------- persistence --
     # Controller state must survive server restarts (elastic events,
     # deploys): checkpointed through checkpoint.manager.CheckpointManager —
@@ -599,6 +642,23 @@ class DistributedController:
         rep["n_data_shards"] = self.n_data_shards
         rep["shard_skew"] = self.shard_skew()
         return rep
+
+    def publish_metrics(self, hub) -> None:
+        """Inner controller gauges plus the sharded-only signals:
+        per-(layer, shard) realized density and union selection demand,
+        and the max skew.  Explicit override — ``__getattr__`` delegation
+        would silently publish only the unsharded view."""
+        if not getattr(hub, "enabled", False):
+            return
+        self.inner.publish_metrics(hub)
+        from repro.runtime.distributed import shard_gauge_rows
+        for layer, shard, dens, union in shard_gauge_rows(
+                self.shard_density_ema, self.shard_union_ema):
+            hub.set_gauge("shard_density", dens, layer=layer, shard=shard)
+            if union is not None:
+                hub.set_gauge("shard_union_demand", union,
+                              layer=layer, shard=shard)
+        hub.set_gauge("shard_max_skew", self.shard_skew()["max_skew"])
 
     def state_dict(self) -> tuple[dict, dict]:
         tree, meta = self.inner.state_dict()

@@ -478,6 +478,21 @@ def selection_masks(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
     return jnp.stack(rows, axis=0)
 
 
+def shard_gauge_rows(density_ema, union_ema=None):
+    """Per-(layer, shard) gauge rows for metrics export (DESIGN.md §12):
+    yields ``(layer, shard, density, union)`` tuples from the (L, ms)
+    shard EMAs ``runtime.controller.DistributedController`` keeps; the
+    union column is None when no union-demand EMA was tracked.  Host-side
+    iteration over already-materialized numpy state — no device reads."""
+    import numpy as np
+    d = np.asarray(density_ema, np.float32)
+    u = None if union_ema is None else np.asarray(union_ema, np.float32)
+    for layer in range(d.shape[0]):
+        for shard in range(d.shape[1]):
+            yield (layer, shard, float(d[layer, shard]),
+                   None if u is None else float(u[layer, shard]))
+
+
 def sharded_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
                   alpha, *, strategy: str, return_stats: bool = False,
                   interpret: Optional[bool] = None):

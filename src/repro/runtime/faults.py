@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
@@ -79,6 +80,13 @@ class FaultInjector:
     def tick(self) -> None:
         """One scheduler-loop iteration's worth of virtual time."""
         self._t += self.tick_s
+
+    def time_source(self):
+        """The clock the scheduler (and its ``MetricsHub``) should read:
+        this injector's virtual clock when armed, wall time otherwise."""
+        if self.virtual_clock:
+            return self.now
+        return time.perf_counter
 
     # ------------------------------------------------------- fault points --
     def arm(self, point: str, uid: Optional[int] = None, after: int = 0,

@@ -291,6 +291,22 @@ class KVPool:
             **{k: int(v) for k, v in self.stats.items()},
         }
 
+    def publish_metrics(self, hub) -> None:
+        """Mirror the pool's occupancy and monotonic counters into a
+        ``MetricsHub`` (runtime.metrics, DESIGN.md §12).  Occupancy fields
+        become ``kv_pool_*`` gauges; the eviction/COW/dedup totals the
+        pool already counts are mirrored as counters via ``set_counter``.
+        No-op on a disabled hub."""
+        if not getattr(hub, "enabled", False):
+            return
+        snap = self.snapshot()
+        for key in ("n_blocks", "free_blocks", "parked_blocks",
+                    "committed_blocks", "live_refs", "sessions",
+                    "pressure"):
+            hub.set_gauge(f"kv_pool_{key}", snap[key])
+        for key, v in self.stats.items():
+            hub.set_counter(f"kv_pool_{key}", int(v))
+
     def check_invariants(self) -> None:
         """Debug/test guard: reserved blocks unreferenced and uncommitted,
         every block in exactly one of {free, parked, referenced}."""

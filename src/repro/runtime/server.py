@@ -21,7 +21,6 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
-import math
 import time
 import warnings
 from typing import Any, Callable, Optional
@@ -31,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (DEFAULT_SLA_TIERS, ControllerConfig,
-                                ModelConfig, PagedKVConfig, SLATier)
+                                MetricsConfig, ModelConfig, PagedKVConfig,
+                                SLATier)
 # Alpha column for a dead (drained) slot — and, since the chunked-prefill
 # scheduler, for a slot mid-prefill and for pad tokens inside a prefill
 # chunk: margin = N_neg - alpha*N_pos with a huge negative alpha is positive
@@ -48,6 +48,7 @@ from repro.runtime.controller import (AlphaController, DistributedController,
                                       save_controller)
 from repro.runtime.faults import InjectedFault
 from repro.runtime.kv_pool import KVPool, PoolExhausted
+from repro.runtime.metrics import MetricsHub
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +134,12 @@ class ServeConfig:
     # of requeueing — the livelock guard for a pool too small to ever hold
     # the request (it would otherwise thrash park/resume forever).
     max_preemptions: int = 4
+    # ---- observability (DESIGN.md §12) ----------------------------------
+    # MetricsHub wiring: counters/gauges/histograms, serve-phase tracing,
+    # JSONL + exposition sinks, and the retrace watchdog.  Disabled (the
+    # default) the hub is a strict no-op and the serve path is bitwise the
+    # metrics-free one (pinned by tests/test_metrics.py).
+    metrics: MetricsConfig = dataclasses.field(default_factory=MetricsConfig)
 
 
 @dataclasses.dataclass
@@ -359,6 +366,12 @@ class Server:
         self.preempt_count = 0            # victims parked + requeued
         self.shed_count = 0               # terminal sheds (all reasons)
         self.admissions_deferred = 0      # refills held back by the gate
+        # ---- observability hub (DESIGN.md §12) ---------------------------
+        # Shares the scheduler's clock (_now — wall, or the fault
+        # injector's virtual clock once attach_faults binds one), so spans
+        # and events line up with deadline and queue-wait accounting.
+        # Disabled (the default) every hub method is a no-op.
+        self.metrics = MetricsHub(scfg.metrics, clock=self._now)
         if scfg.paged_kv is not None:
             pk = scfg.paged_kv
             pfams = getattr(model_mod, "PAGED_KV_FAMILIES", ())
@@ -521,8 +534,11 @@ class Server:
         fire via ``_fault`` and, with ``virtual_clock``, the scheduler's
         entire notion of time (deadlines, stamps, queue waits) comes from
         ``injector.now()`` advanced one tick per loop iteration — overload
-        runs become deterministic functions of scheduling decisions."""
+        runs become deterministic functions of scheduling decisions.  The
+        metrics hub rebinds to the same source, so spans, events and trace
+        timestamps share the scheduler's clock (DESIGN.md §12)."""
         self.faults = injector
+        self.metrics.bind_clock(injector.time_source())
 
     def _now(self) -> float:
         f = self.faults
@@ -673,6 +689,68 @@ class Server:
         if self._ckpt_mgr is None or self.controller is None:
             return None
         return save_controller(self.controller, self._ckpt_mgr, step)
+
+    # ------------------------------------------------ observability (§12) --
+    def publish_gauges(self) -> None:
+        """Refresh the hub's gauge families from host state: controller
+        per-tier / per-layer alphas and densities, per-(layer, shard)
+        EMAs, KV-pool occupancy/pressure/counters, and the active capacity
+        bucket(s) with their d_ff occupancy.  Plain-numpy reads of values
+        the serve loop already materialized — no device syncs.  The
+        scheduler calls this every ``MetricsConfig.cadence`` decode steps
+        and at each drain boundary; benchmarks call it before snapshotting."""
+        hub = self.metrics
+        if not hub.enabled:
+            return
+        if self.controller is not None:
+            self.controller.publish_metrics(hub)
+        if self.kv_pool is not None:
+            self.kv_pool.publish_metrics(hub)
+        hub.set_gauge("admissions_deferred", self.admissions_deferred)
+        cap = getattr(self, "_active_cap", None)
+        g = self.cfg.sparse.group_size
+        if isinstance(cap, tuple):
+            k_local = self.cfg.d_ff // max(1, len(cap))
+            for s, c in enumerate(cap):
+                hub.set_gauge("capacity_bucket_groups", int(c), shard=s)
+                hub.set_gauge("bucket_occupancy",
+                              min(1.0, int(c) * g / max(1, k_local)),
+                              shard=s)
+        elif isinstance(cap, (int, np.integer)) and cap:
+            hub.set_gauge("capacity_bucket_groups", int(cap))
+            hub.set_gauge("bucket_occupancy",
+                          min(1.0, int(cap) * g / self.cfg.d_ff))
+
+    def _serve_epilogue(self) -> None:
+        """Post-drain observability boundary (DESIGN.md §12): refresh the
+        gauge families, stamp the drain event, arm the retrace watchdog —
+        by the end of the first drain every executable this configuration
+        needs has been traced, so any later compile is exactly the retrace
+        the serve invariant forbids — and flush the configured sinks."""
+        hub = self.metrics
+        if not hub.enabled:
+            return
+        self.publish_gauges()
+        hub.event("serve_end",
+                  completed=int(hub.counter_value("requests_completed")),
+                  shed=self.shed_count, preemptions=self.preempt_count,
+                  retraces_post_warmup=hub.watchdog.retraces_post_warmup)
+        if self.scfg.metrics.watchdog:
+            hub.watchdog.arm()
+        hub.flush()
+
+    def metrics_report(self) -> dict:
+        """Hub snapshot + watchdog state for launcher reports and
+        benchmark studies (cheap and JSON-ready; empty-ish when the hub
+        is disabled)."""
+        hub = self.metrics
+        rep: dict = {"enabled": hub.enabled,
+                     "watchdog": hub.watchdog.report()}
+        if hub.enabled:
+            rep["snapshot"] = hub.snapshot()
+            rep["events"] = len(hub.events())
+            rep["trace_events"] = len(hub.trace_events()["traceEvents"])
+        return rep
 
     @property
     def decode_ctrl_fn(self):
@@ -1077,6 +1155,8 @@ class Server:
         # bounded queue depth (DESIGN.md §11): overflow sheds NOW, before
         # any compute — the client sees the rejection immediately instead
         # of a deadline miss after minutes in a hopeless backlog
+        hub = self.metrics
+        hub.event("serve_start", requests=len(requests))
         overflow: list[Request] = []
         mqd = self.scfg.max_queue_depth
         if mqd and len(requests) > mqd:
@@ -1084,6 +1164,8 @@ class Server:
             for r in overflow:
                 r.outcome, r.shed_reason = "shed", "queue_depth"
                 r.out = np.zeros(0, np.int32)
+                hub.inc("requests_shed", reason="queue_depth")
+                hub.event("shed", uid=r.uid, reason="queue_depth")
             self.shed_count += len(overflow)
         if self.scfg.slot_refill:
             try:
@@ -1097,6 +1179,7 @@ class Server:
                 self.reset()
                 raise
             self.save_controller()  # persistence point (DESIGN.md §8)
+            self._serve_epilogue()
             return done + overflow
         # chunk composition is deterministic, so padded-chunk overflow
         # (chunk-max prompt + chunk-max budget) is also checkable up front
@@ -1118,6 +1201,7 @@ class Server:
             self.reset()
             raise
         self.save_controller()
+        self._serve_epilogue()
         return done + overflow
 
     def _serve_chunked(self, requests: list[Request]) -> list[Request]:
@@ -1174,6 +1258,7 @@ class Server:
         admission to last token."""
         scfg, B = self.scfg, self.scfg.batch
         ctl = self.controller
+        hub = self.metrics          # no-op methods when disabled (§12)
         queue = collections.deque(requests)
         done: list[Request] = []
         # victim ordering for preemption/shedding (DESIGN.md §11): lowest
@@ -1237,6 +1322,10 @@ class Server:
             # admission -> last token (the documented latency contract; the
             # old dequeue-relative clock silently excluded the queue wait)
             r.latency_s = r.t_end - (r.t_admit if r.t_admit else r.t_start)
+            hub.inc("requests_completed")
+            hub.observe("latency_s", r.latency_s, tier=r.sla)
+            hub.event("complete", uid=r.uid, tier=r.sla,
+                      tokens=len(r.out), latency_s=r.latency_s)
             done.append(r)
             if paged:
                 _release_slot(i, r)
@@ -1263,6 +1352,10 @@ class Server:
             r.outcome, r.shed_reason = "shed", reason
             r.out = np.asarray(toks if toks is not None else [], np.int32)
             self.shed_count += 1
+            hub.inc("requests_shed", reason=reason)
+            hub.event("shed", uid=r.uid, tier=r.sla, reason=reason,
+                      tokens=len(r.out))
+            hub.instant("shed", uid=r.uid, reason=reason)
             done.append(r)
 
         def _clear_slot(i: int) -> None:
@@ -1300,6 +1393,10 @@ class Server:
             r.preemptions += 1
             r.outcome = "preempted"       # transient; terminal on finish/shed
             self.preempt_count += 1
+            hub.inc("preemptions", tier=r.sla)
+            hub.event("preempt", uid=r.uid, tier=r.sla,
+                      preemptions=r.preemptions)
+            hub.instant("preempt", uid=r.uid)
             _clear_slot(i)
             queue.append(r)
 
@@ -1384,6 +1481,8 @@ class Server:
             nonlocal caches, alpha_mat
             now = self._now()
             r.ttft_s = now - (r.t_admit if r.t_admit else r.t_start)
+            hub.observe("ttft_s", r.ttft_s, tier=r.sla)
+            hub.event("first_token", uid=r.uid, tier=r.sla, ttft_s=r.ttft_s)
             slot_req[i] = r
             slot_out[i] = [first]
             tok[i, 0] = first
@@ -1471,6 +1570,15 @@ class Server:
             return True
 
         def admit(i: int) -> None:
+            """Fill slot i from the queue — traced as one "admission" span
+            per attempt (dequeue through placement/pending, including any
+            expired-at-dequeue sheds along the way)."""
+            if not queue:
+                return
+            with hub.span("admission", slot=i):
+                _admit(i)
+
+        def _admit(i: int) -> None:
             """Fill slot i from the queue.  With chunked prefill the slot
             goes PENDING (scratch caches; chunks advance interleaved with
             decode steps); otherwise the monolithic batch-1 prefill runs at
@@ -1507,6 +1615,9 @@ class Server:
                 now = self._now()
                 r.t_start = now           # dequeue: service starts
                 r.queue_wait_s = now - r.t_admit if r.t_admit else 0.0
+                hub.observe("queue_wait_s", r.queue_wait_s, tier=r.sla)
+                hub.event("admit", uid=r.uid, tier=r.sla, plen=plen,
+                          queue_wait_s=r.queue_wait_s)
                 if self._chunk_prefill:
                     pc = self.scfg.prefill_chunk
                     padded = -(-plen // pc) * pc
@@ -1540,7 +1651,10 @@ class Server:
                 ex = tuple(e[i:i + 1] for e in extra)
                 try:
                     self._fault("prefill", r.uid)
-                    logits, one = self.prefill_fn(self.params, prompt, *ex)
+                    with hub.span("prefill", hist="prefill_s", slot=i,
+                                  uid=r.uid):
+                        logits, one = self.prefill_fn(self.params, prompt,
+                                                      *ex)
                 except InjectedFault:
                     _shed(r, "fault")     # injected slot death mid-prefill
                     continue
@@ -1579,9 +1693,11 @@ class Server:
                     al = jnp.asarray(self._prefill_alphas(st["tier"]))
                     fn = (self.prefill_chunk_stats_fn if prefill_stats
                           else self.prefill_chunk_fn)
-                    out = fn(self.params, chunk_toks, st["caches"],
-                             jnp.int32(st["off"]), jnp.int32(st["plen"]),
-                             al, *st["extra"])
+                    with hub.span("prefill_chunk", hist="prefill_chunk_s",
+                                  slot=i, uid=r.uid):
+                        out = fn(self.params, chunk_toks, st["caches"],
+                                 jnp.int32(st["off"]), jnp.int32(st["plen"]),
+                                 al, *st["extra"])
                     if prefill_stats:
                         logits, st["caches"], stats = out
                         ctl.observe_prefill(
@@ -1639,6 +1755,7 @@ class Server:
         # runs until all three drain.  Each iteration either decodes,
         # prefills, admits, or sheds — and the virtual clock ticks
         # regardless — so it always terminates.
+        step_n = 0                    # decode steps (gauge-publish cadence)
         while active.any() or pending or queue:
             self._tick()
             now = self._now()
@@ -1687,12 +1804,18 @@ class Server:
                     continue     # exhaustion relief preempted every slot
             self._fault("decode")   # armed decode faults are FATAL: they
             #                         abort serve() and exercise reset()
+            t_dec = hub.now() if hub.enabled else 0.0
             if ctl is not None:
                 audit = ctl.is_audit_step()
                 # between-step capacity-bucket switch: a host dict lookup
                 # into the pre-jitted (per-shard tuple) ladder — never a
                 # retrace
+                prev_cap = self._active_cap
                 self._select_bucket()
+                if hub.enabled and self._active_cap != prev_cap:
+                    hub.inc("bucket_switches")
+                    hub.event("bucket_switch", bucket=self._active_cap)
+                    hub.instant("bucket_switch")
                 fn = self.decode_audit_fn if audit else self.decode_ctrl_fn
                 # rebuilt per step: the controller adapts between steps
                 alphas = self._slot_alpha_matrix(tier_idx, active)
@@ -1704,7 +1827,9 @@ class Server:
                 else:
                     jt, jl, ja = self._put_slots(tok, lengths, alphas)
                     ntok, caches, stats = fn(self.params, jt, caches, jl, ja)
-                self._observe_step(stats, tier_idx, active, audit)
+                with hub.span("controller_update",
+                              hist="controller_update_s"):
+                    self._observe_step(stats, tier_idx, active, audit)
             elif legacy and active.all():
                 # uniform schedule, every slot live: the seed decode jit
                 # (bit-identical path; no alpha plumbing at all)
@@ -1732,6 +1857,13 @@ class Server:
                     ntok, caches = self.decode_alpha_fn(
                         self.params, jt, caches, jl, ja)
             ntok = np.asarray(ntok)
+            # the decode phase ends at host materialization (np.asarray
+            # blocks on the step's device work); under the virtual clock
+            # the span is 0-duration and purely structural
+            hub.complete("decode_step", t_dec, hist="decode_step_s")
+            step_n += 1
+            if hub.enabled and step_n % scfg.metrics.cadence == 0:
+                self.publish_gauges()
             refill = []
             for i in range(B):
                 if not active[i]:
@@ -1760,7 +1892,13 @@ def throughput_report(requests: list[Request]) -> dict:
     admission to last completion — concurrent requests share that window;
     summing per-request latencies would count each decode step once per
     co-resident request and deflate tok/s by ~the batch factor), plus
-    per-request latency percentiles."""
+    per-request latency percentiles.
+
+    Built on an ephemeral exact-mode ``runtime.metrics.MetricsHub``
+    (``hist_max_exact=0`` — never folds to buckets), so the report's
+    nearest-rank percentiles are EXACT for any queue size while routing
+    through the same histogram machinery the live sinks use
+    (DESIGN.md §12)."""
     # served = completion stamped and consistent: a half-stamped request
     # (hand-built, or aborted mid-serve) would otherwise poison the
     # wall-clock window.  t_start may legitimately be 0.0 (clock origin),
@@ -1772,19 +1910,22 @@ def throughput_report(requests: list[Request]) -> dict:
     toks = sum(len(r.out) for r in served if r.out is not None)
     wall = (max(r.t_end for r in served) - min(r.t_start for r in served)
             if served else 0.0)
-    lats = sorted(r.latency_s for r in served)
-    # TTFT / queue wait only exist where the scheduler stamped them
-    # (requests built by hand for the report tests carry the 0.0 defaults)
-    ttfts = sorted(r.ttft_s for r in served if r.ttft_s > 0.0)
-    waits = sorted(r.queue_wait_s for r in served if r.t_admit > 0.0)
+    hub = MetricsHub(MetricsConfig(enabled=True, hist_max_exact=0,
+                                   watchdog=False))
+    for r in served:
+        hub.observe("latency_s", r.latency_s)
+        # TTFT / queue wait only exist where the scheduler stamped them
+        # (requests built by hand for report tests carry the 0.0 defaults)
+        if r.ttft_s > 0.0:
+            hub.observe("ttft_s", r.ttft_s)
+        if r.t_admit > 0.0:
+            hub.observe("queue_wait_s", r.queue_wait_s)
 
-    def pct(vals: list, q: float) -> float:
-        if not vals:
-            return 0.0
-        # nearest-rank: ceil(q*n)-1, with float fuzz rounded away (int(q*n)
-        # would report the max as p95 for every n <= 20)
-        rank = math.ceil(round(q * len(vals), 9))
-        return vals[min(len(vals) - 1, max(0, rank - 1))]
+    def pct(name: str, q: float) -> float:
+        # exact nearest-rank (metrics.nearest_rank_pct semantics: ceil(q*n)
+        # with float fuzz rounded away — int(q*n) would report the max as
+        # p95 for every n <= 20)
+        return hub.percentile(name, q)
     # overload outcomes (DESIGN.md §11): every request the scheduler
     # touched ends "completed" or "shed" (with a reason); preemptions
     # count park+requeue events — a preempted-then-completed request
@@ -1808,10 +1949,12 @@ def throughput_report(requests: list[Request]) -> dict:
             "preemptions": sum(r.preemptions for r in requests),
             "total_s": wall,
             "tok_per_s": float(toks / wall) if wall > 0.0 else 0.0,
-            "mean_latency_s": float(np.mean(lats)) if lats else 0.0,
-            "p50_latency_s": pct(lats, 0.5), "p95_latency_s": pct(lats, 0.95),
-            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
-            "p50_ttft_s": pct(ttfts, 0.5), "p95_ttft_s": pct(ttfts, 0.95),
-            "mean_queue_wait_s": float(np.mean(waits)) if waits else 0.0,
-            "p50_queue_wait_s": pct(waits, 0.5),
-            "p95_queue_wait_s": pct(waits, 0.95)}
+            "mean_latency_s": hub.hist_mean("latency_s"),
+            "p50_latency_s": pct("latency_s", 0.5),
+            "p95_latency_s": pct("latency_s", 0.95),
+            "mean_ttft_s": hub.hist_mean("ttft_s"),
+            "p50_ttft_s": pct("ttft_s", 0.5),
+            "p95_ttft_s": pct("ttft_s", 0.95),
+            "mean_queue_wait_s": hub.hist_mean("queue_wait_s"),
+            "p50_queue_wait_s": pct("queue_wait_s", 0.5),
+            "p95_queue_wait_s": pct("queue_wait_s", 0.95)}
