@@ -13,6 +13,11 @@ interpret mode on CPU) against the gather and dense XLA paths:
                         (kernels.sparse_mlp_fused.kernel_hbm_bytes)
 * ``wall_us``         — CPU wall-clock per decode-step MLP (proxy trend
                         only; interpret mode is not TPU time)
+* ``quant``           — the int8 study (DESIGN.md §13): the same bucket
+                        served through the int8 fused kernel, its modeled
+                        traffic, and the fused weight+scale bytes ratio
+                        vs the fp32 model — the run FAILS if any bucket's
+                        ratio exceeds 0.5
 
 Writes one JSON document so CI can archive a comparable series per commit
 (nightly job uploads the artifact — .github/workflows/ci.yml).
@@ -47,13 +52,19 @@ def _time(fn, *args, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+QUANT_GROUP = 128
+
+
 def bench(d: int, k: int, b: int, buckets: tuple, iters: int,
           group_size: int = 8) -> dict:
+    from repro.core import quantize as Q
+
     key = jax.random.PRNGKey(0)
     params = init_gated_mlp(key, d, k, dtype=jnp.float32)
     # bias toward the ReLU-fied regime so selection pressure is realistic
     params["wg_t"] = params["wg_t"] - 0.1 / np.sqrt(d)
     params = prepare_sparse_params(params)
+    qparams = Q.quantize_mlp_node(params, QUANT_GROUP, group_size)
     x = jax.random.normal(jax.random.PRNGKey(1), (b, d), jnp.float32)
 
     cfg_d = SparseInferConfig(enabled=False, activation="relu")
@@ -75,6 +86,24 @@ def bench(d: int, k: int, b: int, buckets: tuple, iters: int,
             lambda xx: pallas_mlp(params, xx, cfg, alpha=1.0,
                                   interpret=True, return_stats=True), x)
         bm = kernel_hbm_bytes(b, d, k, cap_groups, group_size)
+        # int8 study (DESIGN.md §13): same bucket, int8 fused kernel; the
+        # bytes ratio is vs the fp32 model (the dtype this bench runs in)
+        cfg_q = SparseInferConfig(enabled=True, activation="relu",
+                                  capacity_frac=frac, group_size=group_size,
+                                  weight_dtype="int8",
+                                  quant_group_size=QUANT_GROUP)
+        f_quant = jax.jit(lambda p, xx, c=cfg_q: pallas_mlp(
+            p, xx, c, alpha=1.0, interpret=True))
+        q_dispatches = ops.count_pallas_dispatches(
+            lambda xx: pallas_mlp(qparams, xx, cfg_q, alpha=1.0,
+                                  interpret=True, return_stats=True), x)
+        bm_fp32 = kernel_hbm_bytes(b, d, k, cap_groups, group_size,
+                                   weight_bytes=4)
+        bm_q = kernel_hbm_bytes(b, d, k, cap_groups, group_size,
+                                weight_bytes=4, weight_dtype="int8",
+                                quant_group_size=QUANT_GROUP)
+        ratio = ((bm_q["fused_weight_bytes"] + bm_q["fused_scale_bytes"])
+                 / bm_fp32["fused_weight_bytes"])
         rows.append({
             "capacity_frac": frac,
             "cap_groups": cap_groups,
@@ -86,6 +115,16 @@ def bench(d: int, k: int, b: int, buckets: tuple, iters: int,
                 "pallas_interpret_stats": _time(f_pallas_stats, params, x,
                                                 iters=iters) * 1e6,
                 "gather": _time(f_gather, params, x, iters=iters) * 1e6,
+            },
+            "quant": {
+                "quant_group_size": QUANT_GROUP,
+                "dispatches": q_dispatches,
+                "hbm_bytes": bm_q,
+                "fused_bytes_ratio_vs_fp32": ratio,
+                "wall_us": {
+                    "pallas_int8_interpret": _time(f_quant, qparams, x,
+                                                   iters=iters) * 1e6,
+                },
             },
         })
     return {
@@ -121,15 +160,25 @@ def main() -> None:
     report = bench(d, k, args.batch, (0.0625, 0.125, 0.25, 0.5), iters)
     report["generated_unix"] = time.time()
     status = 0
+    for row in report["buckets"]:
+        ratio = row["quant"]["fused_bytes_ratio_vs_fp32"]
+        if ratio > 0.5:
+            print(f"bench_kernels,FAIL: cap={row['capacity_frac']} int8 "
+                  f"fused weight+scale bytes ratio {ratio:.3f} > 0.5",
+                  file=sys.stderr)
+            status = 1
     if args.against:
         from benchmarks.bench_diff import check_against
         status = check_against(args.against, report, args.tolerance,
                                "bench_kernels_diff")
     if args.append_history:
         from benchmarks.bench_diff import append_history, summarize
-        rows = {f"cap_{row['capacity_frac']:g}.pallas_us":
+        rows = {}
+        for row in report["buckets"]:
+            rows[f"cap_{row['capacity_frac']:g}.pallas_us"] = \
                 row["wall_us"]["pallas_interpret"]
-                for row in report["buckets"]}
+            rows[f"cap_{row['capacity_frac']:g}.int8_us"] = \
+                row["quant"]["wall_us"]["pallas_int8_interpret"]
         rows["backend"] = report.get("backend", "")
         append_history(args.append_history, "bench_kernels", rows)
     with open(args.out, "w") as f:
@@ -139,7 +188,10 @@ def main() -> None:
               f"dispatches={row['dispatches']},"
               f"modeled_reduction={row['hbm_bytes']['reduction']:.2f}x,"
               f"pallas_us={row['wall_us']['pallas_interpret']:.0f},"
-              f"gather_us={row['wall_us']['gather']:.0f}")
+              f"gather_us={row['wall_us']['gather']:.0f},"
+              f"int8_us={row['quant']['wall_us']['pallas_int8_interpret']:.0f},"
+              f"int8_bytes_ratio="
+              f"{row['quant']['fused_bytes_ratio_vs_fp32']:.3f}")
     print(f"wrote {args.out}")
     sys.exit(status)
 

@@ -1,0 +1,160 @@
+"""Symmetric per-group int8 weight quantization for the sparse-MLP pipeline
+(DESIGN.md §13).
+
+Scale layout — each matrix is grouped along its OWN matmul reduction axis,
+so the fused kernel can apply scales in the accumulator epilogue instead of
+dequantizing weight tiles in VMEM:
+
+* ``wg_t`` / ``wu_t`` (k, d) contract over ``d`` → quant groups of
+  ``quant_group_size`` along d, scales ``(k, d/qg)`` float32.  The kernel
+  splits each row-group dot into d/qg sub-contractions and accumulates
+  ``partial · scale`` in ascending group order (:func:`_qdot` in
+  ``kernels.sparse_mlp_fused`` — the oracle calls the same helper).
+* ``wd_t`` (k, d) contracts over ``k`` → quant groups of qg along k, scales
+  ``(k/qg, d)`` float32.  ``quant_group_size % group_size == 0`` guarantees
+  every G-row selection tile lies inside ONE quant row-group, so dequant is
+  a pure epilogue multiply ``(h @ Wq) * s_row`` — one scale row per tile.
+
+The sign-bit predictor stays fp by construction: ``sign_wg`` is packed from
+the ORIGINAL float weights at quantization time, so predicted selection
+sets are identical fp-vs-int8 (property-pinned in tests/test_quantize.py).
+The zero-crossing edge case — a small-magnitude weight that rounds to q=0 —
+dequantizes to +0.0, which ``predictor.pack_signs`` packs as a POSITIVE bit
+(``v < 0``); deriving the sign pack from the originals sidesteps the flip.
+
+Rounding is ``jnp.round`` (half-to-even); clipping is symmetric to
+``±QMAX`` (127) so the int8 grid has no asymmetric -128 outlier.
+
+All helpers work through stacked leading dims (scan-over-layer-groups
+leaves like ``(p, k, d)``) by operating on the trailing two axes only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import predictor as P
+
+# symmetric int8 grid: q ∈ [-127, 127] (no -128 — keeps |deq| <= absmax)
+QMAX = 127.0
+
+# quantized sparse-MLP leaf names, in pytree order (``wu_*`` only when the
+# MLP is gated); a node carries EITHER these + ``sign_wg`` OR the fp
+# ``wg_t/wu_t/wd_t`` leaves — never both
+QUANT_KEYS = ("wg_q", "wg_s", "wu_q", "wu_s", "wd_q", "wd_s")
+
+
+def check_quant_dims(d: int, k: int, group_size: int, qg: int) -> None:
+    """Validate the quant tiling (raises ValueError — same contract as the
+    kernel ``choose_*`` helpers, so ops wrappers can fall back cleanly)."""
+    if qg < 1:
+        raise ValueError(f"quant_group_size must be >= 1, got {qg}")
+    if d % qg:
+        raise ValueError(
+            f"d={d} not divisible by quant_group_size={qg} (wg/wu scales "
+            "group along d, DESIGN.md §13)")
+    if k % qg:
+        raise ValueError(
+            f"k={k} not divisible by quant_group_size={qg} (wd scales "
+            "group along k, DESIGN.md §13)")
+    if qg % group_size:
+        raise ValueError(
+            f"quant_group_size={qg} not divisible by group_size="
+            f"{group_size} — every selection tile must lie inside one "
+            "quant row-group of wd (DESIGN.md §13)")
+
+
+def quantize_rows(w, qg: int):
+    """Per-(row, d-group) symmetric absmax: (..., k, d) float →
+    (q int8 (..., k, d), scales float32 (..., k, d/qg))."""
+    d = w.shape[-1]
+    if d % qg:
+        raise ValueError(f"d={d} not divisible by quant_group_size={qg}")
+    wf = jnp.asarray(w, jnp.float32)
+    grp = wf.reshape(w.shape[:-1] + (d // qg, qg))
+    s = jnp.max(jnp.abs(grp), axis=-1) / QMAX
+    s = jnp.where(s > 0, s, 1.0)                  # all-zero group: scale 1
+    q = jnp.clip(jnp.round(grp / s[..., None]), -QMAX, QMAX)
+    return q.astype(jnp.int8).reshape(w.shape), s
+
+
+def quantize_cols(w, qg: int):
+    """Per-(k-group, column) symmetric absmax: (..., k, d) float →
+    (q int8 (..., k, d), scales float32 (..., k/qg, d))."""
+    k = w.shape[-2]
+    if k % qg:
+        raise ValueError(f"k={k} not divisible by quant_group_size={qg}")
+    wf = jnp.asarray(w, jnp.float32)
+    grp = wf.reshape(w.shape[:-2] + (k // qg, qg, w.shape[-1]))
+    s = jnp.max(jnp.abs(grp), axis=-2) / QMAX     # (..., k/qg, d)
+    s = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(grp / s[..., None, :]), -QMAX, QMAX)
+    return q.astype(jnp.int8).reshape(w.shape), s
+
+
+def dequant_rows(q, s):
+    """Pinned-order dequant for row-grouped (wg/wu) leaves: int8 → f32,
+    then multiply by the per-group scale broadcast along d."""
+    d = q.shape[-1]
+    qg = d // s.shape[-1]
+    qf = q.astype(jnp.float32).reshape(q.shape[:-1] + (d // qg, qg))
+    return (qf * s[..., None]).reshape(q.shape)
+
+
+def dequant_cols(q, s):
+    """Pinned-order dequant for column-grouped (wd) leaves."""
+    k = q.shape[-2]
+    qg = k // s.shape[-2]
+    qf = q.astype(jnp.float32).reshape(
+        q.shape[:-2] + (k // qg, qg, q.shape[-1]))
+    return (qf * s[..., None, :]).reshape(q.shape)
+
+
+def is_quantized(params: dict) -> bool:
+    return "wg_q" in params
+
+
+def quant_group_size_of(params: dict) -> int:
+    """Recover qg from the leaf shapes (the config value is a load-time
+    knob; the serving params are self-describing)."""
+    return params["wg_q"].shape[-1] // params["wg_s"].shape[-1]
+
+
+def mlp_hidden_rows(params: dict) -> int:
+    """The FFN hidden dim k of an MLP node, fp or quantized."""
+    w = params.get("wg_t")
+    if w is None:
+        w = params["wg_q"]
+    return w.shape[-2]
+
+
+def quantize_mlp_node(node: dict, qg: int, group_size: int = 8) -> dict:
+    """Quantize one sparse-MLP param node in place of its fp leaves.
+
+    ``sign_wg`` is (re)derived from the ORIGINAL fp gate weights before
+    they are dropped — the predictor-invariance anchor.  Non-MLP keys
+    (norm scales, biases) pass through untouched."""
+    wg = node["wg_t"]
+    check_quant_dims(wg.shape[-1], wg.shape[-2], group_size, qg)
+    out = {k: v for k, v in node.items() if k not in ("wg_t", "wu_t",
+                                                      "wd_t")}
+    out["sign_wg"] = P.pack_signs(wg)
+    out["wg_q"], out["wg_s"] = quantize_rows(wg, qg)
+    if node.get("wu_t") is not None:
+        out["wu_q"], out["wu_s"] = quantize_rows(node["wu_t"], qg)
+    out["wd_q"], out["wd_s"] = quantize_cols(node["wd_t"], qg)
+    return out
+
+
+def dense_view(params: dict) -> dict:
+    """Dequantized (f32) view of a quantized MLP node, for the strategies
+    that want plain matrices (dense prefill, the masked audit path, the XLA
+    gather).  fp nodes pass through unchanged.  Op order is pinned
+    (int8→f32, then scale) so every consumer sees identical values."""
+    if "wg_q" not in params:
+        return params
+    out = {k: v for k, v in params.items() if k not in QUANT_KEYS}
+    out["wg_t"] = dequant_rows(params["wg_q"], params["wg_s"])
+    if params.get("wu_q") is not None:
+        out["wu_t"] = dequant_rows(params["wu_q"], params["wu_s"])
+    out["wd_t"] = dequant_cols(params["wd_q"], params["wd_s"])
+    return out

@@ -92,6 +92,18 @@ class SparseInferConfig:
     # (core.selection.clamp_selection).  Empty = uniform shard_capacity.
     # Set by the server's per-shard bucket ladder; not a user knob.
     shard_bucket_caps: tuple = ()
+    # Weight quantization for the sparse-MLP matrices (DESIGN.md §13):
+    # "" = native fp weights; "int8" = symmetric per-group absmax int8,
+    # applied at load time by ``prepare_sparse_params`` /
+    # ``models.*.prepare_sparse``.  The predictor keeps consuming fp
+    # sign-packs derived from the ORIGINAL weights at quantization time, so
+    # predicted selection sets are identical fp-vs-int8 by construction.
+    weight_dtype: str = ""
+    # Quantization group width: wg/wu scales group along d, wd scales along
+    # k; must divide both and be a multiple of group_size (so every
+    # selection tile lies inside one wd quant row-group — the epilogue-
+    # fusion precondition, core/quantize.py).
+    quant_group_size: int = 128
 
     def alpha_schedule(self) -> P.AlphaSchedule:
         return P.AlphaSchedule(self.alpha_base, self.alpha_early,
@@ -171,8 +183,16 @@ def init_gated_mlp(key: jax.Array, d: int, k: int, dtype=jnp.bfloat16,
     return params
 
 
-def prepare_sparse_params(params: dict) -> dict:
-    """Offline step ① (paper Fig. 1): pack gate-weight sign bits at load time."""
+def prepare_sparse_params(params: dict,
+                          cfg: Optional[SparseInferConfig] = None) -> dict:
+    """Offline step ① (paper Fig. 1): pack gate-weight sign bits at load
+    time.  With ``cfg.weight_dtype == "int8"`` the fp MLP matrices are
+    replaced by symmetric per-group int8 leaves + scales (DESIGN.md §13);
+    the sign pack is derived from the ORIGINAL fp weights either way."""
+    if cfg is not None and cfg.weight_dtype == "int8":
+        from repro.core import quantize as Q
+        return Q.quantize_mlp_node(params, cfg.quant_group_size,
+                                   cfg.group_size)
     out = dict(params)
     out["sign_wg"] = P.pack_signs(params["wg_t"])
     return out
@@ -251,6 +271,7 @@ def _stats(shape: tuple = (), **kw) -> dict:
 def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
               return_stats: bool = False):
     """Baseline gated MLP: (σ(x·Wg) ⊙ (x·Wu)) · Wd^T  (paper eq. 1)."""
+    params = _dense_params(params)
     act = _act(cfg)
     g1 = act(x @ params["wg_t"].T.astype(x.dtype))
     h1 = g1
@@ -263,6 +284,16 @@ def dense_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
                          actual_density=jnp.mean(g1 > 0, axis=-1),
                          union_demand_frac=1.0)
     return y
+
+
+def _dense_params(params: dict) -> dict:
+    """fp view of a (possibly int8-quantized) MLP node for the strategies
+    that want plain matrices — dense prefill, the masked audit, the XLA
+    gather (DESIGN.md §13).  fp nodes pass through untouched."""
+    if "wg_q" not in params:
+        return params
+    from repro.core import quantize as Q
+    return Q.dense_view(params)
 
 
 def _margins(params: dict, x: jax.Array, alpha) -> jax.Array:
@@ -285,6 +316,7 @@ def masked_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     ``alpha`` may be a scalar or an array broadcasting against the token
     dims of ``x`` (per-slot SLA alphas, DESIGN.md §5).
     """
+    params = _dense_params(params)
     act = _act(cfg)
     m = _margins(params, x, alpha)          # (..., k)
     keep = (m <= 0).astype(x.dtype)
@@ -320,6 +352,7 @@ def gather_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     device gathers only the rows ITS tokens need; weights are replicated
     across data so the batched gather partitions on the index operand).
     """
+    params = _dense_params(params)
     act = _act(cfg)
     squeeze = x.ndim == 1
     xb = x[None] if squeeze else x
@@ -448,7 +481,8 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     squeeze = x.ndim == 1
     xb = x[None] if squeeze else x
     b, d = xb.shape
-    k = params["wg_t"].shape[0]
+    quantized = "wg_q" in params               # int8 leaves (DESIGN.md §13)
+    k = (params["wg_q"] if quantized else params["wg_t"]).shape[0]
     g = cfg.group_size
     cap = cfg.capacity(k)
 
@@ -462,19 +496,32 @@ def pallas_mlp(params: dict, x: jax.Array, cfg: SparseInferConfig,
     chunked = b > cfg.sparse_max_batch
     predict = (kops.predict_chunk_group_margins if chunked
                else kops.predict_group_margins)
-    fused = kops.fused_sparse_mlp_chunk if chunked else kops.fused_sparse_mlp
     gm_tok, pred_cnt = predict(
         sign_wg, xb, d, a, group_size=g, interpret=interpret)
     gm = S.union_margin(gm_tok)                   # (k/g,) batch/chunk union
     sel, sstats = S.capacity_select_with_stats(gm, cap)
 
-    out = fused(
-        xb, params["wg_t"], params.get("wu_t"), params["wd_t"],
-        sel.indices, sel.count, gm_tok if return_stats else None,
-        group_size=g, activation=cfg.activation,
-        fatrelu_threshold=cfg.fatrelu_threshold,
-        collect_stats=return_stats, interpret=interpret,
-    )
+    if quantized:
+        fused = (kops.fused_sparse_mlp_chunk_q if chunked
+                 else kops.fused_sparse_mlp_q)
+        out = fused(
+            xb, params["wg_q"], params["wg_s"], params.get("wu_q"),
+            params.get("wu_s"), params["wd_q"], params["wd_s"],
+            sel.indices, sel.count, gm_tok if return_stats else None,
+            group_size=g, activation=cfg.activation,
+            fatrelu_threshold=cfg.fatrelu_threshold,
+            collect_stats=return_stats, interpret=interpret,
+        )
+    else:
+        fused = (kops.fused_sparse_mlp_chunk if chunked
+                 else kops.fused_sparse_mlp)
+        out = fused(
+            xb, params["wg_t"], params.get("wu_t"), params["wd_t"],
+            sel.indices, sel.count, gm_tok if return_stats else None,
+            group_size=g, activation=cfg.activation,
+            fatrelu_threshold=cfg.fatrelu_threshold,
+            collect_stats=return_stats, interpret=interpret,
+        )
     if not return_stats:
         return out[0] if squeeze else out
     y, tel = out

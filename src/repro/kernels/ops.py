@@ -188,6 +188,89 @@ def fused_sparse_mlp_chunk(x: jax.Array,
         interpret=interp, groups_per_step=groups_per_step, block_rows=bt)
 
 
+def fused_sparse_mlp_q(x: jax.Array,
+                       wg_q: jax.Array,
+                       wg_s: jax.Array,
+                       wu_q: Optional[jax.Array],
+                       wu_s: Optional[jax.Array],
+                       wd_q: jax.Array,
+                       wd_s: jax.Array,
+                       sel_indices: jax.Array,
+                       sel_count: jax.Array,
+                       gm_tok: Optional[jax.Array] = None,
+                       *,
+                       group_size: int = 8,
+                       activation: str = "relu",
+                       fatrelu_threshold: float = 0.0,
+                       collect_stats: bool = False,
+                       interpret: Optional[bool] = None,
+                       groups_per_step: int = 0):
+    """int8-weight fused sparse MLP (DESIGN.md §13): same contract as
+    :func:`fused_sparse_mlp` with int8 tiles + per-group f32 scales
+    (``wg_s``/``wu_s`` (k, d/qg) row-grouped, ``wd_s`` (k/qg, d) column-
+    grouped).  Tilings the quant layout can't honor (qg not dividing d/k,
+    or not a multiple of the selection group) fall back to the bitwise jnp
+    oracle — same explicit-error contract as the fp wrappers.
+    """
+    from repro.core.quantize import check_quant_dims
+    interp = _resolve_interpret(interpret)
+    d = x.shape[1]
+    k = wg_q.shape[0]
+    qg = d // wg_s.shape[1]
+    try:
+        check_quant_dims(d, k, group_size, qg)
+    except ValueError:   # degenerate quant tiling: explicit error -> oracle
+        return ref.fused_sparse_mlp_q_ref(
+            x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s, sel_indices, sel_count,
+            gm_tok, group_size=group_size, activation=activation,
+            fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats)
+    return _fused.fused_sparse_mlp_q(
+        x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s, sel_indices, sel_count,
+        gm_tok, group_size=group_size, activation=activation,
+        fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
+        interpret=interp, groups_per_step=groups_per_step)
+
+
+def fused_sparse_mlp_chunk_q(x: jax.Array,
+                             wg_q: jax.Array,
+                             wg_s: jax.Array,
+                             wu_q: Optional[jax.Array],
+                             wu_s: Optional[jax.Array],
+                             wd_q: jax.Array,
+                             wd_s: jax.Array,
+                             sel_indices: jax.Array,
+                             sel_count: jax.Array,
+                             gm_tok: Optional[jax.Array] = None,
+                             *,
+                             group_size: int = 8,
+                             activation: str = "relu",
+                             fatrelu_threshold: float = 0.0,
+                             collect_stats: bool = False,
+                             interpret: Optional[bool] = None,
+                             groups_per_step: int = 0):
+    """Row-tiled int8 fused sparse MLP for prefill chunks (DESIGN.md
+    §9/§13); falls back to the bitwise quant oracle on degenerate quant or
+    row tilings."""
+    from repro.core.quantize import check_quant_dims
+    interp = _resolve_interpret(interpret)
+    d = x.shape[1]
+    k = wg_q.shape[0]
+    qg = d // wg_s.shape[1]
+    try:
+        check_quant_dims(d, k, group_size, qg)
+        bt = _fused.choose_block_rows(x.shape[0], d)
+    except ValueError:   # degenerate tiling: explicit error -> oracle
+        return ref.fused_sparse_mlp_chunk_q_ref(
+            x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s, sel_indices, sel_count,
+            gm_tok, group_size=group_size, activation=activation,
+            fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats)
+    return _fused.fused_sparse_mlp_chunk_q(
+        x, wg_q, wg_s, wu_q, wu_s, wd_q, wd_s, sel_indices, sel_count,
+        gm_tok, group_size=group_size, activation=activation,
+        fatrelu_threshold=fatrelu_threshold, collect_stats=collect_stats,
+        interpret=interp, groups_per_step=groups_per_step, block_rows=bt)
+
+
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     table: jax.Array, lengths: jax.Array,
                     k_scale: Optional[jax.Array] = None,

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -141,6 +143,99 @@ def fused_sparse_mlp_chunk_ref(x: jax.Array,
                                   activation=activation,
                                   fatrelu_threshold=fatrelu_threshold)
     return y, tel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "activation", "fatrelu_threshold",
+                     "collect_stats"))
+def fused_sparse_mlp_q_ref(x: jax.Array,
+                           wg_q: jax.Array,
+                           wg_s: jax.Array,
+                           wu_q: jax.Array | None,
+                           wu_s: jax.Array | None,
+                           wd_q: jax.Array,
+                           wd_s: jax.Array,
+                           sel_indices: jax.Array,
+                           sel_count: jax.Array,
+                           gm_tok: jax.Array | None = None,
+                           *,
+                           group_size: int = 8,
+                           activation: str = "relu",
+                           fatrelu_threshold: float = 0.0,
+                           collect_stats: bool = False):
+    """Oracle for kernels.sparse_mlp_fused.fused_sparse_mlp_q — BITWISE.
+
+    Unlike the fp oracle (one big einsum, allclose target), this one
+    replays the kernel's exact op order: a ``fori_loop`` over selection
+    steps, each step gathering the int8 tiles + scale tiles and running
+    the SAME :func:`_qdot` / epilogue-scale / telemetry helpers the pallas
+    kernel runs — so pallas-vs-ref parity is bitwise by construction
+    (DESIGN.md §13).  Steps past ``sel_count`` keep the accumulator
+    untouched via ``jnp.where(valid, y + step, y)`` (matching ``pl.when``:
+    no -0.0/+0.0 drift from adding a masked step).  The whole oracle is
+    jitted: bitwise parity only holds compiled-vs-compiled (the eager
+    per-op path contracts FMAs differently).
+    """
+    from repro.kernels.sparse_mlp_fused import _qdot, _telemetry_delta
+
+    b, d = x.shape
+    k = wg_q.shape[0]
+    g = group_size
+    qg = d // wg_s.shape[1]
+    qpg = qg // g                       # selection groups per wd row-group
+    cap = sel_indices.shape[0]
+    act = get_activation(
+        "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
+        else activation, fatrelu_threshold)
+    assert k % g == 0 and qg % g == 0 and k % qg == 0
+
+    sel = sel_indices.astype(jnp.int32)
+    cnt = sel_count.astype(jnp.int32)
+    xf = x.astype(jnp.float32)
+    gmf = gm_tok.astype(jnp.float32) if gm_tok is not None else None
+
+    def step(n, carry):
+        y, tel = carry
+        idx = sel[n]
+
+        def tile(w, s=None):
+            t = jax.lax.dynamic_slice_in_dim(w, idx * g, g, axis=0)
+            if s is None:
+                return t
+            return t, jax.lax.dynamic_slice_in_dim(s, idx * g, g, axis=0)
+
+        ga = act(_qdot(xf, *tile(wg_q, wg_s), qg))
+        h = ga * _qdot(xf, *tile(wu_q, wu_s), qg) if wu_q is not None else ga
+        yd = jax.lax.dot_general(
+            h, tile(wd_q).astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        wds_row = jax.lax.dynamic_slice_in_dim(wd_s, idx // qpg, 1, axis=0)
+        valid = n < cnt
+        y = jnp.where(valid, y + yd * wds_row, y)
+        if collect_stats:
+            gm_col = jax.lax.dynamic_slice_in_dim(gmf, idx, 1, axis=1)
+            tel = jnp.where(valid,
+                            tel + _telemetry_delta(ga, gm_col <= 0), tel)
+        return y, tel
+
+    # fori_loop (not a python loop): one compiled step body keeps the jit
+    # cost O(1) in the capacity, and jitting is what makes the parity
+    # BITWISE — the eager per-op path contracts FMAs differently than the
+    # compiled kernel (same caveat as predict_group_margins_ref's tests)
+    y, tel = jax.lax.fori_loop(
+        0, cap, step, (jnp.zeros((b, d), jnp.float32),
+                       jnp.zeros((b, 3), jnp.int32)))
+    if collect_stats:
+        return y, tel
+    return y
+
+
+def fused_sparse_mlp_chunk_q_ref(*args, **kw):
+    """Oracle for kernels.sparse_mlp_fused.fused_sparse_mlp_chunk_q: row
+    tiling never changes per-row math, so the decode oracle IS the chunk
+    oracle (same argument as :func:`predict_chunk_group_margins_ref`)."""
+    return fused_sparse_mlp_q_ref(*args, **kw)
 
 
 # ------------------------------------------------------- paged attention --

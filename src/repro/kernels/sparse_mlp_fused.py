@@ -121,6 +121,85 @@ def _make_kernel(activation: str, fatrelu_threshold: float, gated: bool,
     return kernel
 
 
+def _qdot(x, wq, s, qgs: int):
+    """Quantized row-group dot with epilogue dequant (DESIGN.md §13):
+    ``sum_q (x[:, q] @ wq[:, q]ᵀ) * s[:, q]`` accumulated in ascending
+    quant-group order.  ``x`` (B, d) f32, ``wq`` (G, d) int8, ``s`` (G,
+    d/qgs) f32 → (B, G) f32.  The jnp oracle calls this SAME helper, so
+    pallas-vs-ref parity is bitwise by construction."""
+    nq = s.shape[-1]
+    acc = None
+    for q in range(nq):
+        sl = slice(q * qgs, (q + 1) * qgs)
+        part = jax.lax.dot_general(
+            x[:, sl], wq[:, sl].astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (B, G)
+        term = part * s[:, q][None, :]
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _make_kernel_q(activation: str, fatrelu_threshold: float, gated: bool,
+                   collect_stats: bool, groups_per_step: int = 1,
+                   sel_axis: int = 0, qgs: int = 128):
+    """int8-weight twin of :func:`_make_kernel`: per sub-step the weight
+    tiles arrive as int8 + their fp scale tiles, and dequant folds into the
+    accumulator epilogue — gate/up via :func:`_qdot`, down-proj as a pure
+    ``(h @ Wq) * s_row`` multiply (the selection tile lies inside one quant
+    row-group, so one (1, d) scale row covers it).  Telemetry is the
+    UNCHANGED :func:`_telemetry_delta` fold over the (quantized) gate."""
+    act = get_activation(
+        "fatrelu" if (activation == "fatrelu" or fatrelu_threshold > 0.0)
+        else activation, fatrelu_threshold)
+    per = 2 * (3 if gated else 2) + (1 if collect_stats else 0)
+
+    def kernel(sel_ref, cnt_ref, *refs):
+        x_ref = refs[0]
+        tiles = refs[1:1 + groups_per_step * per]
+        rest = refs[1 + groups_per_step * per:]
+        if collect_stats:
+            y_ref, tel_ref = rest
+        else:
+            (y_ref,) = rest
+            tel_ref = None
+        i = pl.program_id(sel_axis)
+
+        @pl.when(i == 0)
+        def _init():
+            y_ref[...] = jnp.zeros_like(y_ref)
+            if collect_stats:
+                tel_ref[...] = jnp.zeros_like(tel_ref)
+
+        for j in range(groups_per_step):
+            base = j * per
+            wgq_ref, wgs_ref = tiles[base], tiles[base + 1]
+            wuq_ref = tiles[base + 2] if gated else None
+            wus_ref = tiles[base + 3] if gated else None
+            off = 4 if gated else 2
+            wdq_ref, wds_ref = tiles[base + off], tiles[base + off + 1]
+            gm_ref = tiles[base + per - 1] if collect_stats else None
+
+            @pl.when(i * groups_per_step + j < cnt_ref[0])
+            def _step(wgq_ref=wgq_ref, wgs_ref=wgs_ref, wuq_ref=wuq_ref,
+                      wus_ref=wus_ref, wdq_ref=wdq_ref, wds_ref=wds_ref,
+                      gm_ref=gm_ref):
+                x = x_ref[...].astype(jnp.float32)           # (B, d)
+                ga = act(_qdot(x, wgq_ref[...], wgs_ref[...], qgs))
+                if wuq_ref is not None:
+                    h = ga * _qdot(x, wuq_ref[...], wus_ref[...], qgs)
+                else:
+                    h = ga
+                yd = jax.lax.dot_general(
+                    h, wdq_ref[...].astype(jnp.float32),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)      # (B, d)
+                y_ref[...] += yd * wds_ref[...]              # epilogue scale
+                if collect_stats:
+                    tel_ref[...] += _telemetry_delta(ga, gm_ref[...] <= 0)
+    return kernel
+
+
 def mlp_groups_per_step(cap_groups: int, group_size: int) -> int:
     """Per-bucket weight-tile height for the fused MLP (DESIGN.md §2/§8):
     how many SELECTED groups one grid step fetches and computes.  Wide
@@ -218,6 +297,103 @@ def fused_sparse_mlp(x: jax.Array,
     )
     kernel = _make_kernel(activation, fatrelu_threshold, gated,
                           collect_stats, gps)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sel_indices.astype(jnp.int32), cnt, *operands)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "activation", "fatrelu_threshold",
+                     "collect_stats", "interpret", "groups_per_step"))
+def fused_sparse_mlp_q(x: jax.Array,
+                       wg_q: jax.Array,
+                       wg_s: jax.Array,
+                       wu_q: jax.Array | None,
+                       wu_s: jax.Array | None,
+                       wd_q: jax.Array,
+                       wd_s: jax.Array,
+                       sel_indices: jax.Array,
+                       sel_count: jax.Array,
+                       gm_tok: jax.Array | None = None,
+                       *,
+                       group_size: int = 8,
+                       activation: str = "relu",
+                       fatrelu_threshold: float = 0.0,
+                       collect_stats: bool = False,
+                       interpret: bool = True,
+                       groups_per_step: int = 0):
+    """int8-weight twin of :func:`fused_sparse_mlp` (DESIGN.md §13).
+
+    ``w*_q``: int8 (k, d) neuron-major; ``wg_s``/``wu_s``: f32 (k, d/qg)
+    row-grouped scales; ``wd_s``: f32 (k/qg, d) column-grouped scales.
+    Each grid step DMAs the selected int8 row-groups PLUS their scale
+    tiles — the wd scale tile is the single (1, d) row covering the
+    selection group (``qg % group_size == 0`` pins it to one row-group).
+    Dequant happens in the accumulator epilogue; HBM weight traffic is
+    ~1 byte/elt + the thin scale stream (see :func:`kernel_hbm_bytes`).
+    """
+    b, d = x.shape
+    k = wg_q.shape[0]
+    g = group_size
+    nq = wg_s.shape[1]
+    assert d % nq == 0
+    qg = d // nq
+    assert k % g == 0 and qg % g == 0 and k % qg == 0, (
+        f"bad quant tiling: k={k} d={d} g={g} qg={qg} (DESIGN.md §13)")
+    qpg = qg // g                       # selection groups per quant row-group
+    cap = sel_indices.shape[0]
+    gated = wu_q is not None
+    if collect_stats:
+        assert gm_tok is not None and gm_tok.shape == (b, k // g), (
+            "collect_stats needs per-token group margins (B, k/G)")
+    gps = groups_per_step or mlp_groups_per_step(cap, g)
+    if cap % gps:
+        raise ValueError(
+            f"groups_per_step={gps} must divide the selection capacity "
+            f"{cap} (per-bucket tiling, DESIGN.md §2)")
+
+    cnt = jnp.reshape(sel_count.astype(jnp.int32), (1,))
+    in_specs = [pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0))]
+    operands = [x]
+    for j in range(gps):
+        w_spec = pl.BlockSpec(
+            (g, d), lambda i, sel, cnt, j=j: (sel[i * gps + j], 0))
+        s_spec = pl.BlockSpec(
+            (g, nq), lambda i, sel, cnt, j=j: (sel[i * gps + j], 0))
+        in_specs += [w_spec, s_spec]
+        operands += [wg_q, wg_s]
+        if gated:
+            in_specs += [w_spec, s_spec]
+            operands += [wu_q, wu_s]
+        in_specs += [w_spec, pl.BlockSpec(
+            (1, d), lambda i, sel, cnt, j=j: (sel[i * gps + j] // qpg, 0))]
+        operands += [wd_q, wd_s]
+        if collect_stats:
+            in_specs.append(pl.BlockSpec(
+                (b, 1), lambda i, sel, cnt, j=j: (0, sel[i * gps + j])))
+            operands.append(gm_tok.astype(jnp.float32))
+    out_specs = pl.BlockSpec((b, d), lambda i, sel, cnt: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    if collect_stats:
+        out_specs = [out_specs,
+                     pl.BlockSpec((b, len(TELEMETRY_COLS)),
+                                  lambda i, sel, cnt: (0, 0))]
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((b, len(TELEMETRY_COLS)),
+                                          jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(cap // gps,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    kernel = _make_kernel_q(activation, fatrelu_threshold, gated,
+                            collect_stats, gps, qgs=qg)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -328,9 +504,109 @@ def fused_sparse_mlp_chunk(x: jax.Array,
     )(sel_indices.astype(jnp.int32), cnt, *operands)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "activation", "fatrelu_threshold",
+                     "collect_stats", "interpret", "groups_per_step",
+                     "block_rows"))
+def fused_sparse_mlp_chunk_q(x: jax.Array,
+                             wg_q: jax.Array,
+                             wg_s: jax.Array,
+                             wu_q: jax.Array | None,
+                             wu_s: jax.Array | None,
+                             wd_q: jax.Array,
+                             wd_s: jax.Array,
+                             sel_indices: jax.Array,
+                             sel_count: jax.Array,
+                             gm_tok: jax.Array | None = None,
+                             *,
+                             group_size: int = 8,
+                             activation: str = "relu",
+                             fatrelu_threshold: float = 0.0,
+                             collect_stats: bool = False,
+                             interpret: bool = True,
+                             groups_per_step: int = 0,
+                             block_rows: int = 0):
+    """Row-tiled int8 twin of :func:`fused_sparse_mlp_chunk` (DESIGN.md
+    §9/§13): grid (row_blocks, cap/gps), selection on the fast axis, int8
+    tiles + scale tiles DMA'd per selected group exactly as in
+    :func:`fused_sparse_mlp_q` — per-row results bitwise-equal to it."""
+    b, d = x.shape
+    k = wg_q.shape[0]
+    g = group_size
+    nq = wg_s.shape[1]
+    assert d % nq == 0
+    qg = d // nq
+    assert k % g == 0 and qg % g == 0 and k % qg == 0, (
+        f"bad quant tiling: k={k} d={d} g={g} qg={qg} (DESIGN.md §13)")
+    qpg = qg // g
+    cap = sel_indices.shape[0]
+    gated = wu_q is not None
+    if collect_stats:
+        assert gm_tok is not None and gm_tok.shape == (b, k // g), (
+            "collect_stats needs per-token group margins (B, k/G)")
+    gps = groups_per_step or mlp_groups_per_step(cap, g)
+    if cap % gps:
+        raise ValueError(
+            f"groups_per_step={gps} must divide the selection capacity "
+            f"{cap} (per-bucket tiling, DESIGN.md §2)")
+    bt = block_rows or choose_block_rows(b, d)
+    if b % bt:
+        raise ValueError(f"block_rows={bt} must divide the chunk rows {b}")
+
+    cnt = jnp.reshape(sel_count.astype(jnp.int32), (1,))
+    in_specs = [pl.BlockSpec((bt, d), lambda r, i, sel, cnt: (r, 0))]
+    operands = [x]
+    for j in range(gps):
+        w_spec = pl.BlockSpec(
+            (g, d), lambda r, i, sel, cnt, j=j: (sel[i * gps + j], 0))
+        s_spec = pl.BlockSpec(
+            (g, nq), lambda r, i, sel, cnt, j=j: (sel[i * gps + j], 0))
+        in_specs += [w_spec, s_spec]
+        operands += [wg_q, wg_s]
+        if gated:
+            in_specs += [w_spec, s_spec]
+            operands += [wu_q, wu_s]
+        in_specs += [w_spec, pl.BlockSpec(
+            (1, d),
+            lambda r, i, sel, cnt, j=j: (sel[i * gps + j] // qpg, 0))]
+        operands += [wd_q, wd_s]
+        if collect_stats:
+            in_specs.append(pl.BlockSpec(
+                (bt, 1),
+                lambda r, i, sel, cnt, j=j: (r, sel[i * gps + j])))
+            operands.append(gm_tok.astype(jnp.float32))
+    out_specs = pl.BlockSpec((bt, d), lambda r, i, sel, cnt: (r, 0))
+    out_shape = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    if collect_stats:
+        out_specs = [out_specs,
+                     pl.BlockSpec((bt, len(TELEMETRY_COLS)),
+                                  lambda r, i, sel, cnt: (r, 0))]
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((b, len(TELEMETRY_COLS)),
+                                          jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b // bt, cap // gps),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    kernel = _make_kernel_q(activation, fatrelu_threshold, gated,
+                            collect_stats, gps, sel_axis=1, qgs=qg)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sel_indices.astype(jnp.int32), cnt, *operands)
+
+
 def kernel_hbm_bytes(b: int, d: int, k: int, cap_groups: int, group_size: int,
                      gated: bool = True, weight_bytes: int = 2,
-                     collect_stats: bool = True) -> dict:
+                     collect_stats: bool = True, *,
+                     weight_dtype: str = "", quant_group_size: int = 128,
+                     act_bytes: int | None = None) -> dict:
     """Analytic HBM traffic model for the two-dispatch pipeline vs dense.
 
     Models the single-dispatch predictor (packed weight signs + raw input
@@ -339,29 +615,54 @@ def kernel_hbm_bytes(b: int, d: int, k: int, cap_groups: int, group_size: int,
     the given capacity bucket, including the telemetry outputs.  The
     previous model undercounted predictor traffic (it ignored the raw-input
     read and the margin round-trip) and overstated the reduction.
+
+    Weight traffic is itemized per weight dtype (DESIGN.md §13):
+    ``weight_dtype="int8"`` streams 1-byte tiles plus the f32 scale vectors
+    (row-grouped ``(rows, d/qg)`` for gate/up, one ``(1, d)`` row per
+    selected group for down-proj); activation traffic uses ``act_bytes``
+    (defaults to ``weight_bytes`` for back-compat with the fp model, where
+    weights and activations share a dtype).
     """
     n_mats = 3 if gated else 2
     w_words = -(-d // 32)
     n_groups = max(1, k // group_size)
     cap_groups = min(cap_groups, n_groups)
     sel_rows = cap_groups * group_size
+    ab = weight_bytes if act_bytes is None else act_bytes
 
-    dense = n_mats * k * d * weight_bytes + b * d * weight_bytes * 2
+    if weight_dtype == "int8":
+        qg = quant_group_size
+        n_row_mats = n_mats - 1          # row-grouped (wg + optional wu)
+        dense_w = n_mats * k * d
+        dense_s = n_row_mats * k * (d // qg) * 4 + (k // qg) * d * 4
+        fused_w = n_mats * sel_rows * d
+        # per selected group: (G, d/qg) gate/up scale tiles + ONE (1, d)
+        # down-proj scale row (qg % G == 0 pins the tile to a row-group)
+        fused_s = (n_row_mats * sel_rows * (d // qg) * 4
+                   + cap_groups * d * 4)
+    else:
+        dense_w = n_mats * k * d * weight_bytes
+        dense_s = 0
+        fused_w = n_mats * sel_rows * d * weight_bytes
+        fused_s = 0
+
+    dense = dense_w + dense_s + b * d * ab * 2
 
     # dispatch 1 — fused predictor: packed W signs + raw x in; per-token
     # group margins + per-slot counts out (packed x never touches HBM)
     margins_bytes = b * n_groups * 4
     predictor = (k * w_words * 4            # packed sign matrix read
-                 + b * d * weight_bytes     # raw input read (packed in VMEM)
+                 + b * d * ab               # raw input read (packed in VMEM)
                  + margins_bytes            # (B, k/G) margins written
                  + b * 4)                   # per-slot predicted counts
     # XLA selection epilogue re-reads the margins (union + top-C)
     selection = margins_bytes + cap_groups * 8
 
-    # dispatch 2 — fused MLP: selected row-groups + x in, y out; telemetry
-    # adds the per-step own-margin prefetch and the (B, 3) counters
-    fused = (n_mats * sel_rows * d * weight_bytes
-             + b * d * weight_bytes         # x read again by the MLP kernel
+    # dispatch 2 — fused MLP: selected row-groups (+ scales) + x in, y out;
+    # telemetry adds the per-step own-margin prefetch and the (B, 3)
+    # counters
+    fused = (fused_w + fused_s
+             + b * d * ab                   # x read again by the MLP kernel
              + b * d * 4)                   # f32 accumulator written
     telemetry = (b * cap_groups * 4 + b * len(TELEMETRY_COLS) * 4
                  if collect_stats else 0)
@@ -370,6 +671,8 @@ def kernel_hbm_bytes(b: int, d: int, k: int, cap_groups: int, group_size: int,
     return {
         "dense_bytes": dense,
         "fused_bytes": fused,
+        "fused_weight_bytes": fused_w,
+        "fused_scale_bytes": fused_s,
         "predictor_bytes": predictor,
         "selection_bytes": selection,
         "telemetry_bytes": telemetry,
@@ -377,4 +680,5 @@ def kernel_hbm_bytes(b: int, d: int, k: int, cap_groups: int, group_size: int,
         "reduction": dense / total,
         "dispatches": 2,
         "cap_groups": cap_groups,
+        "weight_dtype": weight_dtype or f"fp{8 * weight_bytes}",
     }

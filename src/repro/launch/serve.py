@@ -162,6 +162,17 @@ def main() -> None:
                     help="defer admissions while pool pressure >= this "
                          "fraction (1.0 = disabled; useful range "
                          "0.8-0.95)")
+    # int8 weight quantization (DESIGN.md §13): symmetric per-group absmax
+    # over the sparse-MLP matrices, applied at load time; the predictor
+    # keeps fp sign-packs so selection sets are identical fp-vs-int8
+    ap.add_argument("--weight-dtype", default="", choices=("", "int8"),
+                    help="quantize the sparse-MLP weights at load time "
+                         "('int8' streams 1-byte tiles + per-group scales "
+                         "through the fused kernels; '' = native fp)")
+    ap.add_argument("--quant-group-size", type=int, default=128,
+                    help="quantization group width (must divide d_model "
+                         "and d_ff and be a multiple of the selection "
+                         "group size)")
     # first-class observability (DESIGN.md §12): any sink flag enables the
     # metrics hub; --metrics alone enables the in-memory instruments only
     ap.add_argument("--metrics", action="store_true",
@@ -192,6 +203,10 @@ def main() -> None:
         buckets = tuple(float(v) for v in args.capacity_buckets.split(","))
         cfg = cfg.replace(sparse=dataclasses.replace(
             cfg.sparse, capacity_buckets=buckets))
+    if args.weight_dtype:
+        cfg = cfg.replace(sparse=dataclasses.replace(
+            cfg.sparse, weight_dtype=args.weight_dtype,
+            quant_group_size=args.quant_group_size))
     if args.sparse_prefill:
         if not args.prefill_chunk:
             raise SystemExit("--sparse-prefill needs --prefill-chunk "

@@ -75,7 +75,7 @@ def param_shapes(cfg: ModelConfig, serve: bool = False):
         params = mod.init_lm(key, cfg)
         if serve:
             if cfg.sparse.enabled:
-                params = mod.prepare_sparse(params)
+                params = mod.prepare_sparse(params, cfg.sparse)
             params = jax.tree.map(
                 lambda x: x.astype(jnp.bfloat16)
                 if jnp.issubdtype(x.dtype, jnp.floating) else x, params)

@@ -940,13 +940,28 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     return logits, caches
 
 
-def prepare_sparse(params: dict) -> dict:
+def prepare_sparse(params: dict, sparse=None) -> dict:
     """Offline step ① for serving: pack gate-weight sign bits everywhere a
-    gated MLP lives (works through stacked leading dims)."""
+    gated MLP lives (works through stacked leading dims).
+
+    With ``sparse.weight_dtype == "int8"`` (a ``SparseInferConfig``) the
+    dense-stack MLP nodes are additionally quantized to symmetric
+    per-group int8 leaves + scales (DESIGN.md §13) — sign packs still come
+    from the ORIGINAL fp weights.  MoE expert nodes (recognized by their
+    sibling ``router`` leaf) stay fp: the MoE dispatch reads the fp
+    matrices directly and carries no sparse-MLP selection machinery."""
+    quant = sparse is not None and getattr(sparse, "weight_dtype", "") == \
+        "int8"
+    if quant:
+        from repro.core import quantize as CQ
+
     def rec(node):
         if isinstance(node, dict):
             out = {k: rec(v) for k, v in node.items()}
             if "wg_t" in node and "wd_t" in node:
+                if quant and "router" not in node:
+                    return CQ.quantize_mlp_node(
+                        out, sparse.quant_group_size, sparse.group_size)
                 out["sign_wg"] = CP.pack_signs(node["wg_t"])
             return out
         return node

@@ -88,6 +88,14 @@ def shard_caps(cfg: SM.SparseInferConfig, k: int) -> tuple[tuple, int]:
     return (cap_l,) * ms, cap_l
 
 
+def _hidden_rows(params: dict) -> int:
+    """FFN hidden dim k of an MLP node, fp or int8-quantized (§13)."""
+    w = params.get("wg_t")
+    if w is None:
+        w = params["wg_q"]
+    return w.shape[0]
+
+
 # ------------------------------------------------------- shard-local math --
 
 def _take_groups(w_t, sel: S.Selection, g: int):
@@ -115,10 +123,12 @@ def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
     """
     act = SM._act(cfg)
     b, d = x.shape
-    k_l = params_l["wg_t"].shape[0]
+    k_l = _hidden_rows(params_l)
     g = cfg.group_size
     a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
-    gated = "wu_t" in params_l and params_l["wu_t"] is not None
+    quantized = "wg_q" in params_l              # int8 leaves (DESIGN.md §13)
+    gated = ((params_l.get("wu_t") is not None)
+             or (params_l.get("wu_q") is not None))
 
     if strategy == "pallas":
         from repro.kernels import ops as kops
@@ -128,12 +138,23 @@ def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
         sel, sstats = S.capacity_select_with_stats(gm, cap_l)
         if cap_eff is not None:
             sel, sstats = S.clamp_selection(sel, sstats, cap_eff)
-        out = kops.fused_sparse_mlp(
-            x, params_l["wg_t"], params_l.get("wu_t"), params_l["wd_t"],
-            sel.indices, sel.count, gm_tok if collect else None,
-            group_size=g, activation=cfg.activation,
-            fatrelu_threshold=cfg.fatrelu_threshold,
-            collect_stats=collect, interpret=interpret)
+        if quantized:
+            out = kops.fused_sparse_mlp_q(
+                x, params_l["wg_q"], params_l["wg_s"],
+                params_l.get("wu_q"), params_l.get("wu_s"),
+                params_l["wd_q"], params_l["wd_s"],
+                sel.indices, sel.count, gm_tok if collect else None,
+                group_size=g, activation=cfg.activation,
+                fatrelu_threshold=cfg.fatrelu_threshold,
+                collect_stats=collect, interpret=interpret)
+        else:
+            out = kops.fused_sparse_mlp(
+                x, params_l["wg_t"], params_l.get("wu_t"),
+                params_l["wd_t"],
+                sel.indices, sel.count, gm_tok if collect else None,
+                group_size=g, activation=cfg.activation,
+                fatrelu_threshold=cfg.fatrelu_threshold,
+                collect_stats=collect, interpret=interpret)
         if not collect:
             return out, None
         y, tel = out
@@ -148,6 +169,12 @@ def _local_mlp(sign_l, params_l, x, cfg: SM.SparseInferConfig, alpha,
                 sstats.predicted.astype(jnp.float32) * gf, (b,)),
         }
         return y, counts
+
+    if quantized:
+        # masked/gather want plain matrices: dequantized f32 view, pinned
+        # op order (core/quantize.py) so values match every other consumer
+        from repro.core import quantize as Q
+        params_l = Q.dense_view(params_l)
 
     m_tok = P.margins(sign_l, P.pack_signs(x), d, a)          # (B, k_l)
 
@@ -253,14 +280,24 @@ def _finalize_stats(totals: dict, shard_real, shard_union, k: int,
     return stats
 
 
+# sliceable MLP leaves: each row count is PROPORTIONAL to k (fp matrices
+# and quant int8 tiles have k rows; wd scales have k/qg rows), so a shard's
+# slice of every leaf is rows [s·r, (s+1)·r) with r = rows // ms
+_SLICE_KEYS = ("wg_t", "wu_t", "wd_t",
+               "wg_q", "wg_s", "wu_q", "wu_s", "wd_q", "wd_s")
+
+
 def _slice_params(params: dict, sign_wg, s: int, ms: int) -> tuple:
-    k = params["wg_t"].shape[0]
+    k = _hidden_rows(params)
     k_l = k // ms
-    sl = slice(s * k_l, (s + 1) * k_l)
-    local = {name: params[name][sl] for name in ("wg_t", "wd_t")}
-    if params.get("wu_t") is not None:
-        local["wu_t"] = params["wu_t"][sl]
-    return sign_wg[sl], local
+    local = {}
+    for name in _SLICE_KEYS:
+        w = params.get(name)
+        if w is None:
+            continue
+        r = w.shape[0] // ms
+        local[name] = w[s * r:(s + 1) * r]
+    return sign_wg[s * k_l:(s + 1) * k_l], local
 
 
 def _count_matrix(counts_by_shard: list) -> jax.Array:
@@ -282,7 +319,7 @@ def emulated_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
     shard_map path uses.  This is the parity reference — and the execution
     path when no mesh is active (so a sharded config runs anywhere)."""
     ds, ms = semantic_grid(cfg)
-    k = params["wg_t"].shape[0]
+    k = _hidden_rows(params)
     caps, cap_l = shard_caps(cfg, k)
     clamp = bool(cfg.shard_bucket_caps)
     sign_wg = params.get("sign_wg")
@@ -342,7 +379,7 @@ def shard_map_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
     telemetry epilogue: one psum of the count matrix over 'model', the
     'data' out_spec reassembling the (B, ·) rows."""
     ds, ms = semantic_grid(cfg)
-    k = params["wg_t"].shape[0]
+    k = _hidden_rows(params)
     caps, cap_l = shard_caps(cfg, k)
     clamp = bool(cfg.shard_bucket_caps)
     axes = R.mesh_axes(mesh)
@@ -360,23 +397,40 @@ def shard_map_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
             f"batch {b} not divisible by dp_shards={ds} (DESIGN.md §8)")
     bt = b // ds
     k_l = k // ms
-    k_dev = k // m_mesh
+    gated = ((params.get("wu_t") is not None)
+             or (params.get("wu_q") is not None))
     a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (b,))
-    gated = params.get("wu_t") is not None
-    wu = params["wu_t"] if gated else params["wg_t"][:0]      # 0-row stub
+    # weight operand list: every leaf row-sharded over 'model' (each row
+    # count proportional to k — see _SLICE_KEYS); ungated configs pass
+    # 0-row stubs so the operand tuple keeps one static arity per layout
+    if "wg_q" in params:                        # int8 leaves (DESIGN.md §13)
+        wnames = ("wg_q", "wg_s", "wu_q", "wu_s", "wd_q", "wd_s")
+        w_ops = tuple(
+            params[n] if (gated or not n.startswith("wu_"))
+            else (params["wg_q"][:0] if n == "wu_q" else params["wg_s"][:0])
+            for n in wnames)
+    else:
+        wnames = ("wg_t", "wu_t", "wd_t")
+        w_ops = (params["wg_t"],
+                 params["wu_t"] if gated else params["wg_t"][:0],
+                 params["wd_t"])
     caps_vec = jnp.asarray(caps, jnp.int32)
 
     row = P_(mname, None)                      # weight row sharding
-    in_specs = (row, row, row, row, P_(dname, None), P_(dname))
+    in_specs = ((row,) * (1 + len(w_ops))
+                + (P_(dname, None), P_(dname)))
     if return_stats:
         out_specs = (P_(dname, None), P_(dname, None), P_(dname, None),
                      P_(dname, None))
     else:
         out_specs = P_(dname, None)
 
-    def body(sign_l, wg_l, wu_l, wd_l, x_l, a_l):
+    def body(sign_l, *rest):
         # x_l: (b/d_mesh, d) = per_d semantic data blocks of bt rows;
-        # weights: (k_dev, d) = per_m semantic shard slices of k_l rows
+        # weights: per-device per_m semantic shard slices (row counts
+        # proportional to the leaf's global k-proportional height)
+        w_ls = rest[:len(wnames)]
+        x_l, a_l = rest[len(wnames):]
         m_base = (jax.lax.axis_index(mname) * per_m if mname is not None
                   else jnp.int32(0))
         y_rows, tot_rows, real_rows, union_rows = [], [], [], []
@@ -386,12 +440,15 @@ def shard_map_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
             parts = []
             counts = []
             for mt in range(per_m):
-                sl = slice(mt * k_l, (mt + 1) * k_l)
-                params_t = {"wg_t": wg_l[sl], "wd_t": wd_l[sl]}
-                if gated:
-                    params_t["wu_t"] = wu_l[sl]
+                params_t = {}
+                for n, w in zip(wnames, w_ls):
+                    if w.shape[0] == 0:
+                        continue
+                    r = w.shape[0] // per_m
+                    params_t[n] = w[mt * r:(mt + 1) * r]
                 cap_eff = caps_vec[m_base + mt] if clamp else None
-                y_s, c_s = _local_mlp(sign_l[sl], params_t, x_t, cfg, a_t,
+                y_s, c_s = _local_mlp(sign_l[mt * k_l:(mt + 1) * k_l],
+                                      params_t, x_t, cfg, a_t,
                                       strategy, cap_l, cap_eff,
                                       return_stats, interpret)
                 parts.append(_pack_partial(y_s, c_s)
@@ -425,7 +482,7 @@ def shard_map_apply(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
 
     fn = _shard_map(body, mesh, in_specs, out_specs)
     with R.shard_local():   # the body works on per-shard values: no nested
-        out = fn(sign_wg, params["wg_t"], wu, params["wd_t"], x, a)
+        out = fn(sign_wg, *w_ops, x, a)
     if not return_stats:
         return out
     y, totals_mat, shard_real, shard_union = out
@@ -447,7 +504,7 @@ def selection_masks(params: dict, x: jax.Array, cfg: SM.SparseInferConfig,
             f"selection_masks is defined for the capacity-selected union "
             f"strategies, got {strategy!r}")
     ds, ms = semantic_grid(cfg)
-    k = params["wg_t"].shape[0]
+    k = _hidden_rows(params)
     g = cfg.group_size
     caps, cap_l = shard_caps(cfg, k)
     clamp = bool(cfg.shard_bucket_caps)

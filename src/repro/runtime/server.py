@@ -274,7 +274,7 @@ class Server:
                 f"{cfg.sparse.dp_shards} (DESIGN.md §8)")
         self.cfg = cfg
         self.scfg = scfg
-        self.params = (model_mod.prepare_sparse(params)
+        self.params = (model_mod.prepare_sparse(params, cfg.sparse)
                        if cfg.sparse.enabled else params)
         if mesh is not None:
             from repro.sharding import sparse as SSP

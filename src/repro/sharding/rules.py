@@ -134,12 +134,16 @@ def _filter_spec(spec, shape, mesh):
 # None = replicated. Templates align to the TRAILING dims (leading dims are
 # layer-stacking from scan-over-groups and stay unsharded).
 _PARAM_RULES: list[tuple[str, tuple]] = [
-    # deepseek shared experts: a normal TP FFN
-    (r"shared/(wg_t|wu_t|wd_t)$", ("tp", "fsdp")),
+    # deepseek shared experts: a normal TP FFN (fp or int8-quantized leaves)
+    (r"shared/(wg_t|wu_t|wd_t|wg_q|wu_q|wd_q|wg_s|wu_s|wd_s)$",
+     ("tp", "fsdp")),
     # MoE expert stacks (E, f, d): EP on experts
     (r"moe/(wg_t|wu_t|wd_t)$", ("tp", None, "fsdp")),
-    # neuron-major MLP weights (k, d): TP on k (the paper's skip dim)
-    (r"(wg_t|wu_t|wd_t|sign_wg)$", ("tp", "fsdp")),
+    # neuron-major MLP weights (k, d): TP on k (the paper's skip dim);
+    # int8 quant leaves + scales row-shard the same way — every leaf's dim 0
+    # is proportional to k (DESIGN.md §13)
+    (r"(wg_t|wu_t|wd_t|sign_wg|wg_q|wu_q|wd_q|wg_s|wu_s|wd_s)$",
+     ("tp", "fsdp")),
     (r"router$", (None, None)),
     (r"lora_a$", ("fsdp", None)),
     (r"lora_b", (None, "tp")),

@@ -23,8 +23,12 @@ from jax.sharding import PartitionSpec as P
 from repro.sharding import rules as R
 
 # Neuron-major sparse-MLP leaves, all row-sharded over 'model' (the k axis
-# is dim 0 after the layer-stacking dims).
-SPARSE_MLP_KEYS = ("wg_t", "wu_t", "wd_t", "sign_wg")
+# is dim 0 after the layer-stacking dims).  The int8 leaves (DESIGN.md §13)
+# follow the same rule: every quant leaf's dim 0 is proportional to k (int8
+# tiles have k rows, wd scales k/qg rows), so row-sharding ms ways slices
+# each leaf consistently with runtime.distributed's proportional slicer.
+SPARSE_MLP_KEYS = ("wg_t", "wu_t", "wd_t", "sign_wg",
+                   "wg_q", "wg_s", "wu_q", "wu_s", "wd_q", "wd_s")
 
 
 def mesh_shard_count(mesh: Optional[jax.sharding.Mesh] = None) -> int:
@@ -86,6 +90,13 @@ def validate_shardable(sparse, k: int, ms: int) -> None:
         raise ValueError(
             f"d_ff={k} not divisible by tp_shards={ms} × group_size={g} "
             "(DESIGN.md §8)")
+    if getattr(sparse, "weight_dtype", "") == "int8":
+        qg = sparse.quant_group_size
+        if (k // ms) % qg:
+            raise ValueError(
+                f"per-shard rows k/ms={k // ms} not divisible by "
+                f"quant_group_size={qg} — every shard must own whole wd "
+                "quant row-groups (DESIGN.md §13)")
     import dataclasses
     for capg in sparse.capacity_ladder(k):
         # shard_capacity raises with the offending bucket in the message

@@ -781,3 +781,96 @@ class TestControllerPersistence:
         assert srv2._active_cap == srv1._active_cap
         srv2.serve(_reqs(n=2, max_new=3))
         assert srv2.controller.state.steps > srv1.controller.state.steps
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized serving on the 2D mesh (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# qg=32 divides d_model=64, d_ff=256 AND the per-shard rows k/ms=64, so
+# every model shard owns whole wd quant row-groups (validate_shardable)
+CFG_2D_Q = CFG_2D.replace(sparse=dataclasses.replace(
+    CFG_2D.sparse, strategy="pallas", weight_dtype="int8",
+    quant_group_size=32))
+
+
+@pytest.mark.quant
+@needs_mesh8
+class TestMesh2DServerInt8:
+    """The PR 10 mesh acceptance pin: int8 end-to-end serving on real
+    (data x model) placements is bitwise-identical to the single-device
+    int8 emulation — greedy tokens, every controller telemetry leaf, the
+    per-shard riders — and a warmed bucket ladder stays retrace-silent."""
+
+    @pytest.mark.parametrize("strategy", ("gather", "pallas"))
+    def test_int8_serve_bitwise_across_placements(self, strategy):
+        cfg = CFG_2D_Q.replace(sparse=dataclasses.replace(
+            CFG_2D_Q.sparse, strategy=strategy))
+        params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+        ccfg = ControllerConfig(enabled=True, target_density=0.25,
+                                audit_period=3)
+        scfg = ServeConfig(batch=DS, max_len=64, controller=ccfg)
+
+        def reqs():
+            rng = np.random.default_rng(0)
+            return [Request(uid=i, prompt=rng.integers(0, 128, size=6),
+                            max_new=3) for i in range(5)]
+
+        srv_e = Server(lm, cfg, scfg, params)
+        done_e = srv_e.serve(reqs())
+        for shape, axes in PLACEMENTS:
+            srv_m = Server(lm, cfg, scfg, params,
+                           mesh=make_mesh(shape, axes))
+            done_m = srv_m.serve(reqs())
+            for a, b in zip(done_e, done_m):
+                np.testing.assert_array_equal(
+                    a.out, b.out, err_msg=f"int8 {strategy} tokens @ {shape}")
+            for name in ("alphas", "density_ema", "fn_ema", "union_ema",
+                         "predicted_ema"):
+                np.testing.assert_array_equal(
+                    getattr(srv_e.controller.state, name),
+                    getattr(srv_m.controller.state, name),
+                    err_msg=f"int8 {strategy} {name} @ {shape}")
+            np.testing.assert_array_equal(
+                srv_e.controller.shard_density_ema,
+                srv_m.controller.shard_density_ema,
+                err_msg=f"int8 {strategy} shard_density_ema @ {shape}")
+            np.testing.assert_array_equal(
+                srv_e.controller.shard_union_ema,
+                srv_m.controller.shard_union_ema,
+                err_msg=f"int8 {strategy} shard_union_ema @ {shape}")
+
+    def test_int8_bucket_ladder_no_retrace_on_mesh(self):
+        """One executable per capacity bucket for the int8 path too: every
+        bucket traced exactly once at warmup, zero post-warmup retraces
+        across bucket switches on the 2x4 mesh."""
+        from repro.configs.base import MetricsConfig
+        cfg = CFG_2D_Q.replace(sparse=dataclasses.replace(
+            CFG_2D_Q.sparse, capacity_buckets=(0.25, 0.5, 1.0),
+            alpha_base=0.3, alpha_early=0.3))
+        ccfg = ControllerConfig(enabled=True, gain=0.0, fn_gain=0.0,
+                                per_shard_buckets=False)
+        srv = Server(lm, cfg,
+                     ServeConfig(batch=DS, max_len=64, controller=ccfg,
+                                 warm_buckets=True,
+                                 metrics=MetricsConfig(enabled=True)),
+                     lm.init_lm(jax.random.PRNGKey(0), cfg),
+                     mesh=make_mesh((2, MS), ("data", "model")))
+        try:
+            done = srv.serve(_reqs(n=4, max_new=3))
+            assert all(len(r.out) == 3 for r in done)
+            srv.serve(_reqs(n=8, max_new=3))
+            assert srv.metrics.watchdog.retraces_post_warmup == 0
+            assert srv.metrics.counter_value("retrace_post_warmup") == 0
+            assert all(c == 1 for c in srv._trace_counts.values()), \
+                dict(srv._trace_counts)
+        finally:
+            srv.metrics.close()
+
+    def test_int8_rejects_indivisible_quant_groups(self):
+        """validate_shardable fails fast when a shard would split a wd
+        quant row-group: k/ms=64 is not divisible by qg=128."""
+        from repro.sharding import sparse as SSP
+        bad = dataclasses.replace(CFG_2D_Q.sparse, quant_group_size=128)
+        with pytest.raises(ValueError, match="quant_group_size"):
+            SSP.validate_shardable(bad, K, MS)

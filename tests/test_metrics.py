@@ -21,6 +21,11 @@ import jax
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # tier-1 runs with no extra deps
+    from _hypothesis_shim import given, settings, strategies as st
+
 from repro.configs.base import (ControllerConfig, MetricsConfig,
                                 ModelConfig, PagedKVConfig)
 from repro.configs.registry import default_sparse
@@ -159,6 +164,42 @@ class TestHistogram:
         assert snap == {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
                         "p50": 0.0, "p90": 0.0, "p95": 0.0, "p99": 0.0,
                         "exact": True}
+
+
+class TestHistogramProperty:
+    """Property sweep (hypothesis, or the seeded shim on tier-1): for ANY
+    stream long enough to cross ``hist_max_exact`` and fold into buckets,
+    the bucketed-mode percentile is a conservative upper bound on the
+    exact nearest-rank value — and a tight one: it reports exactly the
+    upper bound of the bucket containing the exact value (i.e. the
+    overshoot is less than one bucket width), while values past the last
+    finite bucket land in the +inf bucket, which reports the observed
+    max."""
+
+    BUCKETS = tuple(0.05 * 2 ** i for i in range(9))     # 0.05 .. 12.8
+
+    @given(st.integers(0, 10 ** 6), st.integers(5, 60),
+           st.integers(1, 4), st.floats(0.05, 4.0),
+           st.sampled_from([0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0]))
+    @settings(max_examples=40, deadline=None)
+    def test_bucketed_bounds_exact_nearest_rank(self, seed, n, max_exact,
+                                                scale, q):
+        rng = np.random.default_rng(seed)
+        vals = [float(v) for v in rng.exponential(scale, size=n)]
+        h = Histogram(max_exact=max_exact, buckets=self.BUCKETS)
+        for v in vals:
+            h.observe(v)
+        assert not h.exact and h.count == n       # the stream really folded
+        exact = nearest_rank_pct(vals, q)
+        got = h.percentile(q)
+        assert got >= exact, (got, exact)
+        if exact <= self.BUCKETS[-1]:
+            # ...and equals the covering bucket's ub: within one bucket
+            covering = min(ub for ub in self.BUCKETS if exact <= ub)
+            assert got == covering, (got, exact, covering)
+        else:
+            # +inf bucket: reports the observed max, still >= exact
+            assert got == max(vals), (got, max(vals))
 
 
 # ---------------------------------------------------------------------------
